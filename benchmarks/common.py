@@ -1,0 +1,41 @@
+"""Shared benchmark utilities."""
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def rbf_problem(key, n, d=4, noise=0.05, ell=0.5):
+    kx, ky = jax.random.split(key)
+    X = jax.random.uniform(kx, (n, d))
+    w = jax.random.normal(ky, (d,))
+    y = jnp.sin(3.0 * (X @ w)) + noise * jax.random.normal(jax.random.fold_in(ky, 1), (n,))
+    return X, (y - y.mean()) / y.std()
+
+
+def save_artifact(name, obj):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=2, default=str)
+
+
+def emit(name, seconds, derived=""):
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,86 @@
+"""Paper §4/§5 complexity-claims table: empirical scaling exponents.
+
+Fits log t = a·log n + c over matmul timings and reports â against the
+paper's claimed exponents: exact kernel matmul O(n²) (vs Cholesky O(n³)),
+SGPR/SoR O(n·m), SKI O(n + m log m) ≈ O(n) at fixed m.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import LowRankRootOperator, ToeplitzOperator, InterpolatedOperator
+from repro.gp import SKI, Grid, KernelOperator, RBFKernel
+from .common import emit, rbf_problem, save_artifact, timeit
+
+
+def _fit_exponent(ns, ts):
+    a, _ = np.polyfit(np.log(np.asarray(ns, float)), np.log(np.asarray(ts, float)), 1)
+    return float(a)
+
+
+def run():
+    rows = []
+    kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.0))
+    t_probe = 10
+
+    # exact kernel matmul: O(n²·t)
+    ns, ts = [512, 1024, 2048, 4096], []
+    for n in ns:
+        X, _ = rbf_problem(jax.random.PRNGKey(0), n)
+        M = jnp.ones((n, t_probe))
+        op = KernelOperator(kernel=kern, X=X, mode="dense")
+        f = jax.jit(op.matmul)
+        ts.append(timeit(f, M))
+    a = _fit_exponent(ns, ts)
+    emit("complexity_exact_matmul", ts[-1], f"exponent={a:.2f};claimed=2")
+    rows.append({"op": "exact_matmul", "exponent": a, "claimed": 2.0})
+
+    # cholesky factorization: O(n³)
+    ts_c = []
+    for n in ns:
+        X, _ = rbf_problem(jax.random.PRNGKey(0), n)
+        K = kern(X, X) + 0.1 * jnp.eye(n)
+        ts_c.append(timeit(jax.jit(jnp.linalg.cholesky), K))
+    a = _fit_exponent(ns, ts_c)
+    emit("complexity_cholesky", ts_c[-1], f"exponent={a:.2f};claimed=3")
+    rows.append({"op": "cholesky", "exponent": a, "claimed": 3.0})
+
+    # SGPR root matmul: O(n·m) — linear in n at fixed m
+    ns2, ts2 = [20000, 40000, 80000, 160000], []
+    m = 300
+    for n in ns2:
+        R = jax.random.normal(jax.random.PRNGKey(1), (n, m)) * 0.01
+        M = jnp.ones((n, t_probe))
+        op = LowRankRootOperator(R)
+        ts2.append(timeit(jax.jit(op.matmul), M))
+    a = _fit_exponent(ns2, ts2)
+    emit("complexity_sgpr_matmul", ts2[-1], f"exponent={a:.2f};claimed=1")
+    rows.append({"op": "sgpr_matmul", "exponent": a, "claimed": 1.0})
+
+    # SKI matmul: O(n + m log m) — linear in n at fixed grid
+    ts3 = []
+    gp = SKI(grid_size=10000)
+    for n in ns2:
+        X, _ = rbf_problem(jax.random.PRNGKey(2), n, d=1)
+        geom = gp.prepare(X)
+        op = gp.operator(gp.init_params(X), geom)
+        M = jnp.ones((n, t_probe))
+        ts3.append(timeit(jax.jit(op.matmul), M))
+    a = _fit_exponent(ns2, ts3)
+    emit("complexity_ski_matmul", ts3[-1], f"exponent={a:.2f};claimed=1")
+    rows.append({"op": "ski_matmul", "exponent": a, "claimed": 1.0})
+
+    # Toeplitz FFT matmul: O(m log m)
+    ms, ts4 = [4096, 16384, 65536, 262144], []
+    for m_ in ms:
+        col = jnp.exp(-0.5 * (jnp.arange(m_) * 0.01) ** 2)
+        op = ToeplitzOperator(col)
+        M = jnp.ones((m_, t_probe))
+        ts4.append(timeit(jax.jit(op.matmul), M))
+    a = _fit_exponent(ms, ts4)
+    emit("complexity_toeplitz_matmul", ts4[-1], f"exponent={a:.2f};claimed=~1")
+    rows.append({"op": "toeplitz_matmul", "exponent": a, "claimed": 1.0})
+
+    save_artifact("complexity", rows)
+    return rows

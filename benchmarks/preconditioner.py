@@ -1,0 +1,68 @@
+"""Paper Fig 4: pivoted-Cholesky preconditioning vs CG convergence.
+
+Solve error ‖K̂u − y‖/‖y‖ as a function of CG iterations for rank
+0 / 2 / 5 / 9 preconditioners, RBF and Matérn kernels, plus the
+iterations-to-tolerance table.  Claim: convergence accelerates sharply
+with rank at negligible per-iteration cost.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DenseOperator,
+    PivotedCholeskyPreconditioner,
+    mbcg,
+    pivoted_cholesky_dense,
+)
+from .common import emit, rbf_problem, save_artifact, timeit
+
+
+def _kernel(Z, kind, ell=0.2):
+    d2 = jnp.sum((Z[:, None] - Z[None]) ** 2, -1)
+    if kind == "rbf":
+        return jnp.exp(-0.5 * d2 / ell**2)
+    d = jnp.sqrt(d2 + 1e-12) / ell
+    a = jnp.sqrt(5.0) * d
+    return (1 + a + a * a / 3) * jnp.exp(-a)
+
+
+def run():
+    """Paper Fig 4 uses *deep* RBF/Matérn kernels (features through a deep
+    net → low intrinsic dimension → fast eigenvalue decay, the regime
+    Lemma 1 addresses).  We mirror that with a learned-style 1-D feature
+    projection; a raw 3-D uniform cloud at small ℓ is nearly diagonal and
+    (correctly) shows no preconditioning benefit."""
+    rows = []
+    n, noise = 1500, 0.01
+    for kind in ["rbf", "matern52"]:
+        X, y = rbf_problem(jax.random.PRNGKey(5), n, d=3)
+        w = jax.random.normal(jax.random.PRNGKey(6), (3, 1))
+        Z = jnp.tanh(X @ w)  # deep-kernel-style feature map
+        K = _kernel(Z, kind)
+        A = K + noise * jnp.eye(n)
+        op = DenseOperator(A)
+
+        for rank in [0, 2, 5, 9]:
+            if rank:
+                L = pivoted_cholesky_dense(K, rank)
+                P = PivotedCholeskyPreconditioner.build(L, noise)
+                solve = P.solve
+                t_build = timeit(lambda: pivoted_cholesky_dense(K, rank))
+            else:
+                solve, t_build = None, 0.0
+
+            res = mbcg(op.matmul, y[:, None], precond_solve=solve, max_iters=400, tol=1e-6)
+            iters = int(res.num_iters[0])
+            true_res = float(jnp.linalg.norm(A @ res.solves[:, 0] - y) / jnp.linalg.norm(y))
+            emit(
+                f"fig4_precond_{kind}_rank{rank}",
+                t_build,
+                f"iters_to_1e-6={iters};final_res={true_res:.2e}",
+            )
+            rows.append(
+                {"kernel": kind, "rank": rank, "iters": iters, "residual": true_res,
+                 "precond_build_s": t_build}
+            )
+    save_artifact("fig4_preconditioner", rows)
+    return rows

@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines and writes JSON artifacts to
+benchmarks/artifacts/.  Roofline/dry-run numbers come from
+``repro.launch.dryrun`` (they need 512 fake devices and live in their own
+process); everything here runs on the plain CPU backend.
+"""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated subset: solve_error,speed,mae,preconditioner,complexity",
+    )
+    args = ap.parse_args()
+
+    from . import complexity, mae, preconditioner, solve_error, speed
+
+    suites = {
+        "solve_error": solve_error.run,  # paper Fig 1
+        "preconditioner": preconditioner.run,  # paper Fig 4
+        "complexity": complexity.run,  # paper §4/§5 claims
+        "speed": speed.run,  # paper Fig 2
+        "mae": mae.run,  # paper Fig 3
+    }
+    wanted = args.only.split(",") if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in wanted:
+        print(f"# --- {name} ---", flush=True)
+        suites[name]()
+    print(f"# total {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Fig 1: solve error of mBCG vs Cholesky (single precision).
+
+The paper's claim: f32 CG solves match or beat f32 Cholesky solves in
+accuracy because CG self-corrects while triangular solves accumulate
+rounding on ill-conditioned kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    DenseOperator,
+    PivotedCholeskyPreconditioner,
+    mbcg,
+    pivoted_cholesky_dense,
+)
+from .common import emit, rbf_problem, save_artifact, timeit
+
+
+def run():
+    """mBCG (rank-5 preconditioner, as the paper always runs it) vs f32
+    Cholesky on RBF systems of growing size."""
+    rows = []
+    for n in [500, 1500, 3000]:
+        X, y = rbf_problem(jax.random.PRNGKey(0), n, d=2, ell=0.5)
+        K = jnp.exp(-0.5 * jnp.sum((X[:, None] - X[None]) ** 2, -1) / 0.5**2)
+        A = K + 0.01 * jnp.eye(n)
+
+        u_chol = jax.scipy.linalg.cho_solve((jnp.linalg.cholesky(A), True), y)
+        res_chol = float(jnp.linalg.norm(A @ u_chol - y) / jnp.linalg.norm(y))
+
+        L = pivoted_cholesky_dense(K, 5)
+        P = PivotedCholeskyPreconditioner.build(L, 0.01)
+        res = mbcg(
+            DenseOperator(A).matmul, y[:, None], precond_solve=P.solve,
+            max_iters=200, tol=1e-10,
+        )
+        u_cg = res.solves[:, 0]
+        res_cg = float(jnp.linalg.norm(A @ u_cg - y) / jnp.linalg.norm(y))
+
+        t = timeit(
+            lambda: mbcg(
+                DenseOperator(A).matmul, y[:, None], precond_solve=P.solve,
+                max_iters=200, tol=1e-10,
+            ).solves
+        )
+        emit(
+            f"fig1_solve_error_n{n}", t,
+            f"cg_res={res_cg:.2e};chol_res={res_chol:.2e};cg_iters={int(res.num_iters[0])}",
+        )
+        rows.append(
+            {"n": n, "cg_residual": res_cg, "chol_residual": res_chol,
+             "cg_iters": int(res.num_iters[0])}
+        )
+    save_artifact("fig1_solve_error", rows)
+    return rows

@@ -1,0 +1,81 @@
+"""Paper Fig 2: inference-engine speed, BBMM vs Cholesky.
+
+The paper's GPU numbers (up to 20×/15×/4× for Exact/SKI/SGPR) come from
+hardware parallelism we can't measure on this CPU container; what we CAN
+measure faithfully is the *algorithmic* side of the claim — one MLL
+evaluation (all three inference terms) via one mBCG call vs a Cholesky
+factorization, across n — whose ratio grows like O(n³)/O(p·n²).
+The dry-run roofline (EXPERIMENTS §Roofline) covers the hardware side.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    DenseOperator,
+    inv_quad_logdet,
+)
+from repro.gp import SGPR, SKI
+from .common import emit, rbf_problem, save_artifact, timeit
+
+SET = BBMMSettings(num_probes=10, max_cg_iters=20, precond_rank=5)
+
+
+def _bbmm_mll_terms(K, y, key):
+    op = AddedDiagOperator(DenseOperator(K), 0.01)
+    return inv_quad_logdet(op, y, key, SET)
+
+
+def _chol_mll_terms(K, y):
+    A = K + 0.01 * jnp.eye(K.shape[0])
+    L = jnp.linalg.cholesky(A)
+    alpha = jax.scipy.linalg.cho_solve((L, True), y)
+    return y @ alpha, 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
+
+
+def run():
+    rows = []
+    bbmm_j = jax.jit(_bbmm_mll_terms)
+    chol_j = jax.jit(_chol_mll_terms)
+    key = jax.random.PRNGKey(1)
+
+    # -- Exact GP engine scaling (Fig 2 left) --------------------------------
+    for n in [500, 1000, 2000, 3500]:
+        X, y = rbf_problem(jax.random.PRNGKey(0), n)
+        K = jnp.exp(-0.5 * jnp.sum((X[:, None] - X[None]) ** 2, -1) / 0.25)
+        t_b = timeit(bbmm_j, K, y, key)
+        t_c = timeit(chol_j, K, y)
+        emit(f"fig2_exact_bbmm_n{n}", t_b, f"chol={t_c*1e6:.0f}us;speedup={t_c/t_b:.2f}x")
+        rows.append({"model": "exact", "n": n, "bbmm_s": t_b, "chol_s": t_c})
+
+    # -- SGPR engine (Fig 2 middle): BBMM low-rank matmul vs m³ Cholesky ----
+    for n in [5000, 20000, 50000]:
+        X, y = rbf_problem(jax.random.PRNGKey(2), n)
+        gp = SGPR(num_inducing=300)
+        params = gp.init_params(X)
+
+        def sgpr_mll(params, k):
+            return gp.loss(params, X, y, k)
+
+        t = timeit(jax.jit(sgpr_mll), params, key)
+        emit(f"fig2_sgpr_bbmm_n{n}", t, "m=300")
+        rows.append({"model": "sgpr", "n": n, "bbmm_s": t})
+
+    # -- SKI engine (Fig 2 right): O(n + m log m) matmuls ---------------------
+    for n in [10000, 100000, 500000]:
+        X, y = rbf_problem(jax.random.PRNGKey(3), n, d=1)
+        gp = SKI(grid_size=10000, settings=SET)
+        geom = gp.prepare(X)
+        params = gp.init_params(X)
+
+        def ski_mll(params, k):
+            return gp.loss(params, geom, y, k)
+
+        t = timeit(jax.jit(ski_mll), params, key)
+        emit(f"fig2_ski_bbmm_n{n}", t, "m=10000")
+        rows.append({"model": "ski", "n": n, "bbmm_s": t})
+
+    save_artifact("fig2_speed", rows)
+    return rows

@@ -1,0 +1,40 @@
+"""Quickstart: exact GP regression through the BBMM engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains hyperparameters by Adam on the mBCG marginal log likelihood
+(Eq. 2 of the paper, all three terms from ONE engine call per step),
+then prints test MAE and calibration.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BBMMSettings
+from repro.data.pipeline import RegressionStream
+from repro.gp import ExactGP
+
+
+def main():
+    (Xtr, ytr), (Xte, yte) = RegressionStream(800, 2, seed=0, kind="smooth").split()
+
+    gp = ExactGP(
+        kernel_type="matern52",
+        settings=BBMMSettings(num_probes=10, max_cg_iters=25, precond_rank=5),
+    )
+    params, history = gp.fit(Xtr, ytr, steps=80, lr=0.1, verbose=True)
+
+    mean, var = gp.predict(params, Xtr, ytr, Xte)
+    mae = float(jnp.mean(jnp.abs(mean - yte)))
+    std = jnp.sqrt(var)
+    coverage = float(jnp.mean(jnp.abs(mean - yte) < 2 * std))
+    print(f"\ntest MAE          : {mae:.4f}")
+    print(f"2σ coverage       : {coverage:.2%} (want ≈95%)")
+    print(f"-MLL: {history[0]:.1f} → {history[-1]:.1f}")
+    # parity bar: a dense-Cholesky-trained GP reaches MAE ≈ 0.32 on this
+    # dataset (see benchmarks/mae.py) — BBMM must match it
+    assert mae < 0.35, "quickstart regression: BBMM fell behind the Cholesky engine"
+
+
+if __name__ == "__main__":
+    main()

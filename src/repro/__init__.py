@@ -1,0 +1,9 @@
+"""repro — BBMM (Blackbox Matrix-Matrix) Gaussian-process inference in JAX.
+
+A TPU-native reproduction and extension of
+"GPyTorch: Blackbox Matrix-Matrix Gaussian Process Inference with GPU
+Acceleration" (Gardner et al., NeurIPS 2018), embedded in a multi-pod
+training/serving framework with an LM architecture zoo.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .base import ModelConfig, ShapeConfig, SHAPES, register, get_config, list_configs, runnable_shapes
+from .archs import ALL_ARCHS

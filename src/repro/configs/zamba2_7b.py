@@ -1,0 +1,20 @@
+"""Assigned architecture: zamba2-7b (see DESIGN.md §5)."""
+
+from .base import ModelConfig, register
+
+# — [hybrid] Mamba2 + shared attention blocks --------------------------------
+ZAMBA2_7B = register(ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    shared_attn_period=6,
+    subquadratic=True,
+))

@@ -1,0 +1,39 @@
+"""BBMM core: the paper's primary contribution.
+
+mBCG (batched CG + free Lanczos tridiagonals), pivoted-Cholesky
+preconditioning, stochastic Lanczos quadrature log-dets, and the
+custom-VJP inference engine that turns any blackbox kernel matmul into a
+differentiable GP marginal log likelihood.
+"""
+
+from .linear_operator import (
+    LinearOperator,
+    DenseOperator,
+    DiagOperator,
+    ScaledOperator,
+    SumOperator,
+    AddedDiagOperator,
+    LowRankRootOperator,
+    ToeplitzOperator,
+    KroneckerOperator,
+    InterpolatedOperator,
+    CallableOperator,
+)
+from .mbcg import mbcg, tridiag_matrices, MBCGResult
+from .pivoted_cholesky import pivoted_cholesky, pivoted_cholesky_dense
+from .preconditioner import (
+    PivotedCholeskyPreconditioner,
+    IdentityPreconditioner,
+    build_preconditioner,
+)
+from .slq import slq_quadrature, logdet_from_mbcg
+from .distributed import ShardedKernelOperator
+from .inference import (
+    BBMMSettings,
+    InferenceState,
+    inv_quad_logdet,
+    engine_state,
+    marginal_log_likelihood,
+    solve,
+)
+from .variational import gaussian_kl, root_logdet

@@ -1,0 +1,137 @@
+"""Distributed BBMM: row-block sharded kernel matmuls (beyond the paper).
+
+The paper fills one GPU with a single big GEMM; here the same blackbox is
+spread across a TPU pod.  Layout:
+
+  * X (n, d): replicated (d is small; n·d ≪ HBM even at n = 2M)
+  * M (n, t): row-sharded over the data axes
+  * each chip owns rows [i₀:i₁) of K̂ and computes K(X_loc, ·) against
+    column *chunks* of X so the live kernel tile is (n_loc × chunk) — the
+    multi-chip analogue of the VMEM tiling in the Pallas kernel.
+
+Collectives per matmul: ONE all-gather of M (n·t bytes) — O(n) communication
+against O(n²/devices) compute, so arithmetic intensity grows linearly in n.
+CG's inner products reduce over the row axis and become psums automatically
+under pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .linear_operator import LinearOperator, _register, static_field
+
+
+def _local_block_matmul(kernel, X_local, X_full, M_full, chunk: int):
+    """Σ_c K(X_local, X_full[c]) @ M_full[c] without materializing the row
+    panel — scan over column chunks.  The body is rematerialized: kernel
+    tiles are *recomputed* in the backward pass instead of saved (saving
+    them would store O(n²/devices) — the exact thing BBMM avoids).
+
+    The contraction runs at the inputs' dtype (bf16 tiles → full MXU rate)
+    but always accumulates in f32."""
+    n = X_full.shape[0]
+    pad = (-n) % chunk
+    Xp = jnp.pad(X_full, ((0, pad), (0, 0)))
+    Mp = jnp.pad(M_full, ((0, pad), (0, 0)))
+    Xc = Xp.reshape(-1, chunk, X_full.shape[1])
+    Mc = Mp.reshape(-1, chunk, M_full.shape[1])
+    tile_dtype = M_full.dtype
+
+    @jax.checkpoint
+    def body(acc, xm):
+        Xb, Mb = xm
+        tile = kernel(X_local, Xb).astype(tile_dtype)
+        part = jax.lax.dot_general(
+            tile, Mb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc + part, None
+
+    init = jnp.zeros((X_local.shape[0], M_full.shape[1]), jnp.float32)
+    out, _ = jax.lax.scan(body, init, (Xc, Mc))
+    return out
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class ShardedKernelOperator(LinearOperator):
+    """Row-block sharded exact-GP kernel operator (shard_map based).
+
+    Use inside a ``jax.set_mesh`` scope. ``data_axes`` names the mesh axes
+    that shard the n rows of M / K̂ (typically ("pod", "data") or their
+    product with "model" — see the §Perf hillclimb).
+    """
+
+    kernel: object
+    X: jax.Array  # (n, d) — replicated
+    data_axes: tuple = static_field(default=("data",))
+    chunk: int = static_field(default=8192)
+    compute_dtype: str = static_field(default="float32")  # bf16 tiles → 2× MXU rate
+
+    @property
+    def shape(self):
+        n = self.X.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        mesh = jax.sharding.get_abstract_mesh()
+        axes = self.data_axes
+        chunk = self.chunk
+        # kernel hyperparameters enter as explicit (replicated) shard_map
+        # operands — closure capture of traced values breaks vjp tracing
+        kern_leaves, kern_def = jax.tree_util.tree_flatten(self.kernel)
+
+        compute_dtype = jnp.bfloat16 if self.compute_dtype == "bfloat16" else jnp.float32
+
+        def body(kern_leaves, X_full, M_loc):
+            kernel = jax.tree_util.tree_unflatten(kern_def, kern_leaves)
+            if compute_dtype == jnp.bfloat16:
+                # half-width tiles AND a half-width gather payload
+                M_loc = M_loc.astype(jnp.bfloat16)
+                X_full = X_full.astype(jnp.bfloat16)
+            M_full = jax.lax.all_gather(M_loc, axes, axis=0, tiled=True)
+            # rows owned by this shard
+            shards = 1
+            for a in axes:
+                shards *= jax.lax.axis_size(a)
+            idx = jax.lax.axis_index(axes)
+            n_loc = X_full.shape[0] // shards
+            X_loc = jax.lax.dynamic_slice_in_dim(X_full, idx * n_loc, n_loc, axis=0)
+            out = _local_block_matmul(kernel, X_loc, X_full, M_full, chunk)
+            return out.astype(jnp.float32)
+
+        out = jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(tuple(P() for _ in kern_leaves), P(None, None), P(axes, None)),
+            out_specs=P(axes, None),
+            check_vma=False,
+        )(tuple(kern_leaves), self.X, M)
+        return out[:, 0] if squeeze else out
+
+    def row(self, i):
+        return self.kernel(self.X[i][None, :], self.X)[0]
+
+    def diagonal(self):
+        return self.kernel.diag(self.X)
+
+
+def replicated(x):
+    """Convenience NamedSharding-free replication constraint."""
+    return jax.lax.with_sharding_constraint(x, P())
+
+
+def row_sharded(x, axes=("data",)):
+    return jax.lax.with_sharding_constraint(x, P(axes, *([None] * (x.ndim - 1))))

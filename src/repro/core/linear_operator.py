@@ -1,0 +1,509 @@
+"""LinearOperator: the blackbox matrix abstraction at the heart of BBMM.
+
+Every GP model in the paper (§5) reduces to "a routine for matrix-matrix
+multiplication with the kernel matrix".  A :class:`LinearOperator` packages
+that routine together with the handful of cheap auxiliary accessors the
+inference engine needs:
+
+  * ``matmul(M)``   — the blackbox ``K @ M``       (drives mBCG)
+  * ``diagonal()``  — ``diag(K)``                  (drives pivoted Cholesky)
+  * ``row(i)``      — ``K[i, :]``                  (drives pivoted Cholesky)
+
+All operators are registered JAX pytrees, so they flow through ``jit`` /
+``grad`` / ``scan`` and their *array leaves are differentiable* — the
+derivative matmul ``(dK/dθ) @ M`` the paper asks the user for is obtained
+for free from ``jax.vjp`` of ``matmul``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _register(cls):
+    """Register a dataclass operator as a pytree (fields with metadata
+    ``static=True`` become aux data)."""
+    fields = dataclasses.fields(cls)
+    dyn = [f.name for f in fields if not f.metadata.get("static", False)]
+    sta = [f.name for f in fields if f.metadata.get("static", False)]
+
+    def flatten(op):
+        return tuple(getattr(op, n) for n in dyn), tuple(getattr(op, n) for n in sta)
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(dyn, children))
+        kwargs.update(dict(zip(sta, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+def static_field(**kw):
+    return dataclasses.field(metadata={"static": True}, **kw)
+
+
+class LinearOperator:
+    """Abstract symmetric (PSD in GP usage) linear operator of shape (n, n)."""
+
+    # -- required ---------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, int]:
+        raise NotImplementedError
+
+    def matmul(self, M: jax.Array) -> jax.Array:
+        """K @ M for M of shape (n, t) (or (n,) vector)."""
+        raise NotImplementedError
+
+    # -- optional (defaults via matmul; O(n) columns = slow, override) ----
+    def diagonal(self) -> jax.Array:
+        n = self.shape[0]
+        return jax.vmap(lambda i: self.row(i)[i])(jnp.arange(n))
+
+    def row(self, i) -> jax.Array:
+        n = self.shape[0]
+        e = jnp.zeros((n,), self.dtype).at[i].set(1.0)
+        return self.matmul(e[:, None])[:, 0]
+
+    def to_dense(self) -> jax.Array:
+        return self.matmul(jnp.eye(self.shape[0], dtype=self.dtype))
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    # -- algebra ----------------------------------------------------------
+    def __add__(self, other):
+        if isinstance(other, LinearOperator):
+            return SumOperator((self, other))
+        raise TypeError(other)
+
+    def __mul__(self, scalar):
+        return ScaledOperator(self, jnp.asarray(scalar, self.dtype))
+
+    __rmul__ = __mul__
+
+    def add_diagonal(self, sigma2) -> "AddedDiagOperator":
+        return AddedDiagOperator(self, jnp.asarray(sigma2, self.dtype))
+
+    def __call__(self, M):
+        return self.matmul(M)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class DenseOperator(LinearOperator):
+    """Explicit symmetric matrix."""
+
+    matrix: jax.Array
+
+    @property
+    def shape(self):
+        return self.matrix.shape
+
+    @property
+    def dtype(self):
+        return self.matrix.dtype
+
+    def matmul(self, M):
+        return self.matrix @ M
+
+    def diagonal(self):
+        return jnp.diagonal(self.matrix)
+
+    def row(self, i):
+        return self.matrix[i]
+
+    def to_dense(self):
+        return self.matrix
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class DiagOperator(LinearOperator):
+    diag: jax.Array
+
+    @property
+    def shape(self):
+        n = self.diag.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.diag.dtype
+
+    def matmul(self, M):
+        if M.ndim == 1:
+            return self.diag * M
+        return self.diag[:, None] * M
+
+    def diagonal(self):
+        return self.diag
+
+    def row(self, i):
+        return jnp.zeros_like(self.diag).at[i].set(self.diag[i])
+
+    def to_dense(self):
+        return jnp.diag(self.diag)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class ScaledOperator(LinearOperator):
+    base: LinearOperator
+    scale: jax.Array
+
+    @property
+    def shape(self):
+        return self.base.shape
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+    def matmul(self, M):
+        return self.scale * self.base.matmul(M)
+
+    def diagonal(self):
+        return self.scale * self.base.diagonal()
+
+    def row(self, i):
+        return self.scale * self.base.row(i)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class SumOperator(LinearOperator):
+    """K1 + K2 + ... — compositional kernels (paper §5 'Compositions')."""
+
+    ops: tuple
+
+    @property
+    def shape(self):
+        return self.ops[0].shape
+
+    @property
+    def dtype(self):
+        return self.ops[0].dtype
+
+    def matmul(self, M):
+        out = self.ops[0].matmul(M)
+        for op in self.ops[1:]:
+            out = out + op.matmul(M)
+        return out
+
+    def diagonal(self):
+        out = self.ops[0].diagonal()
+        for op in self.ops[1:]:
+            out = out + op.diagonal()
+        return out
+
+    def row(self, i):
+        out = self.ops[0].row(i)
+        for op in self.ops[1:]:
+            out = out + op.row(i)
+        return out
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class AddedDiagOperator(LinearOperator):
+    """K̂ = K + σ²·I — the paper's hatted matrix.
+
+    Kept as its own node (rather than SumOperator) because the inference
+    engine builds the pivoted-Cholesky preconditioner from ``base`` and the
+    noise separately (P̂ = L_k L_kᵀ + σ²I).
+    """
+
+    base: LinearOperator
+    sigma2: jax.Array
+
+    @property
+    def shape(self):
+        return self.base.shape
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+    def matmul(self, M):
+        return self.base.matmul(M) + self.sigma2 * M
+
+    def diagonal(self):
+        return self.base.diagonal() + self.sigma2
+
+    def row(self, i):
+        r = self.base.row(i)
+        return r.at[i].add(self.sigma2)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class LowRankRootOperator(LinearOperator):
+    """R @ Rᵀ for a tall-skinny root R (n × m).
+
+    This is the SoR/SGPR building block: K ≈ (K_XU L⁻ᵀ)(K_XU L⁻ᵀ)ᵀ with
+    L = chol(K_UU) — an O(tnm) matmul (paper §5, SGPR).
+    """
+
+    root: jax.Array  # (n, m)
+
+    @property
+    def shape(self):
+        n = self.root.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.root.dtype
+
+    def matmul(self, M):
+        return self.root @ (self.root.T @ M)
+
+    def diagonal(self):
+        return jnp.sum(self.root * self.root, axis=-1)
+
+    def row(self, i):
+        return self.root @ self.root[i]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class ToeplitzOperator(LinearOperator):
+    """Symmetric Toeplitz matrix defined by its first column (m,).
+
+    Matmul via circulant embedding + FFT: O(t·m log m) — the SKI/KISS-GP
+    K_UU on a regular grid (paper §5).
+    """
+
+    column: jax.Array  # (m,)
+
+    @property
+    def shape(self):
+        m = self.column.shape[0]
+        return (m, m)
+
+    @property
+    def dtype(self):
+        return self.column.dtype
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        m = self.column.shape[0]
+        # circulant embedding of size 2m: [c0 c1 .. c_{m-1} * c_{m-1} .. c1]
+        c = jnp.concatenate(
+            [self.column, jnp.zeros((1,), self.column.dtype), self.column[1:][::-1]]
+        )
+        fc = jnp.fft.rfft(c)
+        fM = jnp.fft.rfft(M.astype(jnp.float32), n=2 * m, axis=0)
+        out = jnp.fft.irfft(fc[:, None] * fM, n=2 * m, axis=0)[:m]
+        out = out.astype(M.dtype)
+        return out[:, 0] if squeeze else out
+
+    def diagonal(self):
+        return jnp.full((self.column.shape[0],), self.column[0], self.column.dtype)
+
+    def row(self, i):
+        m = self.column.shape[0]
+        idx = jnp.abs(jnp.arange(m) - i)
+        return self.column[idx]
+
+    def to_dense(self):
+        m = self.column.shape[0]
+        idx = jnp.abs(jnp.arange(m)[:, None] - jnp.arange(m)[None, :])
+        return self.column[idx]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class InterpolatedOperator(LinearOperator):
+    """W K_base Wᵀ with sparse interpolation W (n × m, q nonzeros per row).
+
+    W is stored as (indices, values) of shape (n, q).  This is SKI:
+    ``matmul`` costs O(t·n·q) for the interpolations plus one base matmul —
+    with a Toeplitz base that is the paper's O(t·n + t·m log m).
+    """
+
+    indices: jax.Array  # (n, q) int32, column index of each nonzero
+    values: jax.Array  # (n, q) float
+    base: LinearOperator  # (m, m)
+
+    @property
+    def shape(self):
+        n = self.indices.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    def _Wt_matmul(self, M):
+        """Wᵀ @ M : (m, t) — scatter-add of weighted rows."""
+        m = self.base.shape[0]
+        if M.ndim == 1:
+            M = M[:, None]
+        # contributions: values[n, q] * M[n, t] scattered to rows indices[n, q]
+        contrib = self.values[..., None] * M[:, None, :]  # (n, q, t)
+        flat_idx = self.indices.reshape(-1)  # (n*q,)
+        flat_con = contrib.reshape(-1, M.shape[-1])  # (n*q, t)
+        return jax.ops.segment_sum(flat_con, flat_idx, num_segments=m)
+
+    def _W_matmul(self, V):
+        """W @ V : (n, t) — gather of weighted rows."""
+        if V.ndim == 1:
+            V = V[:, None]
+        gathered = V[self.indices]  # (n, q, t)
+        return jnp.sum(self.values[..., None] * gathered, axis=1)
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        out = self._W_matmul(self.base.matmul(self._Wt_matmul(M)))
+        return out[:, 0] if squeeze else out
+
+    def row(self, i):
+        # (W K Wᵀ)[i, :] = W @ (K @ w_i)
+        m = self.base.shape[0]
+        w_i = jnp.zeros((m,), self.dtype).at[self.indices[i]].add(self.values[i])
+        return self._W_matmul(self.base.matmul(w_i[:, None]))[:, 0]
+
+    def diagonal(self):
+        # diag_i = w_i K w_iᵀ over the q×q sub-block of K
+        sub = jax.vmap(
+            lambda idx: jax.vmap(lambda a: jax.vmap(lambda b: self._base_entry(a, b))(idx))(idx)
+        )(self.indices)  # (n, q, q)
+        return jnp.einsum("nq,nqr,nr->n", self.values, sub, self.values)
+
+    def _base_entry(self, a, b):
+        return self.base.row(a)[b]
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class KroneckerOperator(LinearOperator):
+    """K₁ ⊗ K₂ ⊗ … — multi-dimensional SKI grids (paper §5 / KISS-GP).
+
+    matmul applies each factor along its own grid axis:
+    O(t·m·Σmᵢ) instead of O(t·m²) for m = Πmᵢ.
+    """
+
+    factors: tuple  # of LinearOperators
+
+    @property
+    def shape(self):
+        m = 1
+        for f in self.factors:
+            m *= f.shape[0]
+        return (m, m)
+
+    @property
+    def dtype(self):
+        return self.factors[0].dtype
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        t = M.shape[-1]
+        dims = [f.shape[0] for f in self.factors]
+        out = M.reshape(*dims, t)
+        # contract factor i along axis i
+        for i, f in enumerate(self.factors):
+            moved = jnp.moveaxis(out, i, 0)  # (m_i, ..., t)
+            rest = moved.shape[1:]
+            flat = moved.reshape(dims[i], -1)
+            flat = f.matmul(flat)
+            out = jnp.moveaxis(flat.reshape(dims[i], *rest), 0, i)
+        out = out.reshape(-1, t)
+        return out[:, 0] if squeeze else out
+
+    def diagonal(self):
+        d = self.factors[0].diagonal()
+        for f in self.factors[1:]:
+            d = jnp.outer(d, f.diagonal()).reshape(-1)
+        return d
+
+    def row(self, i):
+        dims = [f.shape[0] for f in self.factors]
+        rem = i
+        # decompose i into per-factor indices (row-major)
+        idxs = []
+        for m in reversed(dims):
+            idxs.append(rem % m)
+            rem = rem // m
+        idxs = idxs[::-1]
+        r = self.factors[0].row(idxs[0])
+        for f, j in zip(self.factors[1:], idxs[1:]):
+            r = jnp.outer(r, f.row(j)).reshape(-1)
+        return r
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class BatchDenseOperator(LinearOperator):
+    """Stack of b independent dense operators (block-diagonal view) — used
+    for multi-task / batched GPs. Shape reported is a single block; matmul
+    takes (b, n, t)."""
+
+    matrices: jax.Array  # (b, n, n)
+
+    @property
+    def shape(self):
+        return self.matrices.shape[-2:]
+
+    @property
+    def batch(self):
+        return self.matrices.shape[0]
+
+    @property
+    def dtype(self):
+        return self.matrices.dtype
+
+    def matmul(self, M):
+        return jnp.einsum("bij,bjt->bit", self.matrices, M)
+
+    def diagonal(self):
+        return jax.vmap(jnp.diagonal)(self.matrices)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CallableOperator(LinearOperator):
+    """Fully blackbox operator: user supplies the matmul closure plus the
+    cheap accessors.  ``params`` is an arbitrary differentiable pytree passed
+    to every callback — gradients flow through it."""
+
+    params: Any
+    matmul_fn: Callable = static_field()
+    row_fn: Callable | None = static_field(default=None)
+    diag_fn: Callable | None = static_field(default=None)
+    n: int = static_field(default=0)
+    _dtype: Any = static_field(default=jnp.float32)
+
+    @property
+    def shape(self):
+        return (self.n, self.n)
+
+    @property
+    def dtype(self):
+        return self._dtype
+
+    def matmul(self, M):
+        return self.matmul_fn(self.params, M)
+
+    def row(self, i):
+        if self.row_fn is None:
+            return super().row(i)
+        return self.row_fn(self.params, i)
+
+    def diagonal(self):
+        if self.diag_fn is None:
+            return super().diagonal()
+        return self.diag_fn(self.params)

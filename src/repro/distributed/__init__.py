@@ -1,0 +1,10 @@
+from .sharding import (
+    p_batch,
+    batch_axes,
+    mesh_axes,
+    param_spec,
+    params_shardings,
+    named_shardings,
+    shard_activations,
+    shard_cache_kv,
+)

@@ -1,0 +1,8 @@
+"""GP model zoo on top of the BBMM engine (paper §5)."""
+
+from .kernels import RBFKernel, MaternKernel, DeepKernel, KernelOperator, sq_dist
+from .exact import ExactGP
+from .sgpr import SGPR
+from .ski import SKI, Grid
+from .blr import BayesianLinearRegression
+from .dkl import DKLExactGP, mlp_init, mlp_apply

@@ -1,0 +1,107 @@
+"""Deep kernel learning head (paper's SKI+DKL experiments, Wilson 2016).
+
+``DKLExactGP`` puts an RBF/Matérn GP on top of a learned feature map; the
+feature map can be a small MLP (built here) or *any* backbone from the
+repro.models zoo (wrap its pooled hidden state — see
+examples/deep_kernel_lm.py).  Gradients flow into network weights through
+BBMM's custom VJP: the network is just another kernel hyperparameter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import AddedDiagOperator, BBMMSettings, marginal_log_likelihood, solve as bbmm_solve
+from repro.optim import adam
+from .exact import KERNELS, _softplus, _inv_softplus
+from .kernels import DeepKernel, KernelOperator
+
+
+def mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (a, b)) * jnp.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_apply(params, X):
+    h = X
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.tanh(h)
+    return h
+
+
+@dataclasses.dataclass
+class DKLExactGP:
+    hidden: tuple = (32, 32, 2)  # paper maps into a low-dim space for SKI
+    kernel_type: str = "rbf"
+    feature_fn: callable = None  # override to plug an LM backbone
+    settings: BBMMSettings = dataclasses.field(default_factory=BBMMSettings)
+
+    def init_params(self, d, key=None):
+        key = jax.random.PRNGKey(7) if key is None else key
+        feat_d = self.hidden[-1] if self.feature_fn is None else d
+        return {
+            "net": mlp_init(key, (d,) + self.hidden) if self.feature_fn is None else {},
+            "raw_lengthscale": jnp.zeros(()) + _inv_softplus(jnp.float32(0.5)),
+            "raw_outputscale": _inv_softplus(jnp.float32(1.0)),
+            "raw_noise": _inv_softplus(jnp.float32(0.1)),
+        }
+
+    def _features(self):
+        return self.feature_fn if self.feature_fn is not None else mlp_apply
+
+    def kernel(self, params):
+        base = KERNELS[self.kernel_type](
+            lengthscale=_softplus(params["raw_lengthscale"]),
+            outputscale=_softplus(params["raw_outputscale"]),
+        )
+        return DeepKernel(base=base, net_params=params["net"], feature_fn=self._features())
+
+    def operator(self, params, X):
+        return AddedDiagOperator(
+            KernelOperator(kernel=self.kernel(params), X=X, mode="dense"),
+            _softplus(params["raw_noise"]),
+        )
+
+    def loss(self, params, X, y, key):
+        return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
+
+    def fit(self, X, y, *, steps=150, lr=0.01, key=None, verbose=False):
+        key = jax.random.PRNGKey(8) if key is None else key
+        params = self.init_params(X.shape[1])
+        init, update = adam(lr)
+        opt = init(params)
+
+        @jax.jit
+        def step(params, opt, k):
+            loss, g = jax.value_and_grad(self.loss)(params, X, y, k)
+            params, opt = update(g, opt, params)
+            return params, opt, loss
+
+        history = []
+        for i in range(steps):
+            key, sub = jax.random.split(key)
+            params, opt, loss = step(params, opt, sub)
+            history.append(float(loss))
+            if verbose and i % 20 == 0:
+                print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
+        return params, history
+
+    def predict(self, params, X, y, Xstar):
+        op = self.operator(params, X)
+        kern = self.kernel(params)
+        Kxs = kern(X, Xstar)
+        B = jnp.concatenate([y[:, None], Kxs], axis=1)
+        solves = bbmm_solve(op, B, self.settings)
+        mean = Kxs.T @ solves[:, 0]
+        var = kern.diag(Xstar) - jnp.sum(Kxs * solves[:, 1:], axis=0)
+        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])

@@ -1,0 +1,178 @@
+"""Stationary kernels (RBF, Matérn family) + the KernelOperator.
+
+The KernelOperator is the "exact GP" blackbox matmul (paper §4): it exposes
+``(K_XX)·M`` without committing to a materialization strategy:
+
+  * ``dense``   — materialize K once (small n; what the GPU paper does)
+  * ``blocked`` — row-block streaming: each block of K is formed, used and
+                  discarded (O(b·n) live memory) — the XLA analogue of the
+                  fused Pallas kernel, and the form that row-shards across a
+                  mesh (see ``repro/core/distributed.py``)
+  * ``pallas``  — the fused VMEM-tiled TPU kernel (repro/kernels/kernel_matmul)
+
+All three are numerically interchangeable; tests assert it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear_operator import (
+    LinearOperator,
+    _register,
+    static_field,
+)
+
+
+def sq_dist(X1: jax.Array, X2: jax.Array) -> jax.Array:
+    """Pairwise squared euclidean distances, numerically clipped at 0."""
+    n1 = jnp.sum(X1 * X1, axis=-1)
+    n2 = jnp.sum(X2 * X2, axis=-1)
+    d2 = n1[:, None] + n2[None, :] - 2.0 * (X1 @ X2.T)
+    return jnp.clip(d2, 0.0)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class RBFKernel:
+    """k(x, x') = s · exp(−‖x−x'‖² / 2ℓ²)  (ARD when ℓ is a vector)."""
+
+    lengthscale: jax.Array
+    outputscale: jax.Array
+
+    def __call__(self, X1, X2):
+        d2 = sq_dist(X1 / self.lengthscale, X2 / self.lengthscale)
+        return self.outputscale * jnp.exp(-0.5 * d2)
+
+    def diag(self, X):
+        return jnp.full((X.shape[0],), 1.0, X.dtype) * self.outputscale
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class MaternKernel:
+    """Matérn-ν for ν ∈ {0.5, 1.5, 2.5} (paper experiments use 5/2)."""
+
+    lengthscale: jax.Array
+    outputscale: jax.Array
+    nu: float = static_field(default=2.5)
+
+    def __call__(self, X1, X2):
+        d = jnp.sqrt(sq_dist(X1 / self.lengthscale, X2 / self.lengthscale) + 1e-20)
+        if self.nu == 0.5:
+            k = jnp.exp(-d)
+        elif self.nu == 1.5:
+            a = jnp.sqrt(3.0) * d
+            k = (1.0 + a) * jnp.exp(-a)
+        elif self.nu == 2.5:
+            a = jnp.sqrt(5.0) * d
+            k = (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+        else:  # pragma: no cover
+            raise ValueError(f"unsupported nu={self.nu}")
+        return self.outputscale * k
+
+    def diag(self, X):
+        return jnp.full((X.shape[0],), 1.0, X.dtype) * self.outputscale
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class DeepKernel:
+    """k(g(x), g(x')) — deep kernel learning (paper §6 SKI+DKL experiments).
+
+    ``feature_fn(params, X)`` is any JAX feature extractor (an MLP, or a
+    full LM backbone via repro.gp.dkl); gradients flow into its params
+    through the BBMM custom VJP like any other hyperparameter.
+    """
+
+    base: RBFKernel | MaternKernel
+    net_params: any
+    feature_fn: callable = static_field(default=None)
+
+    def __call__(self, X1, X2):
+        Z1 = self.feature_fn(self.net_params, X1)
+        Z2 = self.feature_fn(self.net_params, X2)
+        return self.base(Z1, Z2)
+
+    def diag(self, X):
+        return self.base.diag(X)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class KernelOperator(LinearOperator):
+    """Exact-GP kernel matrix K(X, X) as a lazy blackbox matmul."""
+
+    kernel: object
+    X: jax.Array  # (n, d)
+    mode: str = static_field(default="dense")  # dense | blocked | pallas
+    block_size: int = static_field(default=512)
+    shard_rows: bool = static_field(default=False)  # annotate row sharding
+
+    @property
+    def shape(self):
+        n = self.X.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        if self.mode == "dense":
+            out = self.kernel(self.X, self.X) @ M
+        elif self.mode == "blocked":
+            out = self._blocked_matmul(M)
+        elif self.mode == "pallas":
+            from repro.kernels.kernel_matmul.ops import kernel_matmul
+
+            out = kernel_matmul(self.kernel, self.X, M)
+        else:  # pragma: no cover
+            raise ValueError(self.mode)
+        if self.shard_rows:
+            from jax.sharding import PartitionSpec as P
+
+            out = jax.lax.with_sharding_constraint(out, P(("pod", "data"), None))
+        return out[:, 0] if squeeze else out
+
+    def _blocked_matmul(self, M):
+        n = self.X.shape[0]
+        b = min(self.block_size, n)
+        pad = (-n) % b
+        Xp = jnp.pad(self.X, ((0, pad), (0, 0)))
+        blocks = Xp.reshape(-1, b, self.X.shape[1])
+
+        def one_block(Xb):
+            return self.kernel(Xb, self.X) @ M  # (b, t)
+
+        out = jax.lax.map(one_block, blocks).reshape(-1, M.shape[1])
+        return out[:n]
+
+    def row(self, i):
+        return self.kernel(self.X[i][None, :], self.X)[0]
+
+    def diagonal(self):
+        return self.kernel.diag(self.X)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class CrossKernelOperator:
+    """k(X*, X) rectangular block for predictions (not square — helper)."""
+
+    kernel: object
+    X1: jax.Array
+    X2: jax.Array
+
+    def matmul(self, M):
+        return self.kernel(self.X1, self.X2) @ M
+
+    def rmatmul(self, M):
+        return self.kernel(self.X2, self.X1) @ M

@@ -1,0 +1,116 @@
+"""SGPR / SoR sparse GP through BBMM (paper §5).
+
+Kernel approximation: K̂ ≈ K_XU K_UU⁻¹ K_UX + σ²I.  As a blackbox matmul
+this is just a LowRankRootOperator with root R = K_XU · chol(K_UU)⁻ᵀ:
+R(RᵀM) costs O(t·n·m + t·m²) — asymptotically faster than the
+O(n·m² + m³) Cholesky-engine path the paper compares against.
+
+The inducing locations U are ordinary differentiable parameters: BBMM's
+custom VJP carries MLL gradients into them with no extra derivation
+(<50 lines, as the paper advertises).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    LowRankRootOperator,
+    marginal_log_likelihood,
+    solve as bbmm_solve,
+)
+from repro.optim import adam
+from .exact import KERNELS, _softplus, _inv_softplus
+
+
+@dataclasses.dataclass
+class SGPR:
+    num_inducing: int = 300
+    kernel_type: str = "rbf"
+    jitter: float = 1e-4
+    min_noise: float = 1e-3  # likelihood-noise floor: as σ²→0 the SoR system
+    # becomes singular and truncated-CG's biased inv-quad/log-det estimates
+    # reward noise collapse (GPyTorch's GreaterThan constraint, same reason)
+    settings: BBMMSettings = dataclasses.field(
+        default_factory=lambda: BBMMSettings(precond_rank=1, max_cg_iters=40)
+    )  # precond_rank>0 triggers the exact low-rank-root preconditioner
+
+    def init_params(self, X):
+        n, d = X.shape
+        # k-means-free init: random training subset
+        idx = jax.random.permutation(jax.random.PRNGKey(0), n)[: self.num_inducing]
+        return {
+            "inducing": X[idx],
+            "raw_lengthscale": jnp.zeros(()) + _inv_softplus(jnp.float32(0.5)),
+            "raw_outputscale": _inv_softplus(jnp.float32(1.0)),
+            "raw_noise": _inv_softplus(jnp.float32(0.1)),
+        }
+
+    def kernel(self, params):
+        return KERNELS[self.kernel_type](
+            lengthscale=_softplus(params["raw_lengthscale"]),
+            outputscale=_softplus(params["raw_outputscale"]),
+        )
+
+    def _root(self, params, X):
+        kern = self.kernel(params)
+        U = params["inducing"]
+        Kuu = kern(U, U) + self.jitter * jnp.eye(U.shape[0], dtype=X.dtype)
+        Luu = jnp.linalg.cholesky(Kuu)
+        Kxu = kern(X, U)  # (n, m)
+        # R = K_XU L⁻ᵀ  →  R Rᵀ = K_XU K_UU⁻¹ K_UX
+        R = jax.scipy.linalg.solve_triangular(Luu, Kxu.T, lower=True).T
+        return R, kern, Luu
+
+    def noise(self, params):
+        return _softplus(params["raw_noise"]) + self.min_noise
+
+    def operator(self, params, X):
+        R, _, _ = self._root(params, X)
+        return AddedDiagOperator(LowRankRootOperator(R), self.noise(params))
+
+    def loss(self, params, X, y, key):
+        return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
+
+    def fit(self, X, y, *, steps=100, lr=0.05, key=None, learn_inducing=True, verbose=False):
+        key = jax.random.PRNGKey(1) if key is None else key
+        params = self.init_params(X)
+        init, update = adam(lr)
+        opt = init(params)
+
+        @jax.jit
+        def step(params, opt, k):
+            loss, g = jax.value_and_grad(self.loss)(params, X, y, k)
+            if not learn_inducing:
+                g = dict(g, inducing=jnp.zeros_like(g["inducing"]))
+            params, opt = update(g, opt, params)
+            return params, opt, loss
+
+        history = []
+        for i in range(steps):
+            key, sub = jax.random.split(key)
+            params, opt, loss = step(params, opt, sub)
+            history.append(float(loss))
+            if verbose and i % 10 == 0:
+                print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
+        return params, history
+
+    def predict(self, params, X, y, Xstar):
+        """SoR predictive: mean/var under the low-rank kernel."""
+        op = self.operator(params, X)
+        R, kern, Luu = self._root(params, X)
+        U = params["inducing"]
+        Ksu = kern(Xstar, U)
+        Rstar = jax.scipy.linalg.solve_triangular(Luu, Ksu.T, lower=True).T  # (s, m)
+        Q_sx = Rstar @ R.T  # SoR cross-cov (s, n)
+        B = jnp.concatenate([y[:, None], Q_sx.T], axis=1)
+        solves = bbmm_solve(op, B, self.settings)
+        mean = Q_sx @ solves[:, 0]
+        var = jnp.sum(Rstar * Rstar, axis=1) - jnp.sum(Q_sx.T * solves[:, 1:], axis=0)
+        return mean, jnp.clip(var, 1e-8) + self.noise(params)

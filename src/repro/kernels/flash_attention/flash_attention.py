@@ -1,0 +1,125 @@
+"""Flash attention (forward) — VMEM-tiled online-softmax attention.
+
+Used by the LM zoo's prefill path on TPU (32k contexts never materialize
+the (sq × skv) score matrix in HBM).  GQA is handled by the wrapper in
+ops.py (q heads grouped onto kv heads before the kernel).
+
+Grid: (batch·heads, q blocks, kv blocks) — kv innermost.  The running max
+`m`, normalizer `l` and output accumulator live in VMEM scratch and are
+rescaled on every kv step (standard online softmax).  Causal masking skips
+nothing structurally (TPU grids are static) but masks with −inf; the
+fraction of wasted tiles is bounded by ½ and the §Perf loop notes it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,  # (1, bq, dh)
+    k_ref,  # (1, bk, dh)
+    v_ref,  # (1, bk, dh)
+    o_ref,  # (1, bq, dh)
+    m_scr,  # (bq,)   running max
+    l_scr,  # (bq,)   running normalizer
+    acc_scr,  # (bq, dh) running numerator
+    *,
+    scale: float,
+    causal: bool,
+    bq: int,
+    bk: int,
+    kv_steps: int,
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+
+    if causal:
+        rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    # guard fully-masked rows (exp(NEG_INF - NEG_INF) would be exp(0))
+    p = jnp.where((s <= NEG_INF / 2), 0.0, p)
+    alpha = jnp.exp(m_prev - m_new)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ik == kv_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows → zero output
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (bh, sq, dh)
+    k: jax.Array,  # (bh, skv, dh)
+    v: jax.Array,  # (bh, skv, dh)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    if scale is None:
+        scale = dh**-0.5
+    kv_steps = skv // bk
+
+    grid = (bh, sq // bq, skv // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            bq=bq,
+            bk=bk,
+            kv_steps=kv_steps,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

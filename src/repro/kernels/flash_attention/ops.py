@@ -1,0 +1,45 @@
+"""Jit'd GQA-aware wrapper around the flash-attention Pallas kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q,  # (b, hq, sq, dh)
+    k,  # (b, hkv, skv, dh)
+    v,
+    *,
+    causal=True,
+    bq=128,
+    bk=128,
+    interpret=None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+
+    # GQA: expand kv heads to q heads (the kernel sees one head per slot;
+    # on real TPUs the expansion is free — XLA aliases the broadcast).
+    k = jnp.repeat(k, group, axis=1).reshape(b * hq, skv, dh)
+    v = jnp.repeat(v, group, axis=1).reshape(b * hq, skv, dh)
+    q = q.reshape(b * hq, sq, dh)
+
+    # pad seq dims to block multiples; padded kv is masked by padding rows
+    # with zeros — they contribute exp(s) terms, so mask via big-negative k?
+    # Instead: pad q only (causal handles trailing kv? no) — require exact
+    # multiples from callers; assert here to stay honest.
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv)
+
+    out = flash_attention_pallas(
+        q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret
+    )
+    return out.reshape(b, hq, sq, dh)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: softmax attention with optional causal mask and GQA."""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """q (bh, sq, dh), k/v (bh, skv, dh) → (bh, sq, dh), f32 math."""
+    bh, sq, dh = q.shape
+    skv = k.shape[1]
+    if scale is None:
+        scale = dh**-0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def gqa_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q (b, hq, sq, dh), k/v (b, hkv, skv, dh) with hq % hkv == 0."""
+    b, hq, sq, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    out = attention_ref(
+        q.reshape(b * hq, sq, dh),
+        k.reshape(b * hq, -1, dh),
+        v.reshape(b * hq, -1, dh),
+        causal=causal,
+        scale=scale,
+    )
+    return out.reshape(b, hq, sq, dh)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused kernel matmul."""
+
+import jax.numpy as jnp
+
+
+def kernel_matmul_ref(X, M, lengthscale, outputscale, sigma2, *, kernel_type="rbf"):
+    """(K(X,X) + σ²I) @ M, materialized — the correctness reference."""
+    Xs = X / lengthscale
+    n1 = jnp.sum(Xs * Xs, -1)
+    d2 = jnp.maximum(n1[:, None] + n1[None, :] - 2.0 * (Xs @ Xs.T), 0.0)
+    if kernel_type == "rbf":
+        K = outputscale * jnp.exp(-0.5 * d2)
+    else:
+        d = jnp.sqrt(jnp.maximum(d2, 1e-20))
+        if kernel_type == "matern12":
+            K = outputscale * jnp.exp(-d)
+        elif kernel_type == "matern32":
+            a = jnp.sqrt(3.0) * d
+            K = outputscale * (1.0 + a) * jnp.exp(-a)
+        elif kernel_type == "matern52":
+            a = jnp.sqrt(5.0) * d
+            K = outputscale * (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+        else:
+            raise ValueError(kernel_type)
+    K = K + sigma2 * jnp.eye(X.shape[0], dtype=K.dtype)
+    return (K @ M.astype(K.dtype)).astype(jnp.float32)

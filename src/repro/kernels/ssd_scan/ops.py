@@ -1,0 +1,34 @@
+"""Jit'd wrapper for the SSD scan: backend dispatch + decode-step helper."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+from .ref import ssd_scan_chunked_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk=128, use_pallas=False, interpret=None):
+    """Dispatch: Pallas kernel on TPU, chunked-jnp elsewhere (identical math)."""
+    if use_pallas:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return ssd_scan_chunked_ref(x, dt, A, B, C, chunk=chunk)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrent step for serving.
+
+    state (b,h,dh,ds); x_t (b,h,dh); dt_t (b,h); B_t/C_t (b,ds).
+    Returns (new_state, y_t (b,h,dh)).
+    """
+    decay = jnp.exp(dt_t * A[None, :])[..., None, None]  # (b,h,1,1)
+    outer = jnp.einsum("bhd,bs->bhds", x_t * dt_t[..., None], B_t)
+    new_state = decay * state + outer
+    y = jnp.einsum("bhds,bs->bhd", new_state, C_t)
+    return new_state, y

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the SSD scan.
+
+``ssd_scan_ref``        — step-by-step recurrence (the ground truth).
+``ssd_scan_chunked_ref``— the chunked reformulation in plain jnp; used by
+                          the Mamba-2 model layer on non-TPU backends and
+                          as a second witness that chunking is exact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """x (b,h,l,dh), dt (b,h,l), A (h,), B/C (b,l,ds) → y (b,h,l,dh)."""
+    b, h, l, dh = x.shape
+    ds = B.shape[-1]
+
+    def per_bh(xbh, dtbh, a, Bb, Cb):
+        def step(hstate, inp):
+            xt, dtt, Bt, Ct = inp
+            decay = jnp.exp(dtt * a)
+            hstate = decay * hstate + dtt * jnp.outer(xt, Bt)  # (dh, ds)
+            y = hstate @ Ct
+            return hstate, y
+
+        h0 = jnp.zeros((dh, ds), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xbh, dtbh, Bb, Cb))
+        return ys
+
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    B32, C32 = B.astype(jnp.float32), C.astype(jnp.float32)
+    out = jax.vmap(  # batch
+        jax.vmap(per_bh, in_axes=(0, 0, 0, None, None)),  # heads
+        in_axes=(0, 0, None, 0, 0),
+    )(x32, dt32, A.astype(jnp.float32), B32, C32)
+    return out.astype(x.dtype)
+
+
+def ssd_scan_chunked_ref(x, dt, A, B, C, *, chunk=64):
+    """Chunked SSD in plain jnp (mirrors the Pallas kernel's math)."""
+    b, h, l, dh = x.shape
+    ds = B.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+
+    x32 = x.astype(jnp.float32).reshape(b, h, nc, chunk, dh)
+    dt32 = dt.astype(jnp.float32).reshape(b, h, nc, chunk)
+    B32 = B.astype(jnp.float32).reshape(b, nc, chunk, ds)
+    C32 = C.astype(jnp.float32).reshape(b, nc, chunk, ds)
+    A32 = A.astype(jnp.float32)
+
+    la = dt32 * A32[None, :, None, None]  # (b,h,nc,c)
+    cum = jnp.cumsum(la, axis=-1)
+    total = cum[..., -1]
+
+    # intra-chunk — mask the decay exponent BEFORE exp: the i<j entries
+    # would overflow and poison gradients through the jnp.where otherwise
+    G = jnp.einsum("bnis,bnjs->bnij", C32, B32)  # (b,nc,c,c)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    diff = cum[..., :, None] - cum[..., None, :]  # (b,h,nc,c,c)
+    decay = jnp.exp(jnp.where(tri, diff, 0.0)) * tri
+    M = G[:, None] * decay * dt32[..., None, :]
+    y = jnp.einsum("bhnij,bhnjd->bhnid", M, x32)
+
+    # carried states
+    coef = jnp.exp(total[..., None] - cum) * dt32  # (b,h,nc,c)
+    chunk_state = jnp.einsum("bhncd,bncs,bhnc->bhnds", x32, B32, coef)
+
+    def carry(hstate, inp):
+        tot, st = inp
+        new = jnp.exp(tot)[..., None, None] * hstate + st
+        return new, hstate  # emit state *before* this chunk
+
+    h0 = jnp.zeros((b, h, dh, ds), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        carry,
+        h0,
+        (jnp.moveaxis(total, 2, 0), jnp.moveaxis(chunk_state, 2, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 2)  # (b,h,nc,dh,ds)
+
+    y_inter = jnp.einsum("bnis,bhnds->bhnid", C32, h_prevs)
+    y = y + jnp.exp(cum)[..., None] * y_inter
+    return y.reshape(b, h, l, dh).astype(x.dtype)

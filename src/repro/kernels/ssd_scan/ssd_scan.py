@@ -1,0 +1,121 @@
+"""Chunked SSD (state-space duality) scan — Mamba-2's core compute.
+
+Semantics (per batch b, head h, scalar decay per head):
+
+    h_t = exp(Δ_t·A_h)·h_{t-1} + Δ_t·(x_t ⊗ B_t)        state (dh × ds)
+    y_t = h_t @ C_t
+
+The chunked algorithm (Dao & Gu 2024) splits time into chunks of c steps:
+inside a chunk everything is a (c × c) masked-decay "attention" matrix that
+the MXU eats directly; across chunks only the (dh × ds) state is carried.
+This is the TPU-friendly reformulation: one sequential grid dimension of
+length L/c instead of L.
+
+Grid: (batch, heads, chunks) — chunks innermost; the running state lives
+in VMEM scratch and persists across the chunk steps of one (b, h) slot.
+All decay math in f32; matmuls request f32 accumulation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # (1, 1, c, dh)
+    dt_ref,  # (1, 1, c)
+    a_ref,  # (1,)        A_h  (negative scalar)
+    b_ref,  # (1, c, ds)
+    c_ref,  # (1, c, ds)
+    y_ref,  # (1, 1, c, dh)
+    state_scr,  # (dh, ds) f32
+    *,
+    nchunks: int,
+):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (c, dh)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (c,)
+    A = a_ref[0].astype(jnp.float32)
+    B = b_ref[0].astype(jnp.float32)  # (c, ds)
+    C = c_ref[0].astype(jnp.float32)  # (c, ds)
+
+    la = dt * A  # log a_t  (≤ 0)
+    cum = jnp.cumsum(la)  # (c,) inclusive
+    total = cum[-1]
+
+    # intra-chunk: y_i += Σ_{j≤i} exp(cum_i−cum_j)·Δ_j·(C_i·B_j)·x_j
+    G = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, c)
+    c_len = x.shape[0]
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 1)
+    )
+    # mask exponent before exp (overflow hygiene — see ref.py)
+    diff = jnp.where(tri, cum[:, None] - cum[None, :], 0.0)
+    decay = jnp.exp(diff) * tri
+    M = G * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, dh)
+
+    # inter-chunk: y_i += exp(cum_i)·(C_i @ h_prevᵀ)
+    h_prev = state_scr[...]  # (dh, ds)
+    y_inter = jax.lax.dot_general(
+        C, h_prev, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (c, dh)
+    y = y + jnp.exp(cum)[:, None] * y_inter
+
+    # state: h ← exp(total)·h_prev + Σ_j exp(total−cum_j)·Δ_j·(x_j ⊗ B_j)
+    coef = jnp.exp(total - cum) * dt  # (c,)
+    outer = jax.lax.dot_general(
+        x * coef[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (dh, ds)
+    state_scr[...] = jnp.exp(total) * h_prev + outer
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(
+    x: jax.Array,  # (b, h, l, dh)
+    dt: jax.Array,  # (b, h, l)   positive step sizes
+    A: jax.Array,  # (h,)        negative decay rates
+    B: jax.Array,  # (b, l, ds)  shared across heads (ngroups = 1)
+    C: jax.Array,  # (b, l, ds)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, l, dh = x.shape
+    ds = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nchunks = l // chunk
+
+    grid = (b, h, nchunks)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, nchunks=nchunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda ib, ih, ic: (ib, ih, ic)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, ds), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dh), lambda ib, ih, ic: (ib, ih, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, l, dh), x.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

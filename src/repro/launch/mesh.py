@@ -1,0 +1,25 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked on first use).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 dual pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small fake-device mesh for unit tests (needs host-device override)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,213 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e model).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step per chip:
+
+    t_compute    = HLO_FLOPs / PEAK_FLOPS
+    t_memory     = HLO_bytes / HBM_BW
+    t_collective = collective_bytes / ICI_BW
+
+``cost_analysis()`` numbers are already per-device under SPMD (verified
+empirically), as is the post-optimization HLO text we parse collectives
+from.  ``lax.scan`` bodies are counted ONCE by both sources, so the
+dry-run lowers each model a second and third time with the layer stack
+unrolled at L=1 and L=2 and extrapolates  total = f(1) + (L−1)·(f(2)−f(1))
+— exact for homogeneous stacks and capturing the embedding / head /
+optimizer epilogue in f(1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# -- TPU v5e hardware model (per chip) ----------------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+PEAK_FLOPS_F32 = 98.5e12  # f32 MXU rate (half the bf16 rate)
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# HLO line shape:  %name = f32[64,256]{1,0} all-reduce(%op), ...
+# or (tuple form): %name = (f32[..], f32[..]) all-reduce(%a, %b), ...
+# async pairs (all-gather-start / -done) carry the payload on -start.
+_COLLECTIVE_LINE_RE = re.compile(
+    r"=\s*(\(?[^)=]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in optimized HLO.
+
+    Returns {op_kind: bytes, "total": bytes} for the per-device program.
+    """
+    out: dict = {}
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_LINE_RE.search(line)
+        if not m:
+            continue
+        types, kind = m.group(1), m.group(2)
+        b = 0
+        for t in _TYPE_RE.finditer(types):
+            dtype, dims = t.group(1), t.group(2)
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            b += n * _DTYPE_BYTES[dtype]
+        out[kind] = out.get(kind, 0) + b
+        total += b
+    out["total"] = total
+    return out
+
+
+@dataclasses.dataclass
+class CellAnalysis:
+    arch: str
+    shape: str
+    mesh: str
+    flops: float  # per-device, scan-corrected
+    bytes_accessed: float  # per-device, scan-corrected
+    collective_bytes: float  # per-device, scan-corrected
+    collective_breakdown: dict
+    per_device_memory: int  # bytes (args + temps + outputs)
+    model_flops: float  # analytic 6·N·D (per device)
+    peak_flops: float = PEAK_FLOPS  # dtype-aware matmul peak
+
+    @property
+    def t_compute(self):
+        return self.flops / self.peak_flops
+
+    @property
+    def t_memory(self):
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self):
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """Dominant-term share of total modeled time — 1.0 means the step is
+        perfectly limited by its single bottleneck (no wasted overlap)."""
+        tot = self.t_compute + self.t_memory + self.t_collective
+        return (max(self.t_compute, self.t_memory, self.t_collective) / tot) if tot else 0.0
+
+    @property
+    def t_overlap_bound(self):
+        """Step-time lower bound with perfect compute/DMA/ICI overlap (TPU
+        async collectives + double-buffered HBM): max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu_bound(self):
+        """Model-flops utilization upper bound at the overlap-adjusted step
+        time: (MODEL_FLOPS / peak) / t_overlap_bound — the §Perf score."""
+        t = self.t_overlap_bound
+        return (self.model_flops / PEAK_FLOPS) / t if t else 0.0
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(
+            t_compute=self.t_compute,
+            t_memory=self.t_memory,
+            t_collective=self.t_collective,
+            bottleneck=self.bottleneck,
+            useful_ratio=self.useful_ratio,
+            roofline_fraction=self.roofline_fraction,
+            t_overlap_bound=self.t_overlap_bound,
+            mfu_bound=self.mfu_bound,
+        )
+        return d
+
+
+def extrapolate(f1: float, f2: float, L: int) -> float:
+    """total = f(1) + (L−1)·(f(2)−f(1)); guards against tiny negatives."""
+    per_layer = max(f2 - f1, 0.0)
+    return f1 + (L - 1) * per_layer
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the whole step (all devices):
+    6·N·D for training, 2·N·D for pure forward (prefill/decode);
+    N = active non-embedding params, D = tokens processed this step."""
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * D
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * D
+    D = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * D
+
+
+def active_param_count(cfg) -> float:
+    """Non-embedding parameters touched per token (MoE: routed top-k only)."""
+    d, L = cfg.d_model, cfg.num_layers
+    total = 0.0
+    hd = cfg.resolved_head_dim if cfg.num_heads else 0
+
+    def attn_params():
+        if cfg.attn_type == "mla":
+            p = d * cfg.kv_lora_rank + d * cfg.rope_head_dim
+            p += cfg.kv_lora_rank * cfg.num_heads * (hd + cfg.resolved_v_head_dim)
+            if cfg.q_lora_rank:
+                p += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * (hd + cfg.rope_head_dim)
+            else:
+                p += d * cfg.num_heads * (hd + cfg.rope_head_dim)
+            p += cfg.num_heads * cfg.resolved_v_head_dim * d
+            return p
+        return d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd + cfg.num_heads * hd * d
+
+    def mlp_params(f):
+        return 3 * d * f if cfg.activation == "swiglu" else 2 * d * f
+
+    def mamba_params():
+        di, ds, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+        return d * (2 * di + 2 * ds + H) + di * d
+
+    if cfg.family in ("dense",):
+        total = L * (attn_params() + mlp_params(cfg.d_ff))
+    elif cfg.family == "moe":
+        dense_l = cfg.first_dense_layers
+        moe_l = L - dense_l
+        active_ff = cfg.top_k * mlp_params(cfg.moe_d_ff) + cfg.num_shared_experts * mlp_params(cfg.moe_d_ff)
+        total = L * attn_params() + dense_l * mlp_params(cfg.d_ff) + moe_l * active_ff
+    elif cfg.family == "encdec":
+        enc = cfg.encoder_layers * (attn_params() + mlp_params(cfg.d_ff))
+        dec = L * (2 * attn_params() + mlp_params(cfg.d_ff))
+        total = enc + dec
+    elif cfg.family == "ssm":
+        total = L * mamba_params()
+    elif cfg.family == "hybrid":
+        P = cfg.shared_attn_period
+        G = L // P
+        d2 = 2 * d
+        shared = G * (4 * d2 * d2 + 3 * d2 * cfg.d_ff + d2 * d)  # applied G times
+        total = L * mamba_params() + shared
+    return float(total)

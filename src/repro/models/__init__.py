@@ -1,0 +1,11 @@
+"""LM architecture zoo: dense / MoE / MLA / enc-dec / SSM / hybrid."""
+
+from .model import (
+    ModelBundle,
+    build_model,
+    input_specs,
+    batch_shardings,
+    make_train_step,
+    make_prefill_step,
+    make_serve_step,
+)

@@ -1,0 +1,444 @@
+"""Attention: GQA (llama/qwen/command-r/whisper) and MLA (deepseek/minicpm3).
+
+Every variant supports three entry modes:
+  * full      — training / encoder (bidirectional optional)
+  * prefill   — full pass that also returns the serving cache
+  * decode    — one new token against a fixed-capacity cache
+
+Caches are fixed-shape (capacity = shape's seq_len) so serve_step lowers
+statically for the dry-run.  KV caches shard kv-heads over "model" when
+divisible, else head_dim (see repro/distributed/sharding.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, normal_init
+
+
+def _sdpa(q, k, v, *, causal, kv_len=None, use_flash=False):
+    """q (B,S,H,hd), k/v (B,T,KV,hd) → (B,S,H,hd). f32 softmax.
+
+    kv_len: optional (B,) active lengths for decode masking.
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    group = H // KV
+
+    if use_flash and kv_len is None:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        out = flash_attention(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+            causal=causal,
+        )
+        return jnp.moveaxis(out, 1, 2)
+
+    qg = q.reshape(B, S, KV, group, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (hd**-0.5)
+    if causal and S > 1:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(T)[None, :] < kv_len[:, None]  # (B, T)
+        scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q, k, v, *, causal, q_chunk=1024, kv_chunk=1024, unroll=False):
+    """Flash-style attention in pure XLA: double scan over (q, kv) chunks
+    with online softmax.  Never materializes the (S × T) score matrix —
+    the structural twin of the Pallas kernel, used on backends where the
+    TPU kernel can't lower (and as its compile-time stand-in in the
+    dry-run).  The per-q-chunk body is rematerialized so backward memory
+    stays O(S·dh), not O(S·T)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+    scale = hd**-0.5
+
+    qh = (q.reshape(B, S, KV, group, hd) * scale).transpose(1, 0, 2, 3, 4)
+    qc = qh.reshape(S // q_chunk, q_chunk, B, KV, group, hd)
+    kc = k.transpose(1, 0, 2, 3).reshape(T // kv_chunk, kv_chunk, B, KV, hd)
+    vc = v.transpose(1, 0, 2, 3).reshape(T // kv_chunk, kv_chunk, B, KV, hd)
+
+    def one_q_chunk(args):
+        qi, qb = args  # index, (q_chunk, B, KV, G, hd)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, kb, vb = args2
+            s = jnp.einsum(
+                "qbkgh,tbkh->bkgqt", qb.astype(jnp.float32), kb.astype(jnp.float32)
+            )
+            if causal:
+                rows = qi * q_chunk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_chunk, kv_chunk), 0
+                )
+                cols = ki * kv_chunk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_chunk, kv_chunk), 1
+                )
+                s = jnp.where((rows >= cols)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(s <= -1e29, 0.0, p)
+            alpha = jnp.exp(m - m_new)
+            alpha = jnp.where(m <= -1e29, 0.0, alpha)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,tbkh->bkgqh", p, vb.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, group, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, group, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, group, q_chunk, hd), jnp.float32)
+        if unroll:  # analysis lowering: count every tile in the HLO
+            carry = (m0, l0, a0)
+            for ki in range(T // kv_chunk):
+                carry, _ = kv_step(carry, (jnp.int32(ki), kc[ki], vc[ki]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), (jnp.arange(T // kv_chunk), kc, vc)
+            )
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / l[..., None]).astype(q.dtype)  # (B, KV, G, qc, hd)
+        return out.transpose(3, 0, 1, 2, 4)  # (qc, B, KV, G, hd)
+
+    one_q_chunk = jax.checkpoint(one_q_chunk)
+    if unroll:
+        outs = jnp.stack([
+            one_q_chunk((jnp.int32(i), qc[i])) for i in range(S // q_chunk)
+        ])
+    else:
+        outs = jax.lax.map(one_q_chunk, (jnp.arange(S // q_chunk), qc))
+    out = outs.reshape(S, B, KV, group, hd).transpose(1, 0, 2, 3, 4)
+    return out.reshape(B, S, H, hd)
+
+
+# ---------------------------------------------------------------- GQA --------
+
+
+def gqa_init(key, cfg, dtype):
+    d = cfg.d_model
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    scale = d**-0.5
+    p = {
+        "wq": normal_init(ks[0], (d, H * hd), scale, dtype),
+        "wk": normal_init(ks[1], (d, KV * hd), scale, dtype),
+        "wv": normal_init(ks[2], (d, KV * hd), scale, dtype),
+        "wo": normal_init(ks[3], (H * hd, d), scale, dtype),
+    }
+    if cfg.qkv_bias:
+        p.update(
+            bq=jnp.zeros((H * hd,), dtype),
+            bk=jnp.zeros((KV * hd,), dtype),
+            bv=jnp.zeros((KV * hd,), dtype),
+        )
+    return p
+
+
+def _gqa_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunk_ok(cfg, S):
+    c = min(cfg.attn_chunk, S)
+    return S % c == 0
+
+
+def gqa_full(p, cfg, x, *, causal=True, use_flash=False, unroll=False):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    if cfg.chunked_attention and S > 1 and _chunk_ok(cfg, S):
+        out = _sdpa_chunked(
+            q, k, v, causal=causal,
+            q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk, unroll=unroll,
+        )
+    else:
+        out = _sdpa(q, k, v, causal=causal, use_flash=use_flash)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_prefill(p, cfg, x, cache_len, *, unroll=False):
+    """Returns (out, cache) with cache capacity == cache_len ≥ S."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _gqa_qkv(p, cfg, x, positions)
+    if cfg.chunked_attention and S > 1 and _chunk_ok(cfg, S):
+        out = _sdpa_chunked(
+            q, k, v, causal=True, q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+            unroll=unroll,
+        )
+    else:
+        out = _sdpa(q, k, v, causal=True)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    pad = cache_len - S
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+    }
+    return out.reshape(B, S, -1) @ p["wo"], cache
+
+
+def _masked_cache_update(cache, new, pos):
+    """Write ``new`` (B, 1, ...) at per-row position ``pos`` via a masked
+    select.  A vmap'd dynamic_update_slice lowers to a batched scatter that
+    the SPMD partitioner cannot shard — it replicates the whole cache per
+    layer (hundreds of GB of all-gather per decoded token at 32k).  The
+    elementwise select keeps the cache sharding untouched."""
+    T = cache.shape[1]
+    hit = jnp.arange(T)[None, :] == pos[:, None]  # (B, T)
+    hit = hit.reshape(hit.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(hit, new.astype(cache.dtype), cache)
+
+
+def gqa_decode(p, cfg, x, cache, pos):
+    """x (B, 1, d); cache k/v (B, T, KV, hd); pos (B,) current lengths."""
+    from repro.distributed.sharding import shard_q_like_cache
+
+    B = x.shape[0]
+    q, k, v = _gqa_qkv(p, cfg, x, pos[:, None])
+    q = shard_q_like_cache(q, cfg.num_kv_heads)
+    k_cache = _masked_cache_update(cache["k"], k, pos)
+    v_cache = _masked_cache_update(cache["v"], v, pos)
+    out = _sdpa(q, k_cache, v_cache, causal=False, kv_len=pos + 1)
+    return out.reshape(B, 1, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+def gqa_cross_init(key, cfg, dtype):
+    """Cross-attention (whisper decoder): kv from encoder states."""
+    return gqa_init(key, cfg, dtype)
+
+
+def gqa_cross(p, cfg, x, enc, enc_cache=None):
+    """x (B,S,d) queries; enc (B,T,d) encoder states (no causal mask).
+
+    enc_cache: precomputed {k, v} to amortize projections during decode.
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]) if not cfg.qkv_bias else (x @ p["wq"] + p["bq"])
+    q = q.reshape(B, S, H, hd)
+    if enc_cache is None:
+        k = enc @ p["wk"]
+        v = enc @ p["wv"]
+        if cfg.qkv_bias:
+            k, v = k + p["bk"], v + p["bv"]
+        k = k.reshape(B, -1, KV, hd)
+        v = v.reshape(B, -1, KV, hd)
+    else:
+        k, v = enc_cache["k"], enc_cache["v"]
+    out = _sdpa(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"], {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------- MLA --------
+
+
+def mla_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = cfg.resolved_head_dim  # nope (non-positional) head dim
+    vhd = cfg.resolved_v_head_dim
+    r_kv, r_q, r_rope = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 8)
+    s = d**-0.5
+    p = {
+        "w_dkv": normal_init(ks[0], (d, r_kv), s, dtype),
+        "w_kr": normal_init(ks[1], (d, r_rope), s, dtype),
+        "w_uk": normal_init(ks[2], (r_kv, H * hd), r_kv**-0.5, dtype),
+        "w_uv": normal_init(ks[3], (r_kv, H * vhd), r_kv**-0.5, dtype),
+        "wo": normal_init(ks[4], (H * vhd, d), s, dtype),
+        "kv_norm": jnp.ones((r_kv,), dtype),
+    }
+    if r_q:
+        p["w_dq"] = normal_init(ks[5], (d, r_q), s, dtype)
+        p["w_uq"] = normal_init(ks[6], (r_q, H * (hd + r_rope)), r_q**-0.5, dtype)
+        p["q_norm"] = jnp.ones((r_q,), dtype)
+    else:
+        p["wq"] = normal_init(ks[5], (d, H * (hd + r_rope)), s, dtype)
+    return p
+
+
+def _rms(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    out = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_q(p, cfg, x):
+    B, S, _ = x.shape
+    H, hd, r_rope = cfg.num_heads, cfg.resolved_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        q = _rms(x @ p["w_dq"], p["q_norm"]) @ p["w_uq"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, hd + r_rope)
+    return q[..., :hd], q[..., hd:]  # (nope, rope) parts
+
+
+def _mla_kv_latent(p, cfg, x, positions):
+    """Compressed cache entries: c_kv (B,S,r_kv), k_rope (B,S,r_rope)."""
+    c_kv = _rms(x @ p["w_dkv"], p["kv_norm"])
+    k_rope = x @ p["w_kr"]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _mla_attend(p, cfg, q_nope, q_rope, positions_q, c_kv, k_rope, *, causal, kv_len=None):
+    """Attention in latent space (the 'absorbed' MLA formulation):
+
+    score_h(i,j) = (q_nope_i W_uk_hᵀ)·c_j + q_rope_i·k_rope_j
+    out_h(i)     = Σ_j p_ij (c_j W_uv_h)  — expand after the value sum.
+    """
+    B, S, H, hd = q_nope.shape
+    r_kv = c_kv.shape[-1]
+    vhd = cfg.resolved_v_head_dim
+    r_rope = cfg.rope_head_dim
+
+    q_rope = apply_rope(q_rope, positions_q, cfg.rope_theta)
+    w_uk = p["w_uk"].reshape(r_kv, H, hd)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B,S,H,r_kv)
+
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+    scores = scores + jnp.einsum("bshr,btr->bhst", q_rope, k_rope)
+    scores = scores.astype(jnp.float32) * ((hd + r_rope) ** -0.5)
+
+    T = c_kv.shape[1]
+    if causal and S > 1:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(T)[None, :] < kv_len[:, None]
+        scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+
+    lat_out = jnp.einsum("bhst,btr->bshr", probs, c_kv)  # (B,S,H,r_kv)
+    w_uv = p["w_uv"].reshape(r_kv, H, vhd)
+    out = jnp.einsum("bshr,rhv->bshv", lat_out, w_uv)
+    return out.reshape(B, S, H * vhd) @ p["wo"]
+
+
+def _mla_attend_chunked(p, cfg, q_nope, q_rope, positions_q, c_kv, k_rope, *, chunk=1024):
+    """Causal chunked (online-softmax) MLA attention in latent space."""
+    B, S, H, hd = q_nope.shape
+    r_kv = c_kv.shape[-1]
+    vhd = cfg.resolved_v_head_dim
+    r_rope = cfg.rope_head_dim
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+
+    q_rope = apply_rope(q_rope, positions_q, cfg.rope_theta)
+    w_uk = p["w_uk"].reshape(r_kv, H, hd)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (B,S,H,r_kv)
+    scale = (hd + r_rope) ** -0.5
+
+    nq = S // chunk
+    qlc = q_lat.reshape(B, nq, chunk, H, r_kv)
+    qrc = q_rope.reshape(B, nq, chunk, H, r_rope)
+    ckc = c_kv.reshape(B, nq, chunk, r_kv)
+    krc = k_rope.reshape(B, nq, chunk, r_rope)
+
+    def one_q_chunk(args):
+        qi, ql, qr = args  # ql (B, chunk, H, r_kv)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, ck, kr = args2
+            s = jnp.einsum("bqhr,btr->bhqt", ql.astype(jnp.float32), ck.astype(jnp.float32))
+            s = s + jnp.einsum("bqhr,btr->bhqt", qr.astype(jnp.float32), kr.astype(jnp.float32))
+            s = s * scale
+            rows = qi * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+            cols = ki * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+            s = jnp.where((rows >= cols)[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            pr = jnp.exp(s - m_new[..., None])
+            pr = jnp.where(s <= -1e29, 0.0, pr)
+            alpha = jnp.exp(m - m_new)
+            alpha = jnp.where(m <= -1e29, 0.0, alpha)
+            l = l * alpha + jnp.sum(pr, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqt,btr->bhqr", pr, ck.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, chunk, r_kv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nq), ckc[:, :].transpose(1, 0, 2, 3), krc.transpose(1, 0, 2, 3)))
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l[..., None]).astype(c_kv.dtype)  # (B,H,chunk,r_kv)
+
+    one_q_chunk = jax.checkpoint(one_q_chunk)
+    lat = jax.lax.map(
+        one_q_chunk,
+        (jnp.arange(nq), qlc.transpose(1, 0, 2, 3, 4), qrc.transpose(1, 0, 2, 3, 4)),
+    )  # (nq, B, H, chunk, r_kv)
+    # (nq, B, H, chunk, r) → (B, nq, chunk, H, r) → (B, S, H, r)
+    lat = lat.transpose(1, 0, 3, 2, 4).reshape(B, S, H, r_kv)
+    w_uv = p["w_uv"].reshape(r_kv, H, vhd)
+    out = jnp.einsum("bshr,rhv->bshv", lat, w_uv)
+    return out.reshape(B, S, H * vhd) @ p["wo"]
+
+
+def mla_full(p, cfg, x, *, causal=True):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    if cfg.chunked_attention and causal and S > 1 and S % min(cfg.attn_chunk, S) == 0:
+        return _mla_attend_chunked(
+            p, cfg, q_nope, q_rope, positions, c_kv, k_rope, chunk=cfg.attn_chunk
+        )
+    return _mla_attend(p, cfg, q_nope, q_rope, positions, c_kv, k_rope, causal=causal)
+
+
+def mla_prefill(p, cfg, x, cache_len):
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x, positions)
+    out = _mla_attend(p, cfg, q_nope, q_rope, positions, c_kv, k_rope, causal=True)
+    pad = cache_len - S
+    cache = {
+        "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+        "k_rope": jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))),
+    }
+    return out, cache
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    B = x.shape[0]
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    c_new, kr_new = _mla_kv_latent(p, cfg, x, pos[:, None])
+    c_kv = _masked_cache_update(cache["c_kv"], c_new, pos)
+    k_rope = _masked_cache_update(cache["k_rope"], kr_new, pos)
+    out = _mla_attend(
+        p, cfg, q_nope, q_rope, pos[:, None], c_kv, k_rope, causal=False, kv_len=pos + 1
+    )
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

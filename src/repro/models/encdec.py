@@ -1,0 +1,205 @@
+"""Whisper-style encoder–decoder (audio frontend stubbed).
+
+``input_specs`` hands the encoder precomputed frame embeddings
+(B, enc_seq, d) per the assignment spec; the decoder is a standard
+causal transformer with cross-attention.  Learned positions (whisper),
+pre-LayerNorm, GELU MLPs, QKV bias.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activations
+from . import attention as attn
+from .layers import cross_entropy, embed, embedding_init, make_norm, mlp_apply, mlp_init, normal_init
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _enc_block_init(key, cfg, dtype):
+    norm_init, _ = make_norm(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    norm_init, _ = make_norm(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": norm_init(cfg.d_model, dtype),
+        "attn": attn.gqa_init(k1, cfg, dtype),
+        "cross_norm": norm_init(cfg.d_model, dtype),
+        "cross": attn.gqa_cross_init(k2, cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg, dtype),
+    }
+
+
+def init(cfg, key, *, max_seq=4096):
+    dtype = _dtype(cfg)
+    norm_init, _ = make_norm(cfg)
+    ks = jax.random.split(key, 6 + cfg.encoder_layers + cfg.num_layers)
+    enc_blocks = [_enc_block_init(ks[6 + i], cfg, dtype) for i in range(cfg.encoder_layers)]
+    dec_blocks = [
+        _dec_block_init(ks[6 + cfg.encoder_layers + i], cfg, dtype)
+        for i in range(cfg.num_layers)
+    ]
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    return {
+        "embed": embedding_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "enc_pos": {"pos_table": normal_init(ks[1], (cfg.encoder_seq, cfg.d_model), 0.01, dtype)},
+        "dec_pos": {"pos_table": normal_init(ks[2], (max_seq, cfg.d_model), 0.01, dtype)},
+        "encoder": stack(enc_blocks),
+        "enc_final_norm": norm_init(cfg.d_model, dtype),
+        "decoder": stack(dec_blocks),
+        "final_norm": norm_init(cfg.d_model, dtype),
+        "lm_head": normal_init(ks[3], (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, dtype),
+    }
+
+
+def encode(params, cfg, frames, *, use_scan=True, use_flash=False):
+    """frames (B, T, d) stub embeddings → encoder states."""
+    _, norm = make_norm(cfg)
+    T = frames.shape[1]
+    h = frames + params["enc_pos"]["pos_table"][:T][None]
+    h = shard_activations(h, None, None)
+
+    def body(p, h):
+        a = attn.gqa_full(p["attn"], cfg, norm(p["attn_norm"], h), causal=False, use_flash=use_flash)
+        h = h + a
+        return h + mlp_apply(p["mlp"], norm(p["mlp_norm"], h), cfg)
+
+    body = jax.checkpoint(body)
+    if use_scan:
+        h, _ = jax.lax.scan(lambda c, p: (body(p, c), None), h, params["encoder"])
+    else:
+        L = jax.tree.leaves(params["encoder"])[0].shape[0]
+        for i in range(L):
+            h = body(jax.tree.map(lambda x: x[i], params["encoder"]), h)
+    return norm(params["enc_final_norm"], h)
+
+
+def _dec_block(p, cfg, h, enc, *, use_flash=False):
+    _, norm = make_norm(cfg)
+    h = h + attn.gqa_full(p["attn"], cfg, norm(p["attn_norm"], h), causal=True, use_flash=use_flash)
+    c, _ = attn.gqa_cross(p["cross"], cfg, norm(p["cross_norm"], h), enc)
+    h = h + c
+    return h + mlp_apply(p["mlp"], norm(p["mlp_norm"], h), cfg)
+
+
+def forward(params, cfg, frames, tokens, *, use_scan=True, use_flash=False):
+    _, norm = make_norm(cfg)
+    enc = encode(params, cfg, frames, use_scan=use_scan, use_flash=use_flash)
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens) + params["dec_pos"]["pos_table"][:S][None]
+    h = shard_activations(h, None, None)
+
+    body = jax.checkpoint(partial(_dec_block, cfg=cfg, use_flash=use_flash))
+    if use_scan:
+        h, _ = jax.lax.scan(lambda c, p: (body(p, h=c, enc=enc), None), h, params["decoder"])
+    else:
+        L = jax.tree.leaves(params["decoder"])[0].shape[0]
+        for i in range(L):
+            h = body(jax.tree.map(lambda x: x[i], params["decoder"]), h=h, enc=enc)
+    h = norm(params["final_norm"], h)
+    return shard_activations(h @ params["lm_head"], None, "model")
+
+
+def loss_fn(params, cfg, batch, *, use_scan=True, use_flash=False):
+    logits = forward(params, cfg, batch["frames"], batch["tokens"][:, :-1],
+                     use_scan=use_scan, use_flash=use_flash)
+    return cross_entropy(logits, batch["tokens"][:, 1:], cfg.vocab_size)
+
+
+# -- serving -------------------------------------------------------------------
+
+
+def init_cache(params, cfg, batch, cache_len):
+    dtype = _dtype(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "self_k": jnp.zeros((L, batch, cache_len, KV, hd), dtype),
+        "self_v": jnp.zeros((L, batch, cache_len, KV, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), dtype),
+    }
+
+
+def prefill(params, cfg, frames, tokens, cache_len, *, use_scan=True):
+    """Encode + run decoder over prompt; build self- and cross-KV caches."""
+    _, norm = make_norm(cfg)
+    enc = encode(params, cfg, frames, use_scan=use_scan)
+    B, S = tokens.shape
+    h = embed(params["embed"], tokens) + params["dec_pos"]["pos_table"][:S][None]
+
+    def body(h, p):
+        x = norm(p["attn_norm"], h)
+        a, self_cache = attn.gqa_prefill(p["attn"], cfg, x, cache_len)
+        h = h + a
+        c, cross_cache = attn.gqa_cross(p["cross"], cfg, norm(p["cross_norm"], h), enc)
+        h = h + c
+        h = h + mlp_apply(p["mlp"], norm(p["mlp_norm"], h), cfg)
+        return h, {"self": self_cache, "cross": cross_cache}
+
+    if use_scan:
+        h, caches = jax.lax.scan(body, h, params["decoder"])
+    else:
+        L = jax.tree.leaves(params["decoder"])[0].shape[0]
+        outs = []
+        for i in range(L):
+            h, c = body(h, jax.tree.map(lambda x: x[i], params["decoder"]))
+            outs.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = norm(params["final_norm"], h[:, -1:])
+    cache = {
+        "self_k": caches["self"]["k"],
+        "self_v": caches["self"]["v"],
+        "cross_k": caches["cross"]["k"],
+        "cross_v": caches["cross"]["v"],
+    }
+    return shard_activations((h @ params["lm_head"])[:, 0], "model"), cache
+
+
+def decode_step(params, cfg, token, cache, pos, *, use_scan=True):
+    _, norm = make_norm(cfg)
+    B = token.shape[0]
+    pos_emb = params["dec_pos"]["pos_table"][pos][:, None]
+    h = embed(params["embed"], token[:, None]) + pos_emb
+
+    def body(h, pc):
+        p, sk, sv, ck, cv = pc
+        x = norm(p["attn_norm"], h)
+        a, new_self = attn.gqa_decode(p["attn"], cfg, x, {"k": sk, "v": sv}, pos)
+        h = h + a
+        c, _ = attn.gqa_cross(p["cross"], cfg, norm(p["cross_norm"], h), None,
+                              enc_cache={"k": ck, "v": cv})
+        h = h + c
+        h = h + mlp_apply(p["mlp"], norm(p["mlp_norm"], h), cfg)
+        return h, (new_self["k"], new_self["v"])
+
+    xs_all = (params["decoder"], cache["self_k"], cache["self_v"], cache["cross_k"], cache["cross_v"])
+    if use_scan:
+        h, (nk, nv) = jax.lax.scan(body, h, xs_all)
+    else:
+        L = jax.tree.leaves(params["decoder"])[0].shape[0]
+        outs = []
+        for i in range(L):
+            h, o = body(h, jax.tree.map(lambda x: x[i], xs_all))
+            outs.append(o)
+        nk, nv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = norm(params["final_norm"], h)
+    logits = shard_activations((h @ params["lm_head"])[:, 0], "model")
+    new_cache = dict(cache, self_k=nk, self_v=nv)
+    return logits, new_cache

@@ -1,0 +1,235 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with a *shared* attention block.
+
+Structure (period P = cfg.shared_attn_period):
+  * num_layers Mamba-2 blocks, organized as G = num_layers // P scanned
+    groups of P plus an unrolled tail,
+  * after each full group, ONE shared transformer block (GQA + MLP at
+    width 2·d on concat(hidden, initial-embedding), projected back to d)
+    with per-group input-norm gains — the Zamba2 weight-sharing scheme at
+    this codebase's abstraction level (see DESIGN.md §5).
+
+Decode carries (mamba conv/SSD states per layer) + (one KV cache per
+shared-attention invocation, G of them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activations
+from . import attention as attn
+from .layers import cross_entropy, embed, embedding_init, make_norm, mlp_apply, mlp_init, normal_init
+from .ssm import mamba2_decode, mamba2_full, mamba2_init, mamba2_init_cache
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _attn_cfg(cfg):
+    """The shared block runs at width 2·d (concat of hidden + embedding)."""
+    return dataclasses.replace(
+        cfg,
+        d_model=2 * cfg.d_model,
+        head_dim=(2 * cfg.d_model) // cfg.num_heads,
+        d_ff=cfg.d_ff,
+        attn_type="gqa",
+    )
+
+
+def _group_shape(cfg):
+    P = cfg.shared_attn_period
+    G = cfg.num_layers // P
+    tail = cfg.num_layers - G * P
+    return P, G, tail
+
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    norm_init, _ = make_norm(cfg)
+    P, G, tail = _group_shape(cfg)
+    acfg = _attn_cfg(cfg)
+    ks = jax.random.split(key, 6 + cfg.num_layers)
+
+    def mamba_block(i):
+        return {"norm": norm_init(cfg.d_model, dtype), "mamba": mamba2_init(ks[6 + i], cfg, dtype)}
+
+    groups = [mamba_block(g * P + j) for g in range(G) for j in range(P)]
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    grouped = jax.tree.map(
+        lambda x: x.reshape(G, P, *x.shape[1:]), stack(groups)
+    )
+
+    k1, k2, k3 = jax.random.split(ks[0], 3)
+    params = {
+        "embed": embedding_init(ks[1], cfg.padded_vocab, cfg.d_model, dtype),
+        "groups": grouped,
+        "shared_attn": {
+            "attn": attn.gqa_init(k1, acfg, dtype),
+            "mlp": mlp_init(k2, acfg.d_model, acfg.d_ff, acfg, dtype),
+            "mlp_norm": norm_init(acfg.d_model, dtype),
+            "down": normal_init(k3, (acfg.d_model, cfg.d_model), acfg.d_model**-0.5, dtype),
+        },
+        # per-invocation adapters (the non-shared part of Zamba2's scheme)
+        "group_norms": jnp.ones((G, 2 * cfg.d_model), dtype),
+        "final_norm": norm_init(cfg.d_model, dtype),
+        "lm_head": normal_init(ks[2], (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, dtype),
+    }
+    if tail:
+        params["tail"] = stack([mamba_block(G * P + j) for j in range(tail)])
+    return params
+
+
+def _rms_gain(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    out = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _shared_attn_full(sp, acfg, cfg, h, h0, gain, *, use_flash=False):
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = _rms_gain(x, gain)
+    a = attn.gqa_full(sp["attn"], acfg, x, causal=True, use_flash=use_flash)
+    a = a + mlp_apply(sp["mlp"], _rms_gain(a, sp["mlp_norm"]["scale"]), acfg)
+    return h + a @ sp["down"]
+
+
+def forward(params, cfg, tokens, *, use_scan=True, use_pallas=False, use_flash=False):
+    _, norm = make_norm(cfg)
+    P, G, tail = _group_shape(cfg)
+    acfg = _attn_cfg(cfg)
+    h0 = embed(params["embed"], tokens)
+    h = shard_activations(h0, None, None)
+
+    def mamba_body(p, h):
+        return h + mamba2_full(p["mamba"], cfg, norm(p["norm"], h), use_pallas=use_pallas)
+
+    mamba_body = jax.checkpoint(mamba_body)
+    shared = params["shared_attn"]
+    # remat the shared block too: its 2·d-wide attention scores otherwise
+    # stay live for the backward pass of every one of the G invocations
+    shared_body = jax.checkpoint(
+        lambda sp, h, h0, gain: _shared_attn_full(sp, acfg, cfg, h, h0, gain, use_flash=use_flash)
+    )
+
+    def group_body(h, xs):
+        gp, gain = xs  # gp: (P, ...) stacked mamba blocks
+        if use_scan:
+            h, _ = jax.lax.scan(lambda c, p: (mamba_body(p, c), None), h, gp)
+        else:
+            for j in range(P):
+                h = mamba_body(jax.tree.map(lambda x: x[j], gp), h)
+        h = shared_body(shared, h, h0, gain)
+        return h, None
+
+    if use_scan:
+        h, _ = jax.lax.scan(group_body, h, (params["groups"], params["group_norms"]))
+    else:
+        for g in range(G):
+            gp = jax.tree.map(lambda x: x[g], params["groups"])
+            h, _ = group_body(h, (gp, params["group_norms"][g]))
+
+    if tail:
+        if use_scan:
+            h, _ = jax.lax.scan(lambda c, p: (mamba_body(p, c), None), h, params["tail"])
+        else:
+            T = jax.tree.leaves(params["tail"])[0].shape[0]
+            for j in range(T):
+                h = mamba_body(jax.tree.map(lambda x: x[j], params["tail"]), h)
+
+    h = norm(params["final_norm"], h)
+    return shard_activations(h @ params["lm_head"], None, "model")
+
+
+def loss_fn(params, cfg, batch, *, use_scan=True, use_pallas=False, use_flash=False):
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens[:, :-1], use_scan=use_scan,
+                     use_pallas=use_pallas, use_flash=use_flash)
+    return cross_entropy(logits, tokens[:, 1:], cfg.vocab_size)
+
+
+def init_cache(params, cfg, batch, cache_len):
+    dtype = _dtype(cfg)
+    P, G, tail = _group_shape(cfg)
+    acfg = _attn_cfg(cfg)
+    KV, hd = acfg.num_kv_heads, acfg.resolved_head_dim
+    one = mamba2_init_cache(cfg, batch, dtype)
+    return {
+        "groups": jax.tree.map(lambda x: jnp.broadcast_to(x[None, None], (G, P) + x.shape), one),
+        "tail": jax.tree.map(lambda x: jnp.broadcast_to(x[None], (tail,) + x.shape), one)
+        if tail
+        else None,
+        "attn_k": jnp.zeros((G, batch, cache_len, KV, hd), dtype),
+        "attn_v": jnp.zeros((G, batch, cache_len, KV, hd), dtype),
+    }
+
+
+def decode_step(params, cfg, token, cache, pos, *, use_scan=True):
+    _, norm = make_norm(cfg)
+    P, G, tail = _group_shape(cfg)
+    acfg = _attn_cfg(cfg)
+    h0 = embed(params["embed"], token[:, None])
+    h = h0
+    shared = params["shared_attn"]
+
+    def mamba_step(h, p, c):
+        out, c2 = mamba2_decode(p["mamba"], cfg, norm(p["norm"], h), c, pos)
+        return h + out, c2
+
+    def group_body(h, xs):
+        gp, gc, gain, kc, vc = xs
+
+        def inner(c, pc):
+            p, cc = pc
+            h2, c2 = mamba_step(c, p, cc)
+            return h2, c2
+
+        if use_scan:
+            h, new_gc = jax.lax.scan(inner, h, (gp, gc))
+        else:
+            accs = []
+            for j in range(P):
+                h, c2 = inner(h, jax.tree.map(lambda x: x[j], (gp, gc)))
+                accs.append(c2)
+            new_gc = jax.tree.map(lambda *xs: jnp.stack(xs), *accs)
+        x = jnp.concatenate([h, h0], axis=-1)
+        x = _rms_gain(x, gain)
+        a, new_kv = attn.gqa_decode(shared["attn"], acfg, x, {"k": kc, "v": vc}, pos)
+        a = a + mlp_apply(shared["mlp"], _rms_gain(a, shared["mlp_norm"]["scale"]), acfg)
+        h = h + a @ shared["down"]
+        return h, (new_gc, new_kv["k"], new_kv["v"])
+
+    xs_all = (params["groups"], cache["groups"], params["group_norms"], cache["attn_k"], cache["attn_v"])
+    if use_scan:
+        h, (new_groups, nk, nv) = jax.lax.scan(group_body, h, xs_all)
+    else:
+        outs = []
+        for g in range(G):
+            h, o = group_body(h, jax.tree.map(lambda x: x[g], xs_all))
+            outs.append(o)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_groups, nk, nv = stacked
+
+    new_tail = cache.get("tail")
+    if tail:
+        def tail_body(c, pc):
+            p, cc = pc
+            return mamba_step(c, p, cc)
+
+        if use_scan:
+            h, new_tail = jax.lax.scan(tail_body, h, (params["tail"], cache["tail"]))
+        else:
+            accs = []
+            for j in range(tail):
+                h, c2 = tail_body(h, jax.tree.map(lambda x: x[j], (params["tail"], cache["tail"])))
+                accs.append(c2)
+            new_tail = jax.tree.map(lambda *xs: jnp.stack(xs), *accs)
+
+    h = norm(params["final_norm"], h)
+    logits = shard_activations((h @ params["lm_head"])[:, 0], "model")
+    new_cache = {"groups": new_groups, "tail": new_tail, "attn_k": nk, "attn_v": nv}
+    return logits, new_cache

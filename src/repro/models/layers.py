@@ -1,0 +1,118 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def make_norm(cfg):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm_init, lambda p, x: rmsnorm(p, x, cfg.norm_eps)
+    return layernorm_init, lambda p, x: layernorm(p, x, cfg.norm_eps)
+
+
+# -- rotary position embedding ------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x (..., seq, heads, head_dim); positions (..., seq) int."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+def mlp_init(key, d, f, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    scale = (2.0 / (d + f)) ** 0.5
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": normal_init(ks[0], (d, f), scale, dtype),
+            "w_in": normal_init(ks[1], (d, f), scale, dtype),
+            "w_out": normal_init(ks[2], (f, d), scale, dtype),
+        }
+    return {
+        "w_in": normal_init(ks[0], (d, f), scale, dtype),
+        "b_in": jnp.zeros((f,), dtype),
+        "w_out": normal_init(ks[1], (f, d), scale, dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_apply(params, x, cfg):
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_in"])
+        return h @ params["w_out"]
+    h = jax.nn.gelu(x @ params["w_in"] + params["b_in"])
+    return h @ params["w_out"] + params["b_out"]
+
+
+# -- embeddings / head ----------------------------------------------------------
+
+def embedding_init(key, vocab, d, dtype):
+    return {"table": normal_init(key, (vocab, d), d**-0.5, dtype)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def unembed(params, h, tied_table=None):
+    table = tied_table if tied_table is not None else params["table"]
+    return h @ table.T
+
+
+def cross_entropy(logits, labels, vocab):
+    """Mean token CE in f32 (logits may be bf16).
+
+    The gold-logit pick uses iota/where/sum instead of take_along_axis:
+    with vocab-sharded logits a gather would force an all-gather of the
+    full logits tensor, while the masked sum reduces shard-locally and
+    psums a scalar per token.
+    """
+    logits32 = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits32, axis=-1, keepdims=True))
+    shifted = logits32 - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    idx = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(idx == labels[..., None], shifted, 0.0), axis=-1)
+    return jnp.mean(lse - gold)

@@ -1,0 +1,110 @@
+"""Mixture-of-experts FFN with capacity-bounded token-choice top-k routing.
+
+EP-friendly formulation: tokens are routed *within groups* (a group = the
+tokens resident on one data shard in practice), and per (group, expert) the
+top-C tokens by gate score — among tokens that picked the expert in their
+top-k — are gathered, processed, and scatter-added back.  This keeps every
+shape static for SPMD, bounds expert work at capacity C, and avoids the
+Switch-style (T × E × C) one-hot dispatch tensor: only gather/scatter
+indices materialize.
+
+Under the production mesh the expert dimension shards over "model" (EP) and
+groups shard over ("pod","data") (DP): XLA inserts the all-to-all-like
+exchange at the gather/scatter boundaries.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activations
+from .layers import normal_init
+
+
+def moe_init(key, cfg, dtype):
+    d, f, E = cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    s = (2.0 / (d + f)) ** 0.5
+    p = {
+        "router": normal_init(ks[0], (d, E), d**-0.5, jnp.float32),
+        "experts": {
+            "w_gate": normal_init(ks[1], (E, d, f), s, dtype),
+            "w_in": normal_init(ks[2], (E, d, f), s, dtype),
+            "w_out": normal_init(ks[3], (E, f, d), s, dtype),
+        },
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = {
+            "w_gate": normal_init(ks[4], (d, fs), s, dtype),
+            "w_in": normal_init(jax.random.fold_in(ks[4], 1), (d, fs), s, dtype),
+            "w_out": normal_init(jax.random.fold_in(ks[4], 2), (fs, d), s, dtype),
+        }
+    return p
+
+
+def moe_apply(p, cfg, x, *, group_size: int = 2048):
+    """x (B, S, d) → (B, S, d).  aux: load-balance loss folded in return."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    flat = x.reshape(T, d)
+
+    g = max(T // group_size, 1)
+    gs = T // g
+    tokens = flat.reshape(g, gs, d)
+
+    gates = jax.nn.softmax(
+        (tokens.astype(jnp.float32) @ p["router"].astype(jnp.float32)), axis=-1
+    )  # (g, gs, E)
+
+    # token-choice top-k membership
+    topk_val, topk_idx = jax.lax.top_k(gates, k)  # (g, gs, k)
+    member = jnp.zeros((g, gs, E), jnp.float32)
+    member = jax.vmap(
+        jax.vmap(lambda m, idx, val: m.at[idx].set(val))
+    )(member, topk_idx, topk_val)  # gate value where chosen, else 0
+
+    # capacity per expert within the group
+    cap = max(int(cfg.capacity_factor * k * gs / E), 1)
+
+    # per (group, expert): top-C member tokens
+    scores = jnp.swapaxes(member, 1, 2)  # (g, E, gs)
+    sel_val, sel_idx = jax.lax.top_k(scores, cap)  # (g, E, C)
+    sel_mask = (sel_val > 0.0).astype(tokens.dtype)  # drop non-members
+
+    gathered = jnp.take_along_axis(
+        tokens[:, None], sel_idx[..., None], axis=2
+    )  # (g, E, C, d)
+    # EP layout: groups over data axes, experts over model — keeps the
+    # expert einsums local to their weight shard (one all-to-all-style
+    # exchange at the gather, not a full replication)
+    gathered = shard_activations(gathered, "model", None, None)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", gathered, p["experts"]["w_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", gathered, p["experts"]["w_in"]
+    )
+    h = shard_activations(h, "model", None, None)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["experts"]["w_out"])
+    expert_out = shard_activations(expert_out, "model", None, None)
+    expert_out = expert_out * (sel_val.astype(tokens.dtype) * sel_mask)[..., None]
+
+    out = jnp.zeros_like(tokens)
+    out = jax.vmap(
+        lambda o, idx, vals: o.at[idx.reshape(-1)].add(
+            vals.reshape(-1, vals.shape[-1])
+        )
+    )(out, sel_idx, expert_out)
+
+    out = out.reshape(B, S, d)
+    if cfg.num_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["w_gate"]) * (x @ sh["w_in"])
+        out = out + hs @ sh["w_out"]
+
+    # load-balance auxiliary (Switch): E·Σ_e f_e·P_e
+    importance = jnp.mean(gates, axis=(0, 1))  # (E,)
+    load = jnp.mean((member > 0).astype(jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(importance * load)
+    return out, aux

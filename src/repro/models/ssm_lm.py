@@ -1,0 +1,101 @@
+"""Mamba-2 language model (attention-free, sub-quadratic)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activations
+from .layers import cross_entropy, embed, embedding_init, make_norm, normal_init
+from .ssm import mamba2_decode, mamba2_full, mamba2_init, mamba2_init_cache
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    norm_init, _ = make_norm(cfg)
+    ks = jax.random.split(key, 2 + cfg.num_layers)
+    blocks = [
+        {"norm": norm_init(cfg.d_model, dtype), "mamba": mamba2_init(ks[2 + i], cfg, dtype)}
+        for i in range(cfg.num_layers)
+    ]
+    params = {
+        "embed": embedding_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *blocks),
+        "final_norm": norm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(ks[1], (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, dtype)
+    return params
+
+
+def _unembed(params, cfg, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = h @ params["lm_head"]
+    return shard_activations(logits, *([None] * (logits.ndim - 2)), "model")
+
+
+def forward(params, cfg, tokens, *, use_scan=True, use_pallas=False):
+    _, norm = make_norm(cfg)
+    h = embed(params["embed"], tokens)
+    h = shard_activations(h, None, None)
+
+    def body(p, h):
+        return h + mamba2_full(p["mamba"], cfg, norm(p["norm"], h), use_pallas=use_pallas)
+
+    body = jax.checkpoint(body)
+    if use_scan:
+        h, _ = jax.lax.scan(lambda c, p: (body(p, c), None), h, params["layers"])
+    else:
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+        for i in range(L):
+            h = body(jax.tree.map(lambda x: x[i], params["layers"]), h)
+    return _unembed(params, cfg, norm(params["final_norm"], h))
+
+
+def loss_fn(params, cfg, batch, *, use_scan=True, use_pallas=False):
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens[:, :-1], use_scan=use_scan, use_pallas=use_pallas)
+    return cross_entropy(logits, tokens[:, 1:], cfg.vocab_size)
+
+
+def init_cache(params, cfg, batch, cache_len):
+    # SSM cache is O(1) in sequence length — cache_len only for API parity.
+    one = mamba2_init_cache(cfg, batch, _dtype(cfg))
+    L = cfg.num_layers
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), one)
+
+
+def decode_step(params, cfg, token, cache, pos, *, use_scan=True):
+    _, norm = make_norm(cfg)
+    h = embed(params["embed"], token[:, None])
+
+    def body(h, pc):
+        p, c = pc
+        out, c2 = mamba2_decode(p["mamba"], cfg, norm(p["norm"], h), c, pos)
+        return h + out, c2
+
+    if use_scan:
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    else:
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+        outs = []
+        for i in range(L):
+            h, c2 = body(
+                h,
+                (
+                    jax.tree.map(lambda x: x[i], params["layers"]),
+                    jax.tree.map(lambda x: x[i], cache),
+                ),
+            )
+            outs.append(c2)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    h = norm(params["final_norm"], h)
+    return _unembed(params, cfg, h)[:, 0], new_cache

@@ -1,0 +1,291 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA families.
+
+Layers are scan-stacked (compile-friendly for 60–80 layer configs) with
+per-layer remat.  Heterogeneous prefixes (deepseek's first dense layer) are
+unrolled before the scan.  ``use_scan=False`` unrolls everything — used by
+the dry-run's FLOPs-extrapolation lowering at L ∈ {1, 2}.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activations, shard_cache_kv
+from . import attention as attn
+from .layers import cross_entropy, embed, embedding_init, make_norm, mlp_apply, mlp_init, normal_init
+from .moe import moe_apply, moe_init
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _attn_init(key, cfg, dtype):
+    return attn.mla_init(key, cfg, dtype) if cfg.attn_type == "mla" else attn.gqa_init(key, cfg, dtype)
+
+
+def block_init(key, cfg, dtype, *, moe: bool):
+    norm_init, _ = make_norm(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": norm_init(cfg.d_model, dtype),
+        "attn": _attn_init(k1, cfg, dtype),
+        "mlp_norm": norm_init(cfg.d_model, dtype),
+    }
+    if moe:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg, dtype)
+    return p
+
+
+def block_apply(p, cfg, h, *, moe: bool, use_flash=False, unroll=False):
+    _, norm = make_norm(cfg)
+    # SP: the residual stream lives sequence-sharded over "model"; XLA
+    # gathers seq only where attention genuinely needs it and the
+    # norm/MLP/residual work (otherwise replicated 16×) shards 16-way.
+    sp = ("model", None) if cfg.use_sp else (None, None)
+    h = shard_activations(h, *sp)
+    a = attn.mla_full(p["attn"], cfg, norm(p["attn_norm"], h)) if cfg.attn_type == "mla" \
+        else attn.gqa_full(p["attn"], cfg, norm(p["attn_norm"], h),
+                           use_flash=use_flash, unroll=unroll)
+    h = h + a
+    h = shard_activations(h, *sp)
+    x = norm(p["mlp_norm"], h)
+    if moe:
+        y, aux = moe_apply(p["moe"], cfg, x)
+    else:
+        y, aux = mlp_apply(p["mlp"], x, cfg), jnp.float32(0.0)
+    return h + y, aux
+
+
+def block_prefill(p, cfg, h, cache_len, *, moe: bool, unroll=False):
+    _, norm = make_norm(cfg)
+    x = norm(p["attn_norm"], h)
+    if cfg.attn_type == "mla":
+        a, cache = attn.mla_prefill(p["attn"], cfg, x, cache_len)
+    else:
+        a, cache = attn.gqa_prefill(p["attn"], cfg, x, cache_len, unroll=unroll)
+    h = h + a
+    x = norm(p["mlp_norm"], h)
+    y = moe_apply(p["moe"], cfg, x)[0] if moe else mlp_apply(p["mlp"], x, cfg)
+    return h + y, cache
+
+
+def block_decode(p, cfg, h, cache, pos, *, moe: bool):
+    _, norm = make_norm(cfg)
+    x = norm(p["attn_norm"], h)
+    if cfg.attn_type == "mla":
+        a, cache = attn.mla_decode(p["attn"], cfg, x, cache, pos)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], cfg, x, cache, pos)
+    h = h + a
+    x = norm(p["mlp_norm"], h)
+    y = moe_apply(p["moe"], cfg, x)[0] if moe else mlp_apply(p["mlp"], x, cfg)
+    return h + y, cache
+
+
+def _layer_is_moe(cfg, i):
+    return cfg.num_experts > 0 and i >= cfg.first_dense_layers
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init(cfg, key):
+    dtype = _dtype(cfg)
+    norm_init, _ = make_norm(cfg)
+    kE, kH, *kls = jax.random.split(key, 2 + cfg.num_layers)
+    params = {"embed": embedding_init(kE, cfg.padded_vocab, cfg.d_model, dtype)}
+
+    n_prefix = cfg.first_dense_layers if cfg.num_experts else 0
+    prefix = [block_init(kls[i], cfg, dtype, moe=False) for i in range(n_prefix)]
+    body = [
+        block_init(kls[i], cfg, dtype, moe=_layer_is_moe(cfg, i))
+        for i in range(n_prefix, cfg.num_layers)
+    ]
+    if prefix:
+        params["prefix_layers"] = _stack(prefix) if len(prefix) > 1 else _stack(prefix)
+    params["layers"] = _stack(body)
+    params["final_norm"] = norm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(kH, (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, dtype)
+    return params
+
+
+def _unembed(params, cfg, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].T
+    else:
+        logits = h @ params["lm_head"]
+    # vocab-shard the logits (they dominate activation memory otherwise)
+    return shard_activations(logits, *([None] * (logits.ndim - 2)), "model")
+
+
+def forward(params, cfg, tokens, *, use_scan=True, use_flash=False):
+    """tokens (B, S) → (logits (B, S, V), aux)."""
+    _, norm = make_norm(cfg)
+    h = embed(params["embed"], tokens)
+    h = shard_activations(h, None, None)
+    n_prefix = cfg.first_dense_layers if cfg.num_experts else 0
+    aux_total = jnp.float32(0.0)
+
+    if n_prefix:
+        def pref_body(h_aux, p):
+            h, aux = h_aux
+            h, a = block_apply(p, cfg, h, moe=False, use_flash=use_flash)
+            return (h, aux + a), None
+
+        (h, aux_total), _ = jax.lax.scan(
+            pref_body, (h, aux_total), params["prefix_layers"]
+        )
+
+    moe = cfg.num_experts > 0
+    _block = partial(block_apply, cfg=cfg, moe=moe, use_flash=use_flash,
+                     unroll=not use_scan)
+    body = jax.checkpoint(lambda p, h: _block(p, h=h))
+
+    if use_scan:
+        def scan_body(carry, p):
+            h, aux = carry
+            h, a = body(p, h)
+            return (h, aux + a), None
+
+        (h, aux_total), _ = jax.lax.scan(scan_body, (h, aux_total), params["layers"])
+    else:
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+        for i in range(L):
+            p_i = jax.tree.map(lambda x: x[i], params["layers"])
+            h, a = body(p_i, h)
+            aux_total = aux_total + a
+
+    h = norm(params["final_norm"], h)
+    return _unembed(params, cfg, h), aux_total
+
+
+def loss_fn(params, cfg, batch, *, use_scan=True, use_flash=False, aux_weight=0.01):
+    tokens = batch["tokens"]
+    logits, aux = forward(params, cfg, tokens[:, :-1], use_scan=use_scan, use_flash=use_flash)
+    ce = cross_entropy(logits, tokens[:, 1:], cfg.vocab_size)
+    return ce + aux_weight * aux
+
+
+def _layer_list(cfg):
+    n_prefix = cfg.first_dense_layers if cfg.num_experts else 0
+    return n_prefix
+
+
+def init_cache(params, cfg, batch, cache_len):
+    """Zero decode cache (fixed capacity)."""
+    dtype = _dtype(cfg)
+    L = cfg.num_layers - (_layer_list(cfg))
+    n_prefix = _layer_list(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def one(n):
+        if cfg.attn_type == "mla":
+            return {
+                "c_kv": jnp.zeros((n, batch, cache_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((n, batch, cache_len, cfg.rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((n, batch, cache_len, KV, hd), dtype),
+            "v": jnp.zeros((n, batch, cache_len, KV, hd), dtype),
+        }
+
+    cache = {"layers": one(L)}
+    if n_prefix:
+        cache["prefix_layers"] = one(n_prefix)
+    return cache
+
+
+def _shard_cache(cfg, cache):
+    if cfg.attn_type == "mla":
+        return cache  # latent cache: (n,B,T,r) — batch-sharded via activations
+    return {
+        "k": jax.vmap(shard_cache_kv)(cache["k"])
+        if cache["k"].ndim == 5
+        else shard_cache_kv(cache["k"]),
+        "v": jax.vmap(shard_cache_kv)(cache["v"])
+        if cache["v"].ndim == 5
+        else shard_cache_kv(cache["v"]),
+    }
+
+
+def decode_step(params, cfg, token, cache, pos, *, use_scan=True):
+    """token (B,), pos (B,) → (logits (B, V), new cache)."""
+    _, norm = make_norm(cfg)
+    h = embed(params["embed"], token[:, None])
+    n_prefix = _layer_list(cfg)
+    moe = cfg.num_experts > 0
+
+    new_cache = {}
+    if n_prefix:
+        def pre_body(h, pc):
+            p, c = pc
+            h, c2 = block_decode(p, cfg, h, c, pos, moe=False)
+            return h, c2
+
+        h, new_cache["prefix_layers"] = jax.lax.scan(
+            pre_body, h, (params["prefix_layers"], cache["prefix_layers"])
+        )
+
+    if use_scan:
+        def body(h, pc):
+            p, c = pc
+            h, c2 = block_decode(p, cfg, h, c, pos, moe=moe)
+            return h, c2
+
+        h, new_cache["layers"] = jax.lax.scan(body, h, (params["layers"], cache["layers"]))
+    else:
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+        outs = []
+        for i in range(L):
+            p_i = jax.tree.map(lambda x: x[i], params["layers"])
+            c_i = jax.tree.map(lambda x: x[i], cache["layers"])
+            h, c2 = block_decode(p_i, cfg, h, c_i, pos, moe=moe)
+            outs.append(c2)
+        new_cache["layers"] = _stack(outs)
+
+    h = norm(params["final_norm"], h)
+    return _unembed(params, cfg, h)[:, 0], new_cache
+
+
+def prefill(params, cfg, tokens, cache_len, *, use_scan=True):
+    """tokens (B, S) → (last-token logits, serving cache)."""
+    _, norm = make_norm(cfg)
+    h = embed(params["embed"], tokens)
+    h = shard_activations(h, None, None)
+    n_prefix = _layer_list(cfg)
+    moe = cfg.num_experts > 0
+
+    new_cache = {}
+    if n_prefix:
+        def pre_body(h, p):
+            h, c = block_prefill(p, cfg, h, cache_len, moe=False)
+            return h, c
+
+        h, new_cache["prefix_layers"] = jax.lax.scan(pre_body, h, params["prefix_layers"])
+
+    if use_scan:
+        def body(h, p):
+            h, c = block_prefill(p, cfg, h, cache_len, moe=moe)
+            return h, c
+
+        h, new_cache["layers"] = jax.lax.scan(body, h, params["layers"])
+    else:
+        L = jax.tree.leaves(params["layers"])[0].shape[0]
+        outs = []
+        for i in range(L):
+            p_i = jax.tree.map(lambda x: x[i], params["layers"])
+            h, c = block_prefill(p_i, cfg, h, cache_len, moe=moe, unroll=True)
+            outs.append(c)
+        new_cache["layers"] = _stack(outs)
+
+    h = norm(params["final_norm"], h[:, -1:])
+    return _unembed(params, cfg, h)[:, 0], new_cache

@@ -1,0 +1,8 @@
+"""Optimizers, schedules, clipping, gradient compression — built here
+(no optax dependency)."""
+
+from .adam import adam, adamw
+from .adafactor import adafactor
+from .schedules import constant, cosine_decay, linear_warmup_cosine
+from .clipping import clip_by_global_norm, global_norm
+from .compression import int8_compress, int8_decompress, compressed_psum

@@ -1,0 +1,71 @@
+"""Adafactor (Shazeer & Stern 2018) — sublinear-memory optimizer for the
+≥100B configs where even sharded Adam moments strain HBM.
+
+Factored second moment for rank ≥ 2 leaves (row/col running averages),
+full second moment for vectors/scalars. No first moment (β1 = 0 variant).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict  # row second moments   (or full v for rank<2)
+    vc: dict  # col second moments   (or empty placeholder)
+
+
+def _decay(step, d=0.8):
+    return 1.0 - step ** (-d)
+
+
+def adafactor(lr=1e-2, eps=1e-30, clip_threshold=1.0, min_dim_factored=2):
+    sched = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        def init_leaf(p):
+            if p.ndim >= min_dim_factored:
+                vr = jnp.zeros(p.shape[:-1], jnp.float32)
+                vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return vr, vc
+            return jnp.zeros(p.shape, jnp.float32), jnp.zeros((1,), jnp.float32)
+
+        leaves = jax.tree.map(init_leaf, params)
+        vr = jax.tree.map(lambda t: t[0], leaves, is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda t: t[1], leaves, is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState(jnp.zeros((), jnp.int32), vr, vc)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        stepf = step.astype(jnp.float32)
+        beta2 = _decay(stepf)
+        lr_t = sched(stepf)
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if p.ndim >= min_dim_factored:
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.clip(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                upd_ = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+            else:
+                vr = beta2 * vr + (1 - beta2) * g2
+                upd_ = g32 / jnp.sqrt(vr)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(upd_ * upd_) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr_t * upd_
+            return new_p.astype(p.dtype), vr, vc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        vr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        vc = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdafactorState(step, vr, vc)
+
+    return init, update

@@ -1,0 +1,25 @@
+"""Learning-rate schedules."""
+
+import jax.numpy as jnp
+
+
+def constant(value):
+    return lambda step: jnp.float32(value)
+
+
+def cosine_decay(peak, total_steps, floor=0.0):
+    def fn(step):
+        frac = jnp.clip(step / total_steps, 0.0, 1.0)
+        return floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+
+    return fn
+
+
+def linear_warmup_cosine(peak, warmup_steps, total_steps, floor=0.0):
+    cos = cosine_decay(peak, max(total_steps - warmup_steps, 1), floor)
+
+    def fn(step):
+        warm = peak * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,90 @@
+"""Chunked (flash-style XLA) attention ≡ reference SDPA; MLA variants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models.attention import _sdpa, _sdpa_chunked
+
+
+class TestChunkedSDPA:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (96, 32)])
+    def test_matches_reference(self, causal, S, chunk):
+        key = jax.random.PRNGKey(0)
+        kq, kk, kv = jax.random.split(key, 3)
+        B, H, KV, hd = 2, 8, 2, 16
+        q = jax.random.normal(kq, (B, S, H, hd))
+        k = jax.random.normal(kk, (B, S, KV, hd))
+        v = jax.random.normal(kv, (B, S, KV, hd))
+        ref = _sdpa(q, k, v, causal=causal)
+        out = _sdpa_chunked(q, k, v, causal=causal, q_chunk=chunk, kv_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    def test_gradients_match(self):
+        key = jax.random.PRNGKey(1)
+        B, S, H, KV, hd = 1, 64, 4, 2, 8
+        q = jax.random.normal(key, (B, S, H, hd))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, hd))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, hd))
+
+        g_ref = jax.grad(lambda q: jnp.sum(_sdpa(q, k, v, causal=True) ** 2))(q)
+        g_chk = jax.grad(
+            lambda q: jnp.sum(_sdpa_chunked(q, k, v, causal=True, q_chunk=16, kv_chunk=16) ** 2)
+        )(q)
+        np.testing.assert_allclose(np.asarray(g_chk), np.asarray(g_ref), rtol=2e-3, atol=2e-3)
+
+
+class TestChunkedGQAFull:
+    def test_config_toggle_equivalence(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        cfg_c = dataclasses.replace(cfg, chunked_attention=True, attn_chunk=8)
+        p = attn.gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+        ref = attn.gqa_full(p, cfg, x, causal=True)
+        out = attn.gqa_full(p, cfg_c, x, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-4, atol=3e-4)
+
+
+class TestChunkedMLA:
+    def test_config_toggle_equivalence(self):
+        cfg = get_config("minicpm3-4b").reduced()
+        cfg_c = dataclasses.replace(cfg, chunked_attention=True, attn_chunk=8)
+        p = attn.mla_init(jax.random.PRNGKey(2), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(3), (2, 32, cfg.d_model))
+        ref = attn.mla_full(p, cfg, x, causal=True)
+        out = attn.mla_full(p, cfg_c, x, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-4, atol=3e-4)
+
+    def test_chunked_mla_grads(self):
+        cfg = dataclasses.replace(
+            get_config("minicpm3-4b").reduced(), chunked_attention=True, attn_chunk=8
+        )
+        p = attn.mla_init(jax.random.PRNGKey(4), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(5), (1, 16, cfg.d_model))
+        g = jax.grad(lambda x: jnp.sum(attn.mla_full(p, cfg, x) ** 2))(x)
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+
+class TestTrainWithOptimizations:
+    """Loss must be identical with all §Perf toggles on (pure reformulations)."""
+
+    @pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b"])
+    def test_loss_invariant(self, arch):
+        from repro.models import build_model
+
+        cfg = get_config(arch).reduced()
+        cfg_o = dataclasses.replace(
+            cfg, chunked_attention=True, attn_chunk=8, use_sp=True,
+        )
+        b0, b1 = build_model(cfg), build_model(cfg_o)
+        params = b0.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, cfg.vocab_size)}
+        l0 = float(b0.loss(params, batch, True))
+        l1 = float(b1.loss(params, batch, True))
+        np.testing.assert_allclose(l0, l1, rtol=1e-4)

@@ -1,0 +1,110 @@
+"""Flash attention + SSD scan Pallas kernels vs jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import gqa_attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan, ssd_decode_step
+from repro.kernels.ssd_scan.ref import ssd_scan_ref, ssd_scan_chunked_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("sq,skv,dh", [(128, 128, 64), (256, 384, 32)])
+    def test_matches_ref(self, causal, sq, skv, dh):
+        if causal and sq != skv:
+            pytest.skip("causal requires square here")
+        key = jax.random.PRNGKey(0)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (2, 4, sq, dh))
+        k = jax.random.normal(kk, (2, 4, skv, dh))
+        v = jax.random.normal(kv, (2, 4, skv, dh))
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        ref = gqa_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    def test_gqa_grouping(self):
+        key = jax.random.PRNGKey(1)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (1, 8, 128, 32))  # 8 q heads
+        k = jax.random.normal(kk, (1, 2, 128, 32))  # 2 kv heads
+        v = jax.random.normal(kv, (1, 2, 128, 32))
+        out = flash_attention(q, k, v, causal=True, interpret=True)
+        ref = gqa_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        key = jax.random.PRNGKey(2)
+        q = jax.random.normal(key, (1, 2, 128, 64)).astype(jnp.bfloat16)
+        out = flash_attention(q, q, q, causal=True, interpret=True)
+        ref = gqa_attention_ref(q, q, q, causal=True)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref.astype(jnp.float32), rtol=3e-2, atol=3e-2
+        )
+
+    def test_block_invariance(self):
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (1, 2, 256, 32))
+        o1 = flash_attention(q, q, q, causal=True, bq=128, bk=128, interpret=True)
+        o2 = flash_attention(q, q, q, causal=True, bq=64, bk=256, interpret=True)
+        np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+
+def ssd_inputs(key, b=2, h=3, l=128, dh=16, ds=8):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, h, l, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, l)) - 1.0)
+    A = -jax.nn.softplus(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, l, ds))
+    C = jax.random.normal(ks[4], (b, l, ds))
+    return x, dt, A, B, C
+
+
+class TestSSD:
+    def test_chunked_jnp_equals_recurrence(self):
+        x, dt, A, B, C = ssd_inputs(jax.random.PRNGKey(0))
+        ref = ssd_scan_ref(x, dt, A, B, C)
+        chunked = ssd_scan_chunked_ref(x, dt, A, B, C, chunk=32)
+        np.testing.assert_allclose(chunked, ref, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("chunk", [32, 64, 128])
+    def test_pallas_matches_recurrence(self, chunk):
+        x, dt, A, B, C = ssd_inputs(jax.random.PRNGKey(1), l=256)
+        ref = ssd_scan_ref(x, dt, A, B, C)
+        out = ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, interpret=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+    def test_dtype_bf16(self):
+        x, dt, A, B, C = ssd_inputs(jax.random.PRNGKey(2), l=128)
+        xb = x.astype(jnp.bfloat16)
+        ref = ssd_scan_ref(x, dt, A, B, C)
+        out = ssd_scan_pallas(xb, dt, A, B, C, chunk=64, interpret=True)
+        np.testing.assert_allclose(
+            out.astype(jnp.float32), ref, rtol=5e-2, atol=5e-2
+        )
+
+    def test_shape_sweep(self):
+        for b, h, l, dh, ds in [(1, 1, 64, 8, 4), (2, 4, 192, 32, 16), (1, 2, 128, 64, 64)]:
+            x, dt, A, B, C = ssd_inputs(jax.random.PRNGKey(3), b, h, l, dh, ds)
+            ref = ssd_scan_ref(x, dt, A, B, C)
+            out = ssd_scan_pallas(x, dt, A, B, C, chunk=64, interpret=True)
+            np.testing.assert_allclose(out, ref, rtol=3e-3, atol=3e-3)
+
+    def test_decode_step_consistent_with_scan(self):
+        """Running the recurrent decode step over a sequence must equal the
+        parallel scan — the train/serve consistency invariant."""
+        x, dt, A, B, C = ssd_inputs(jax.random.PRNGKey(4), b=1, h=2, l=16, dh=8, ds=4)
+        ref = ssd_scan_ref(x, dt, A, B, C)
+        state = jnp.zeros((1, 2, 8, 4))
+        ys = []
+        for t in range(16):
+            state, y = ssd_decode_step(
+                state, x[:, :, t], dt[:, :, t], A, B[:, t], C[:, t]
+            )
+            ys.append(y)
+        out = jnp.stack(ys, axis=2)
+        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,137 @@
+"""mBCG correctness: solves, tridiagonal recovery, preconditioning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DenseOperator,
+    mbcg,
+    tridiag_matrices,
+    pivoted_cholesky_dense,
+    PivotedCholeskyPreconditioner,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_spd(key, n, cond=50.0):
+    """Random SPD with controlled condition number."""
+    k1, k2 = jax.random.split(key)
+    Q, _ = jnp.linalg.qr(jax.random.normal(k1, (n, n)))
+    evals = jnp.logspace(0, jnp.log10(cond), n)
+    return (Q * evals) @ Q.T
+
+
+def rbf_system(key, n, noise=0.1, ell=0.4):
+    x = jnp.sort(jax.random.uniform(key, (n,)))
+    K = jnp.exp(-((x[:, None] - x[None, :]) ** 2) / (2 * ell**2))
+    return K + noise * jnp.eye(n), x
+
+
+class TestSolves:
+    def test_matches_dense_solve_multi_rhs(self):
+        key = jax.random.PRNGKey(0)
+        A = random_spd(key, 60, cond=30.0)
+        B = jax.random.normal(jax.random.PRNGKey(1), (60, 7))
+        res = mbcg(DenseOperator(A).matmul, B, max_iters=60, tol=1e-10)
+        expected = jnp.linalg.solve(A, B)
+        np.testing.assert_allclose(res.solves, expected, rtol=2e-3, atol=2e-4)
+
+    def test_vector_rhs_squeeze(self):
+        key = jax.random.PRNGKey(2)
+        A = random_spd(key, 32, cond=10.0)
+        b = jax.random.normal(jax.random.PRNGKey(3), (32,))
+        res = mbcg(DenseOperator(A).matmul, b, max_iters=32, tol=1e-10)
+        assert res.solves.shape == (32,)
+        np.testing.assert_allclose(res.solves, jnp.linalg.solve(A, b), rtol=2e-3, atol=2e-4)
+
+    def test_early_convergence_masking(self):
+        """Identity system converges in 1 iter; masking must not corrupt it."""
+        n = 16
+        A = jnp.eye(n) * 2.0
+        b = jnp.ones((n, 3))
+        res = mbcg(DenseOperator(A).matmul, b, max_iters=10, tol=1e-8)
+        np.testing.assert_allclose(res.solves, b / 2.0, rtol=1e-6)
+        assert int(res.num_iters.max()) <= 2
+
+    def test_residual_reporting(self):
+        key = jax.random.PRNGKey(4)
+        A = random_spd(key, 48, cond=100.0)
+        b = jax.random.normal(jax.random.PRNGKey(5), (48, 2))
+        res = mbcg(DenseOperator(A).matmul, b, max_iters=48, tol=1e-9)
+        # f32 arithmetic floors the achievable residual around 1e-6–1e-5
+        assert float(res.residual_norm.max()) < 2e-5
+
+
+class TestTridiag:
+    def test_eigenvalue_recovery(self):
+        """Full-length CG tridiag of an SPD matrix reproduces its extreme
+        eigenvalues (Lanczos Ritz values converge outward-first)."""
+        key = jax.random.PRNGKey(6)
+        A = random_spd(key, 40, cond=25.0)
+        z = jax.random.normal(jax.random.PRNGKey(7), (40, 1))
+        res = mbcg(DenseOperator(A).matmul, z, max_iters=40, tol=0.0)
+        T = tridiag_matrices(res)[0]
+        ritz = jnp.linalg.eigvalsh(T)
+        evals = jnp.linalg.eigvalsh(A)
+        np.testing.assert_allclose(float(ritz.max()), float(evals.max()), rtol=1e-3)
+        np.testing.assert_allclose(float(ritz.min()), float(evals.min()), rtol=1e-2)
+
+    def test_identity_padding_after_convergence(self):
+        """Converged columns pad T with an identity block: quadrature of the
+        padded matrix must equal quadrature of the leading block."""
+        n = 24
+        A, _ = rbf_system(jax.random.PRNGKey(8), n, noise=0.5)
+        z = jax.random.normal(jax.random.PRNGKey(9), (n, 1))
+        res = mbcg(DenseOperator(A).matmul, z, max_iters=n, tol=1e-12)
+        T = tridiag_matrices(res)[0]
+        k = int(res.num_iters[0])
+        if k < n:
+            block = T[k:, k:]
+            np.testing.assert_allclose(block, jnp.eye(n - k), atol=1e-6)
+            np.testing.assert_allclose(T[:k, k:], 0.0, atol=1e-6)
+
+
+class TestPreconditioned:
+    def test_preconditioned_solve_correct(self):
+        """PCG must converge to the same solution, faster."""
+        key = jax.random.PRNGKey(10)
+        K, _ = rbf_system(key, 120, noise=0.01, ell=0.15)
+        A = K  # already K + σ²I
+        base = A - 0.01 * jnp.eye(120)
+        b = jax.random.normal(jax.random.PRNGKey(11), (120, 4))
+
+        plain = mbcg(DenseOperator(A).matmul, b, max_iters=120, tol=1e-10)
+
+        L = pivoted_cholesky_dense(base, 9)
+        P = PivotedCholeskyPreconditioner.build(L, 0.01)
+        pre = mbcg(
+            DenseOperator(A).matmul, b, precond_solve=P.solve, max_iters=120, tol=1e-10
+        )
+        # True relative residual (f32 floor ~1e-5 at cond ≈ 4e3)
+        true_res = jnp.linalg.norm(A @ pre.solves - b, axis=0) / jnp.linalg.norm(b, axis=0)
+        assert float(true_res.max()) < 1e-4
+        # Preconditioning slashes iteration count (paper Fig. 4: ~8x here)
+        assert int(pre.num_iters.max()) < int(plain.num_iters.max()) // 3
+
+    def test_precond_tridiag_matches_preconditioned_spectrum(self):
+        """T̃ from PCG tridiagonalizes P̂^{-1/2}ÂP̂^{-1/2}: its Ritz values
+        must lie within that operator's spectrum and hit its extremes."""
+        key = jax.random.PRNGKey(12)
+        K, _ = rbf_system(key, 64, noise=0.05, ell=0.2)
+        base = K - 0.05 * jnp.eye(64)
+        L = pivoted_cholesky_dense(base, 5)
+        P = PivotedCholeskyPreconditioner.build(L, 0.05)
+
+        z = jax.random.normal(jax.random.PRNGKey(13), (64, 1))
+        res = mbcg(DenseOperator(K).matmul, z, precond_solve=P.solve, max_iters=64, tol=0.0)
+        T = tridiag_matrices(res)[0]
+        k = int(res.num_iters[0])
+        ritz = jnp.linalg.eigvalsh(T[:k, :k])
+
+        Pd = P.matmul(jnp.eye(64))
+        evals_pre = jnp.linalg.eigvalsh(jnp.linalg.solve(Pd, K))
+        assert float(ritz.max()) <= float(evals_pre.max()) * 1.01
+        assert float(ritz.min()) >= float(evals_pre.min()) * 0.99

@@ -1,0 +1,97 @@
+"""Pivoted Cholesky + preconditioner: correctness against dense oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DenseOperator,
+    pivoted_cholesky,
+    pivoted_cholesky_dense,
+    PivotedCholeskyPreconditioner,
+)
+
+
+def rbf(key, n, ell=0.3):
+    x = jnp.sort(jax.random.uniform(key, (n,)))
+    return jnp.exp(-((x[:, None] - x[None, :]) ** 2) / (2 * ell**2))
+
+
+class TestPivotedCholesky:
+    def test_full_rank_is_exact(self):
+        key = jax.random.PRNGKey(0)
+        W = jax.random.normal(key, (20, 20))
+        K = W @ W.T + 0.5 * jnp.eye(20)
+        L = pivoted_cholesky_dense(K, 20)
+        np.testing.assert_allclose(L @ L.T, K, rtol=2e-4, atol=2e-4)
+
+    def test_trace_error_decreases_with_rank(self):
+        """Paper Lemma 2: Tr(K − L_k L_kᵀ) decays (exponentially for RBF)."""
+        K = rbf(jax.random.PRNGKey(1), 100)
+        errs = []
+        for k in [1, 2, 4, 8, 16]:
+            L = pivoted_cholesky_dense(K, k)
+            errs.append(float(jnp.trace(K - L @ L.T)))
+        assert all(a >= b - 1e-5 for a, b in zip(errs, errs[1:]))
+        # exponential-ish decay for RBF: rank 16 ≪ rank 1
+        assert errs[-1] < errs[0] * 1e-3
+
+    def test_residual_psd(self):
+        """E = K − L_k L_kᵀ stays PSD (Harbrecht et al.)."""
+        K = rbf(jax.random.PRNGKey(2), 60, ell=0.15)
+        for k in [3, 7]:
+            L = pivoted_cholesky_dense(K, k)
+            evals = jnp.linalg.eigvalsh(K - L @ L.T)
+            assert float(evals.min()) > -1e-4
+
+    def test_blackbox_row_access(self):
+        """Row-function interface must agree with the dense path."""
+        K = rbf(jax.random.PRNGKey(3), 50)
+        L1 = pivoted_cholesky_dense(K, 6)
+        L2 = pivoted_cholesky(lambda i: K[i], jnp.diagonal(K), 6)
+        np.testing.assert_allclose(L1, L2, atol=1e-6)
+
+    def test_rank_deficient_input_stops_cleanly(self):
+        """Exactly low-rank input: extra columns must be zero, no NaNs."""
+        U = jax.random.normal(jax.random.PRNGKey(4), (30, 3))
+        K = U @ U.T
+        L = pivoted_cholesky_dense(K, 8)
+        assert bool(jnp.all(jnp.isfinite(L)))
+        np.testing.assert_allclose(L @ L.T, K, atol=1e-3)
+
+
+class TestPreconditioner:
+    def test_woodbury_solve(self):
+        key = jax.random.PRNGKey(5)
+        L = jax.random.normal(key, (40, 5))
+        P = PivotedCholeskyPreconditioner.build(L, 0.3)
+        Pd = L @ L.T + 0.3 * jnp.eye(40)
+        R = jax.random.normal(jax.random.PRNGKey(6), (40, 4))
+        np.testing.assert_allclose(
+            P.solve(R), jnp.linalg.solve(Pd, R), rtol=1e-3, atol=1e-4
+        )
+
+    def test_logdet_matrix_determinant_lemma(self):
+        key = jax.random.PRNGKey(7)
+        L = jax.random.normal(key, (35, 4))
+        P = PivotedCholeskyPreconditioner.build(L, 0.2)
+        Pd = L @ L.T + 0.2 * jnp.eye(35)
+        expected = float(jnp.linalg.slogdet(Pd)[1])
+        np.testing.assert_allclose(float(P.logdet()), expected, rtol=1e-4)
+
+    def test_probe_covariance(self):
+        """sample_probes covariance → P̂ (statistically, many probes)."""
+        L = jax.random.normal(jax.random.PRNGKey(8), (12, 3)) * 0.5
+        P = PivotedCholeskyPreconditioner.build(L, 0.5)
+        Z = P.sample_probes(jax.random.PRNGKey(9), 20000, 12)
+        emp = (Z @ Z.T) / Z.shape[1]
+        Pd = L @ L.T + 0.5 * jnp.eye(12)
+        np.testing.assert_allclose(emp, Pd, atol=0.12)
+
+    def test_inv_quad(self):
+        L = jax.random.normal(jax.random.PRNGKey(10), (25, 4))
+        P = PivotedCholeskyPreconditioner.build(L, 0.7)
+        Pd = L @ L.T + 0.7 * jnp.eye(25)
+        Z = jax.random.normal(jax.random.PRNGKey(11), (25, 6))
+        expected = jnp.sum(Z * jnp.linalg.solve(Pd, Z), axis=0)
+        np.testing.assert_allclose(P.inv_quad(Z), expected, rtol=1e-3)

@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) for the system's numerical invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AddedDiagOperator,
+    DenseOperator,
+    LowRankRootOperator,
+    PivotedCholeskyPreconditioner,
+    ToeplitzOperator,
+    mbcg,
+    pivoted_cholesky_dense,
+    tridiag_matrices,
+)
+from repro.core.slq import slq_quadrature
+
+COMMON = dict(deadline=None, max_examples=15)
+
+
+def spd_from_seed(seed, n, cond):
+    key = jax.random.PRNGKey(seed)
+    Q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    evals = jnp.logspace(0, np.log10(cond), n)
+    return (Q * evals) @ Q.T
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(8, 48), st.floats(2.0, 100.0))
+def test_mbcg_solves_random_spd(seed, n, cond):
+    """∀ well-conditioned SPD A, random b: mBCG solve ≈ dense solve."""
+    A = spd_from_seed(seed, n, cond)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 2))
+    res = mbcg(DenseOperator(A).matmul, b, max_iters=n + 8, tol=1e-10)
+    true_res = jnp.linalg.norm(A @ res.solves - b, axis=0) / jnp.linalg.norm(b, axis=0)
+    assert float(true_res.max()) < 1e-3
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(10, 40), st.integers(1, 8))
+def test_pivoted_cholesky_monotone_and_psd(seed, n, k):
+    """Trace error decreases in k; residual stays PSD; L is real."""
+    W = jax.random.normal(jax.random.PRNGKey(seed), (n, n))
+    K = W @ W.T / n + 0.1 * jnp.eye(n)
+    errs = []
+    for kk in range(1, k + 1):
+        L = pivoted_cholesky_dense(K, kk)
+        assert bool(jnp.all(jnp.isfinite(L)))
+        E = K - L @ L.T
+        errs.append(float(jnp.trace(E)))
+        assert float(jnp.linalg.eigvalsh(E).min()) > -1e-2
+    assert all(a >= b - 1e-4 for a, b in zip(errs, errs[1:]))
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(8, 32), st.floats(0.05, 2.0))
+def test_woodbury_identity(seed, n, sigma2):
+    """P̂·P̂⁻¹ = I for every random low-rank + diagonal."""
+    L = jax.random.normal(jax.random.PRNGKey(seed), (n, 4))
+    P = PivotedCholeskyPreconditioner.build(L, sigma2)
+    R = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 3))
+    out = P.matmul(P.solve(R))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(R), rtol=2e-2, atol=2e-3)
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(10, 36))
+def test_slq_logdet_exact_at_full_rank(seed, n):
+    """With p = n iterations and an exact-trace probe basis, SLQ log-det
+    equals the dense log-det (quadrature is exact for Krylov degree n)."""
+    A = spd_from_seed(seed, n, 20.0)
+    # scaled identity-columns probe basis: Σᵢ eᵢᵀ log(A) eᵢ = Tr log A
+    Z = jnp.eye(n)
+    res = mbcg(DenseOperator(A).matmul, Z, max_iters=n + 8, tol=0.0)
+    T = tridiag_matrices(res)
+    quad = slq_quadrature(T)  # per-probe e₁ᵀ log T e₁ with z = eᵢ
+    est = float(jnp.sum(quad))  # ‖eᵢ‖² = 1 → plain sum
+    expected = float(jnp.linalg.slogdet(A)[1])
+    assert abs(est - expected) / abs(expected) < 5e-3
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(8, 40), st.integers(1, 6))
+def test_low_rank_operator_psd(seed, n, r):
+    """R Rᵀ + σ²I is PSD and matmul matches dense."""
+    R = jax.random.normal(jax.random.PRNGKey(seed), (n, r))
+    op = AddedDiagOperator(LowRankRootOperator(R), 0.3)
+    M = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 2))
+    dense = R @ R.T + 0.3 * jnp.eye(n)
+    np.testing.assert_allclose(np.asarray(op.matmul(M)), np.asarray(dense @ M), rtol=2e-4, atol=2e-4)
+    assert float(jnp.linalg.eigvalsh(dense).min()) > 0
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(4, 64))
+def test_toeplitz_fft_matmul(seed, m):
+    """FFT circulant-embedding matmul ≡ dense Toeplitz matmul, any size."""
+    col = jax.random.uniform(jax.random.PRNGKey(seed), (m,), minval=-1, maxval=1)
+    col = col.at[0].set(jnp.abs(col[0]) + 1.0)
+    op = ToeplitzOperator(col)
+    M = jax.random.normal(jax.random.PRNGKey(seed + 1), (m, 3))
+    np.testing.assert_allclose(
+        np.asarray(op.matmul(M)), np.asarray(op.to_dense() @ M), rtol=2e-3, atol=2e-3
+    )
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000))
+def test_cross_entropy_matches_naive(seed):
+    """Sharding-safe CE ≡ naive logsumexp CE."""
+    from repro.models.layers import cross_entropy
+
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (4, 8, 50)) * 3
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (4, 8), 0, 50)
+    naive = jnp.mean(
+        jax.scipy.special.logsumexp(logits, -1)
+        - jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    )
+    np.testing.assert_allclose(float(cross_entropy(logits, labels, 50)), float(naive), rtol=1e-5)
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_ssd_chunk_invariance(seed, log2_chunk):
+    """Chunked SSD is exactly chunk-size invariant (state-space duality)."""
+    from repro.kernels.ssd_scan.ref import ssd_scan_chunked_ref, ssd_scan_ref
+
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, h, l, dh, ds = 1, 2, 32, 8, 4
+    x = jax.random.normal(ks[0], (b, h, l, dh))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, h, l)))
+    A = -jax.nn.softplus(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (b, l, ds))
+    C = jax.random.normal(ks[4], (b, l, ds))
+    ref = ssd_scan_ref(x, dt, A, B, C)
+    out = ssd_scan_chunked_ref(x, dt, A, B, C, chunk=2**log2_chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=5e-3, atol=5e-3)
+
+
+@settings(**COMMON)
+@given(st.integers(0, 10_000))
+def test_int8_error_feedback_contract(seed):
+    """compressed value + stored error == original (exact decomposition)."""
+    from repro.optim.compression import int8_compress, int8_decompress
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (300,)) * 10
+    q, s, sh = int8_compress(x)
+    rec = int8_decompress(q, s, sh)
+    err = x - rec
+    np.testing.assert_allclose(np.asarray(rec + err), np.asarray(x), rtol=1e-6, atol=1e-6)
+    assert float(jnp.abs(err).max()) <= float(s.max()) * 0.51

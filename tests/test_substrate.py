@@ -1,0 +1,187 @@
+"""Substrate: data determinism, optimizers, checkpointing, fault tolerance,
+gradient compression."""
+
+import os
+import signal
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import RegressionStream, TokenStream
+from repro.distributed.fault import PreemptionHandler, StragglerWatchdog, restart_loop
+from repro.optim import (
+    adafactor,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    cosine_decay,
+    global_norm,
+    int8_compress,
+    int8_decompress,
+    linear_warmup_cosine,
+)
+
+
+class TestData:
+    def test_deterministic_by_step(self):
+        s1 = TokenStream(1000, 8, 32, seed=7)
+        s2 = TokenStream(1000, 8, 32, seed=7)
+        np.testing.assert_array_equal(s1.batch_at(13)["tokens"], s2.batch_at(13)["tokens"])
+        assert not np.array_equal(s1.batch_at(13)["tokens"], s1.batch_at(14)["tokens"])
+
+    def test_shard_disjointness_shapes(self):
+        full = TokenStream(1000, 8, 32, seed=0)
+        shards = [TokenStream(1000, 8, 32, seed=0, num_shards=4, shard=i) for i in range(4)]
+        assert all(s.batch_at(0)["tokens"].shape == (2, 33) for s in shards)
+
+    def test_regression_stream(self):
+        (Xtr, ytr), (Xte, yte) = RegressionStream(1000, 3, seed=1).split()
+        assert Xtr.shape == (900, 3) and yte.shape == (100,)
+        assert abs(float(jnp.mean(jnp.concatenate([ytr, yte])))) < 0.05
+
+
+class TestOptim:
+    def _quad(self, opt_ctor, steps=200, lr=0.1, tol=1e-2):
+        target = jnp.array([1.0, -2.0, 3.0])
+        init, update = opt_ctor
+        params = {"w": jnp.zeros(3)}
+        state = init(params)
+        for _ in range(steps):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state = update(g, state, params)
+        assert float(jnp.abs(params["w"] - target).max()) < tol
+
+    def test_adam_converges(self):
+        self._quad(adam(0.1))
+
+    def test_adamw_converges(self):
+        self._quad(adamw(0.1, weight_decay=0.0))
+
+    def test_adafactor_converges(self):
+        # adafactor's clipped updates need a decaying lr to settle
+        self._quad(adafactor(lambda s: 0.5 / jnp.sqrt(s)), steps=400, tol=5e-2)
+
+    def test_clipping(self):
+        g = {"a": jnp.ones(100) * 10}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(global_norm(clipped)) < 1.001
+        assert float(norm) > 99.0
+
+    def test_schedules(self):
+        s = linear_warmup_cosine(1.0, 10, 100)
+        assert float(s(0)) == 0.0
+        assert abs(float(s(10)) - 1.0) < 1e-5
+        assert float(s(100)) < 0.1
+        assert float(cosine_decay(1.0, 100)(100)) < 1e-6
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_gc(self):
+        tree = {"w": jnp.arange(12.0).reshape(3, 4), "nested": {"b": jnp.ones(5)}}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d, keep=2)
+            for step in [10, 20, 30, 40]:
+                ck.save(step, jax.tree.map(lambda x: x * step, tree))
+            assert ck.all_steps() == [30, 40]  # GC keeps last 2
+            step, restored = ck.restore_latest(tree)
+            assert step == 40
+            np.testing.assert_allclose(restored["w"], tree["w"] * 40)
+
+    def test_async_save(self):
+        tree = {"w": jnp.ones((100, 100))}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save_async(5, tree)
+            ck.wait()
+            assert ck.latest_step() == 5
+
+    def test_incomplete_checkpoint_ignored(self):
+        tree = {"w": jnp.ones(3)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(1, tree)
+            # simulate a crash mid-write: dir exists, no COMMIT marker
+            os.makedirs(os.path.join(d, "step_2"))
+            assert ck.latest_step() == 1
+
+    def test_restore_respects_dtype_and_structure(self):
+        tree = {"a": jnp.ones(3, jnp.bfloat16), "b": jnp.zeros((2, 2), jnp.int32)}
+        with tempfile.TemporaryDirectory() as d:
+            ck = Checkpointer(d)
+            ck.save(0, tree)
+            out = ck.restore(0, tree)
+            assert out["a"].dtype == jnp.bfloat16
+            assert out["b"].dtype == jnp.int32
+
+
+class TestFault:
+    def test_preemption_flag(self):
+        with PreemptionHandler() as h:
+            assert not h.requested
+            os.kill(os.getpid(), signal.SIGTERM)
+            assert h.requested
+
+    def test_watchdog_flags_stragglers(self):
+        import time
+
+        w = StragglerWatchdog(threshold=5.0)
+        for i in range(10):
+            w.step_start()
+            time.sleep(0.002)
+            w.step_end(i)
+        w.step_start()
+        time.sleep(0.05)  # 25x median
+        w.step_end(99)
+        assert w.straggler_count == 1
+        assert w.events[0]["step"] == 99
+
+    def test_restart_loop_recovers(self):
+        attempts = []
+
+        def run(attempt):
+            attempts.append(attempt)
+            if attempt < 2:
+                raise RuntimeError("boom")
+            return 42
+
+        assert restart_loop(run, max_restarts=3) == 42
+        assert attempts == [0, 1, 2]
+
+    def test_restart_loop_gives_up(self):
+        with pytest.raises(RuntimeError):
+            restart_loop(lambda a: (_ for _ in ()).throw(RuntimeError("x")), max_restarts=1)
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 5
+        q, scale, shape = int8_compress(x)
+        out = int8_decompress(q, scale, shape)
+        assert q.dtype == jnp.int8
+        # per-block max-abs quantization: error ≤ scale/2 per element
+        max_err = float(jnp.abs(out - x).max())
+        assert max_err <= float(scale.max()) * 0.51
+
+    def test_error_feedback_unbiased_over_steps(self):
+        """With error feedback, the accumulated applied update converges to
+        the accumulated true gradient (compression error doesn't drift)."""
+        from repro.optim.compression import int8_compress, int8_decompress
+
+        rng = np.random.default_rng(0)
+        true_sum = np.zeros(64)
+        applied_sum = np.zeros(64)
+        err = np.zeros(64)
+        for _ in range(200):
+            g = rng.normal(size=64) * 0.01
+            true_sum += g
+            corrected = g + err
+            q, s, sh = int8_compress(jnp.asarray(corrected))
+            local = np.asarray(int8_decompress(q, s, sh))
+            err = corrected - local
+            applied_sum += local
+        # residual bounded by one quantization step, not 200 of them
+        assert np.abs(true_sum - applied_sum).max() < 5e-4

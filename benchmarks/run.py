@@ -1,12 +1,20 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines and writes JSON artifacts to
-benchmarks/artifacts/.  Roofline/dry-run numbers come from
-``repro.launch.dryrun`` (they need 512 fake devices and live in their own
-process); everything here runs on the plain CPU backend.
+Prints ``name,us_per_call,derived`` CSV lines, writes JSON artifacts to
+benchmarks/artifacts/, and maintains the machine-readable perf trajectory
+file ``BENCH_speed.json`` at the repo root (n, wall-time, CG iterations,
+speedup vs Cholesky, batched-vs-loop and cached-vs-uncached speedups) so
+speed changes are tracked across PRs.
+
+Roofline/dry-run numbers come from ``repro.launch.dryrun`` (they need 512
+fake devices and live in their own process); everything here runs on the
+plain CPU backend.  ``--fast`` trims problem sizes for CI-budget runs.
 """
 
 import argparse
+import json
+import os
+import platform
 import sys
 import time
 
@@ -18,6 +26,11 @@ def main() -> None:
         default=None,
         help="comma-separated subset: solve_error,speed,mae,preconditioner,complexity",
     )
+    ap.add_argument(
+        "--fast",
+        action="store_true",
+        help="trimmed problem sizes (CI budget); affects the speed suite",
+    )
     args = ap.parse_args()
 
     from . import complexity, mae, preconditioner, solve_error, speed
@@ -26,7 +39,7 @@ def main() -> None:
         "solve_error": solve_error.run,  # paper Fig 1
         "preconditioner": preconditioner.run,  # paper Fig 4
         "complexity": complexity.run,  # paper §4/§5 claims
-        "speed": speed.run,  # paper Fig 2
+        "speed": speed.run,  # paper Fig 2 + batched/cache levers
         "mae": mae.run,  # paper Fig 3
     }
     wanted = args.only.split(",") if args.only else list(suites)
@@ -35,8 +48,33 @@ def main() -> None:
     t0 = time.time()
     for name in wanted:
         print(f"# --- {name} ---", flush=True)
-        suites[name]()
+        if name == "speed":
+            rows = suites[name](fast=args.fast)
+            _write_bench_speed(rows, fast=args.fast)
+        else:
+            suites[name]()
     print(f"# total {time.time()-t0:.1f}s", flush=True)
+
+
+def _write_bench_speed(rows, *, fast: bool) -> None:
+    """BENCH_speed.json at the repo root: the cross-PR perf trajectory."""
+    import jax
+
+    path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_speed.json")
+    payload = {
+        "schema": 1,
+        "fast_mode": fast,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "rows": rows,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    print(f"# wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

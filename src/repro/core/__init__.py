@@ -13,6 +13,7 @@ from .linear_operator import (
     ScaledOperator,
     SumOperator,
     AddedDiagOperator,
+    BatchDenseOperator,
     LowRankRootOperator,
     ToeplitzOperator,
     KroneckerOperator,
@@ -31,6 +32,10 @@ from .distributed import ShardedKernelOperator
 from .inference import (
     BBMMSettings,
     InferenceState,
+    PosteriorCache,
+    build_posterior_cache,
+    cached_mean,
+    cached_inv_quad,
     inv_quad_logdet,
     engine_state,
     marginal_log_likelihood,

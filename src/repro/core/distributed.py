@@ -72,6 +72,7 @@ class ShardedKernelOperator(LinearOperator):
     data_axes: tuple = static_field(default=("data",))
     chunk: int = static_field(default=8192)
     compute_dtype: str = static_field(default="float32")  # bf16 tiles → 2× MXU rate
+    mesh: object = static_field(default=None)  # explicit mesh (else live context)
 
     @property
     def shape(self):
@@ -83,10 +84,20 @@ class ShardedKernelOperator(LinearOperator):
         return self.X.dtype
 
     def matmul(self, M):
+        from repro.distributed.sharding import (
+            compat_shard_map,
+            current_mesh,
+            mesh_axis_sizes,
+        )
+
         squeeze = M.ndim == 1
         if squeeze:
             M = M[:, None]
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = self.mesh if self.mesh is not None else current_mesh()
+        sizes = mesh_axis_sizes(mesh)
+        shards = 1
+        for a in self.data_axes:
+            shards *= sizes[a]
         axes = self.data_axes
         chunk = self.chunk
         # kernel hyperparameters enter as explicit (replicated) shard_map
@@ -103,21 +114,17 @@ class ShardedKernelOperator(LinearOperator):
                 X_full = X_full.astype(jnp.bfloat16)
             M_full = jax.lax.all_gather(M_loc, axes, axis=0, tiled=True)
             # rows owned by this shard
-            shards = 1
-            for a in axes:
-                shards *= jax.lax.axis_size(a)
             idx = jax.lax.axis_index(axes)
             n_loc = X_full.shape[0] // shards
             X_loc = jax.lax.dynamic_slice_in_dim(X_full, idx * n_loc, n_loc, axis=0)
             out = _local_block_matmul(kernel, X_loc, X_full, M_full, chunk)
             return out.astype(jnp.float32)
 
-        out = jax.shard_map(
+        out = compat_shard_map(
             body,
-            mesh=mesh,
+            mesh,
             in_specs=(tuple(P() for _ in kern_leaves), P(None, None), P(axes, None)),
             out_specs=P(axes, None),
-            check_vma=False,
         )(tuple(kern_leaves), self.X, M)
         return out[:, 0] if squeeze else out
 

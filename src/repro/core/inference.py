@@ -18,23 +18,35 @@ both realized as one ``jax.vjp`` of the blackbox matmul — so any model
 expressible as a matmul routine gets exact-in-expectation MLL gradients with
 no hand-derived derivative rules (this is the "blackbox" in BBMM, made
 stricter than the paper: JAX synthesizes the (∂K̂/∂θ)·M routine too).
+
+Batching: ``y`` may carry leading batch dims (b, n) — e.g. b hyperparameter
+restarts or b output heads — provided ``op.matmul`` broadcasts over the same
+dims (dense/batched operators do).  The whole engine then runs as ONE fused
+mBCG program: per iteration a single (b, n, t) matmul instead of b separate
+engine calls.  Probe randomness is shared across the batch, so a batched run
+is numerically identical to a Python loop of unbatched runs with one key.
+
+Serving: ``build_posterior_cache`` runs the engine once and packages every
+reusable solve (K̂⁻¹y, probe solves, an orthonormal Krylov basis with its
+Rayleigh–Ritz Gram factor, the preconditioner factors) into a
+:class:`PosteriorCache` pytree.  Repeated posterior queries then cost
+O(n·m) — no CG — see the ``gp`` model classes.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .linear_operator import LinearOperator
-from .mbcg import mbcg
+from .mbcg import mbcg, tridiag_matrices
 from .preconditioner import build_preconditioner
 from .slq import logdet_from_mbcg, slq_quadrature
-from .mbcg import tridiag_matrices
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,50 +61,104 @@ class BBMMSettings:
 
 
 class InferenceState(NamedTuple):
-    """Every quantity a downstream consumer might want from one engine call."""
+    """Every quantity a downstream consumer might want from one engine call.
 
-    solve_y: jax.Array  # (n,)  K̂⁻¹y
-    inv_quad: jax.Array  # yᵀK̂⁻¹y
-    logdet: jax.Array  # log|K̂| estimate
+    Leading batch dims (if any) mirror those of ``y``.
+    """
+
+    solve_y: jax.Array  # (..., n)  K̂⁻¹y
+    inv_quad: jax.Array  # (...,) yᵀK̂⁻¹y
+    logdet: jax.Array  # (...,) log|K̂| estimate
+    probe_solves: jax.Array  # (..., n, t) K̂⁻¹zᵢ
+    probes: jax.Array  # (..., n, t) zᵢ
+    precond_probes: jax.Array  # (..., n, t) P̂⁻¹zᵢ
+    cg_iters: jax.Array  # (..., t+1) iterations per RHS
+    residual: jax.Array  # (..., t+1) final relative residuals
+
+
+class PosteriorCache(NamedTuple):
+    """Reusable posterior-solve state for cheap repeated predictions.
+
+    Built once by :func:`build_posterior_cache` (one engine call + one extra
+    blackbox matmul), consumed by the ``predict_cached`` paths of
+    ``repro.gp`` models:
+
+      * mean queries reuse ``alpha`` — O(n·s), bitwise identical to the
+        uncached path, zero CG iterations;
+      * variance queries use the Rayleigh–Ritz pair (``basis``, ``gram_chol``):
+        k*ᵀK̂⁻¹k* ≈ vᵀG⁻¹v with v = basisᵀk*, G = basisᵀK̂basis — O(n·m)
+        per query and *provably conservative* (the Galerkin projection never
+        exceeds the true inverse quadratic form, so the cached posterior
+        variance never undershoots the exact one).
+    """
+
+    alpha: jax.Array  # (n,)  K̂⁻¹y
+    basis: jax.Array | None  # (n, m) orthonormal Krylov cache columns
+    gram_chol: jax.Array | None  # (m, m) chol(basisᵀ K̂ basis)
+    # basis/gram_chol are None when built with variance_cache=False
+    probes: jax.Array  # (n, t)  zᵢ
     probe_solves: jax.Array  # (n, t) K̂⁻¹zᵢ
-    probes: jax.Array  # (n, t) zᵢ
-    precond_probes: jax.Array  # (n, t) P̂⁻¹zᵢ
-    cg_iters: jax.Array  # (t+1,) iterations per RHS
-    residual: jax.Array  # (t+1,) final relative residuals
+    precond: Any  # preconditioner factors (reused by uncached predict solves)
+    inv_quad: jax.Array  # yᵀK̂⁻¹y (diagnostic / MLL reuse)
+    logdet: jax.Array  # log|K̂| estimate (diagnostic / MLL reuse)
+    cg_iters: jax.Array  # (t+1,) iterations the build used per RHS
 
 
-def _engine_forward(op: LinearOperator, y: jax.Array, key, settings: BBMMSettings):
-    n = y.shape[0]
+def _run_engine(
+    op: LinearOperator,
+    y: jax.Array,
+    key,
+    settings: BBMMSettings,
+    *,
+    return_basis: bool = False,
+    with_logdet: bool = True,
+):
+    """The shared engine forward pass: preconditioner + probes + ONE mBCG
+    over [y | Z], probe tridiag slicing and (optionally) the SLQ log-det.
+
+    Returns (precond, Z, res, probe_solves, logdet) with leading batch dims
+    mirroring y's."""
+    n = y.shape[-1]
+    batch_shape = y.shape[:-1]
     precond = build_preconditioner(
         op, settings.precond_rank, jitter=settings.precond_jitter
     )
     Z = precond.sample_probes(key, settings.num_probes, n).astype(y.dtype)
-    B = jnp.concatenate([y[:, None], Z], axis=1)
+    Z = jnp.broadcast_to(Z, (*batch_shape, n, settings.num_probes))
+    B = jnp.concatenate([y[..., None], Z], axis=-1)
 
+    solver = op.prepare()
     res = mbcg(
-        op.matmul,
+        solver.matmul,
         B,
         precond_solve=precond.solve,
         max_iters=settings.max_cg_iters,
         tol=settings.cg_tol,
+        return_basis=return_basis,
     )
-    u = res.solves[:, 0]
-    probe_solves = res.solves[:, 1:]
+    probe_solves = res.solves[..., 1:]
 
-    probe_res = res._replace(
-        solves=probe_solves,
-        tridiag_alpha=res.tridiag_alpha[1:],
-        tridiag_beta=res.tridiag_beta[1:],
-        active_steps=res.active_steps[1:],
-        num_iters=res.num_iters[1:],
-        residual_norm=res.residual_norm[1:],
-    )
-    logdet = logdet_from_mbcg(probe_res, precond.inv_quad(Z), precond.logdet())
-    inv_quad = jnp.dot(y, u)
+    if with_logdet:
+        probe_res = res._replace(
+            solves=probe_solves,
+            tridiag_alpha=res.tridiag_alpha[..., 1:, :],
+            tridiag_beta=res.tridiag_beta[..., 1:, :],
+            active_steps=res.active_steps[..., 1:, :],
+            num_iters=res.num_iters[..., 1:],
+            residual_norm=res.residual_norm[..., 1:],
+        )
+        logdet = logdet_from_mbcg(probe_res, precond.inv_quad(Z), precond.logdet())
+    else:
+        logdet = jnp.float32(jnp.nan)  # not computed in a mean-only build
+    return precond, Z, res, probe_solves, logdet
 
-    state = InferenceState(
+
+def _engine_forward(op: LinearOperator, y: jax.Array, key, settings: BBMMSettings):
+    precond, Z, res, probe_solves, logdet = _run_engine(op, y, key, settings)
+    u = res.solves[..., 0]
+    return InferenceState(
         solve_y=u,
-        inv_quad=inv_quad,
+        inv_quad=jnp.sum(y * u, axis=-1),
         logdet=logdet,
         probe_solves=probe_solves,
         probes=Z,
@@ -100,7 +166,6 @@ def _engine_forward(op: LinearOperator, y: jax.Array, key, settings: BBMMSetting
         cg_iters=res.num_iters,
         residual=res.residual_norm,
     )
-    return state
 
 
 def inv_quad_logdet(
@@ -109,7 +174,10 @@ def inv_quad_logdet(
     key: jax.Array,
     settings: BBMMSettings = BBMMSettings(),
 ):
-    """Differentiable (yᵀK̂⁻¹y, log|K̂|) for any LinearOperator pytree."""
+    """Differentiable (yᵀK̂⁻¹y, log|K̂|) for any LinearOperator pytree.
+
+    Batched ``y`` of shape (b, n) returns (b,)-shaped values, still
+    differentiable — the custom VJP estimators broadcast."""
 
     @jax.custom_vjp
     def _iql(op, y, key):
@@ -124,20 +192,22 @@ def inv_quad_logdet(
     def _bwd(residuals, cotangents):
         op, u, probe_solves, pinv_z, key = residuals
         g_iq, g_ld = cotangents
-        t = probe_solves.shape[1]
+        t = probe_solves.shape[-1]
+        g_iq = jnp.asarray(g_iq)[..., None, None]  # broadcast over (n, t)
+        g_ld = jnp.asarray(g_ld)[..., None, None]
 
         # One vjp through the blackbox matmul covers both estimators.
-        rhs = jnp.concatenate([u[:, None], probe_solves], axis=1)
+        rhs = jnp.concatenate([u[..., None], probe_solves], axis=-1)
         rhs = jax.lax.stop_gradient(rhs)
         cot = jnp.concatenate(
-            [(-g_iq) * u[:, None], (g_ld / t) * pinv_z], axis=1
+            [(-g_iq) * u[..., None], (g_ld / t) * pinv_z], axis=-1
         )
         cot = cot.astype(rhs.dtype)
 
         _, matmul_vjp = jax.vjp(lambda o: o.matmul(rhs), op)
         (d_op,) = matmul_vjp(cot)
 
-        d_y = (2.0 * g_iq) * u
+        d_y = 2.0 * g_iq[..., 0] * u
         d_key = np.zeros(key.shape, dtype=jax.dtypes.float0)
         return d_op, d_y, d_key
 
@@ -155,6 +225,83 @@ def engine_state(
     return _engine_forward(op, y, key, settings)
 
 
+def build_posterior_cache(
+    op: LinearOperator,
+    y: jax.Array,
+    key: jax.Array,
+    settings: BBMMSettings = BBMMSettings(),
+    *,
+    variance_cache: bool = True,
+) -> PosteriorCache:
+    """One engine call → a :class:`PosteriorCache` for O(n·m) serving queries.
+
+    The cache basis spans every solve the engine produced (K̂⁻¹y, the probe
+    solves K̂⁻¹zᵢ) plus all preconditioned-Lanczos directions recovered from
+    the CG run, orthonormalized by one QR.  Its Gram matrix against K̂ costs
+    one extra blackbox matmul here — and buys CG-free posterior variance at
+    query time.  (Rank-deficient spans are safe: QR completes them with
+    harmless orthonormal directions.)
+
+    ``variance_cache=False`` skips the Lanczos-basis recording, the QR /
+    extra matmul / Cholesky, and the SLQ log-det, setting
+    ``basis``/``gram_chol`` to None and ``logdet`` to NaN — for consumers
+    that only need ``alpha`` (e.g. the uncached prediction paths, which
+    compute variance by direct solves).  The probe columns stay in the mBCG
+    block either way: the solve arithmetic per column is independent of the
+    extra basis output, so ``alpha`` is bitwise the same as the full
+    build's (guarded by tests/test_posterior_cache.py).
+    """
+    if y.ndim != 1:
+        raise ValueError("posterior cache supports a single problem (y of shape (n,))")
+    n = y.shape[0]
+    precond, Z, res, probe_solves, logdet = _run_engine(
+        op, y, key, settings, return_basis=variance_cache, with_logdet=variance_cache
+    )
+    alpha = res.solves[:, 0]
+    inv_quad = jnp.dot(y, alpha)
+
+    basis = gram_chol = None
+    if variance_cache:
+        # Krylov cache subspace: all solves + all recovered Lanczos directions.
+        span = jnp.concatenate([res.solves, res.basis.reshape(n, -1)], axis=-1)
+        basis, _ = jnp.linalg.qr(span.astype(jnp.float32))  # (n, m)
+        KQ = op.prepare().matmul(basis)  # ONE extra blackbox matmul
+        gram = basis.T @ KQ
+        gram = 0.5 * (gram + gram.T)
+        m = gram.shape[0]
+        jitter = 1e-6 * jnp.trace(gram) / m
+        gram_chol = jnp.linalg.cholesky(gram + jitter * jnp.eye(m, dtype=gram.dtype))
+
+    return PosteriorCache(
+        alpha=alpha,
+        basis=basis,
+        gram_chol=gram_chol,
+        probes=Z,
+        probe_solves=probe_solves,
+        precond=precond,
+        inv_quad=inv_quad,
+        logdet=logdet,
+        cg_iters=res.num_iters,
+    )
+
+
+def cached_mean(cache: PosteriorCache, Kxs: jax.Array) -> jax.Array:
+    """Posterior mean k(X*, X) K̂⁻¹y from the cache — O(n·s), no CG."""
+    return Kxs.T @ cache.alpha
+
+
+def cached_inv_quad(cache: PosteriorCache, Kxs: jax.Array) -> jax.Array:
+    """k*ᵀK̂⁻¹k* per column of Kxs via the Rayleigh–Ritz cache — O(n·m)."""
+    if cache.basis is None:
+        raise ValueError(
+            "cache was built with variance_cache=False; rebuild with "
+            "variance_cache=True for variance queries"
+        )
+    v = cache.basis.T @ Kxs  # (m, s)
+    w = jax.scipy.linalg.cho_solve((cache.gram_chol, True), v)
+    return jnp.sum(v * w, axis=0)
+
+
 def marginal_log_likelihood(
     op: LinearOperator,
     y: jax.Array,
@@ -165,19 +312,24 @@ def marginal_log_likelihood(
 
     Differentiable w.r.t. every array leaf of ``op`` (kernel hyperparameters,
     noise, inducing points, deep-kernel network weights, ...) and ``y``.
+    Batched ``y`` (b, n) → (b,) MLLs from one fused engine call.
     """
-    n = y.shape[0]
+    n = y.shape[-1]
     inv_quad, logdet = inv_quad_logdet(op, y, key, settings)
     return -0.5 * (inv_quad + logdet + n * jnp.log(2.0 * jnp.pi))
 
 
-def solve(op, B, settings: BBMMSettings = BBMMSettings()):
-    """Plain preconditioned solve K̂⁻¹B (prediction-time helper)."""
-    precond = build_preconditioner(
-        op, settings.precond_rank, jitter=settings.precond_jitter
-    )
+def solve(op, B, settings: BBMMSettings = BBMMSettings(), *, precond=None):
+    """Plain preconditioned solve K̂⁻¹B (prediction-time helper).
+
+    ``precond``: a prebuilt preconditioner (e.g. ``PosteriorCache.precond``)
+    to reuse instead of rebuilding the pivoted-Cholesky factors."""
+    if precond is None:
+        precond = build_preconditioner(
+            op, settings.precond_rank, jitter=settings.precond_jitter
+        )
     res = mbcg(
-        op.matmul,
+        op.prepare().matmul,
         B,
         precond_solve=precond.solve,
         max_iters=settings.max_cg_iters,

@@ -78,6 +78,16 @@ class LinearOperator:
     def dtype(self):
         return jnp.float32
 
+    # -- solver preparation ------------------------------------------------
+    def prepare(self) -> "LinearOperator":
+        """Return an equivalent operator with per-solve work hoisted.
+
+        The inference engine calls this ONCE before entering the CG loop, so
+        anything done here (lengthscale pre-scaling, padding, layout changes)
+        is paid once per solve instead of once per iteration.  Default: no-op.
+        Wrappers recurse into their children."""
+        return self
+
     # -- algebra ----------------------------------------------------------
     def __add__(self, other):
         if isinstance(other, LinearOperator):
@@ -176,6 +186,9 @@ class ScaledOperator(LinearOperator):
     def row(self, i):
         return self.scale * self.base.row(i)
 
+    def prepare(self):
+        return ScaledOperator(self.base.prepare(), self.scale)
+
 
 @_register
 @dataclasses.dataclass(frozen=True)
@@ -210,6 +223,9 @@ class SumOperator(LinearOperator):
             out = out + op.row(i)
         return out
 
+    def prepare(self):
+        return SumOperator(tuple(op.prepare() for op in self.ops))
+
 
 @_register
 @dataclasses.dataclass(frozen=True)
@@ -222,7 +238,7 @@ class AddedDiagOperator(LinearOperator):
     """
 
     base: LinearOperator
-    sigma2: jax.Array
+    sigma2: jax.Array  # scalar, or (b,) for a batch of noise levels
 
     @property
     def shape(self):
@@ -232,15 +248,22 @@ class AddedDiagOperator(LinearOperator):
     def dtype(self):
         return self.base.dtype
 
+    def _s2(self, extra_dims):
+        s2 = jnp.asarray(self.sigma2)
+        return s2.reshape(s2.shape + (1,) * extra_dims) if s2.ndim else s2
+
     def matmul(self, M):
-        return self.base.matmul(M) + self.sigma2 * M
+        return self.base.matmul(M) + self._s2(2 if M.ndim > 1 else 1) * M
 
     def diagonal(self):
-        return self.base.diagonal() + self.sigma2
+        return self.base.diagonal() + self._s2(1)
 
     def row(self, i):
         r = self.base.row(i)
         return r.at[i].add(self.sigma2)
+
+    def prepare(self):
+        return AddedDiagOperator(self.base.prepare(), self.sigma2)
 
 
 @_register
@@ -467,7 +490,7 @@ class BatchDenseOperator(LinearOperator):
         return self.matrices.dtype
 
     def matmul(self, M):
-        return jnp.einsum("bij,bjt->bit", self.matrices, M)
+        return self.matrices @ M  # broadcasts (b,n,n) @ (..., n, t)
 
     def diagonal(self):
         return jax.vmap(jnp.diagonal)(self.matrices)

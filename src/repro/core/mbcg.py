@@ -9,12 +9,20 @@ quantities:
     (Saad 2003, §6.7.3; paper Observation 3) so the numerically fragile
     Lanczos recurrence is never run.
 
+Batching: ``B`` may carry arbitrary *leading* batch dimensions —
+``(n, t)``, ``(b, n, t)``, ``(b1, b2, n, t)`` — and every reduction runs
+over ``axis=-2`` (the n rows), so one ``lax.scan`` drives all problems of
+a multi-restart hyperparameter search / multi-output GP simultaneously:
+the per-iteration work is ONE fused matmul of shape ``(b, n, t)`` instead
+of a Python loop of ``b`` engine calls.  ``matmul`` must accept the same
+leading batch dims (dense operators broadcast for free under ``@``).
+
 TPU adaptation: data-dependent termination is replaced by a fixed-trip
-``lax.scan`` with per-column convergence *masking* — converged columns stop
-updating (α forced to 0) and their tridiagonal blocks are padded with
-identity, which leaves the Gauss quadrature value e₁ᵀlog(T̃)e₁ exactly
-unchanged.  This keeps the program static-shaped for pjit/SPMD while
-preserving CG's tolerance semantics.
+``lax.scan`` with per-(batch, column) convergence *masking* — converged
+columns stop updating (α forced to 0) and their tridiagonal blocks are
+padded with identity, which leaves the Gauss quadrature value
+e₁ᵀlog(T̃)e₁ exactly unchanged.  This keeps the program static-shaped for
+pjit/SPMD while preserving CG's tolerance semantics.
 
 Note on Algorithm 2 as printed in the paper: its β update uses
 (z_j∘z_j)/(z_{j-1}∘z_{j-1}); the textbook PCG recurrence (and GPyTorch's
@@ -32,12 +40,16 @@ import jax.numpy as jnp
 
 
 class MBCGResult(NamedTuple):
-    solves: jax.Array  # (n, t)  — K̂⁻¹B
-    tridiag_alpha: jax.Array  # (t, p)   CG step sizes  α_j  (masked: 0 when inactive)
-    tridiag_beta: jax.Array  # (t, p)   CG momenta     β_j  (β_p unused)
-    active_steps: jax.Array  # (t, p)   bool: was column still unconverged at step j
-    num_iters: jax.Array  # (t,)     iterations actually used per column
-    residual_norm: jax.Array  # (t,)     final relative residual ‖r‖/‖b‖
+    solves: jax.Array  # (..., n, t)  — K̂⁻¹B
+    tridiag_alpha: jax.Array  # (..., t, p)   CG step sizes  α_j  (masked: 0 when inactive)
+    tridiag_beta: jax.Array  # (..., t, p)   CG momenta     β_j  (β_p unused)
+    active_steps: jax.Array  # (..., t, p)   bool: was column still unconverged at step j
+    num_iters: jax.Array  # (..., t)     iterations actually used per column
+    residual_norm: jax.Array  # (..., t)     final relative residual ‖r‖/‖b‖
+    basis: jax.Array | None = None  # (..., n, t, p) preconditioned Lanczos
+    # basis W (columns z_j/√(r_jᵀz_j)); populated only with return_basis=True.
+    # Satisfies K̂⁻¹ ≈ W T̃⁻¹ Wᵀ per RHS column — the LOVE-style posterior
+    # covariance cache (see repro.core.inference.build_posterior_cache).
 
 
 def _safe_div(num, den):
@@ -45,7 +57,15 @@ def _safe_div(num, den):
     return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
 
 
-@partial(jax.jit, static_argnames=("matmul", "precond_solve", "max_iters"))
+def _safe_rsqrt(x):
+    ok = x > 1e-30
+    return jnp.where(ok, jax.lax.rsqrt(jnp.where(ok, x, 1.0)), 0.0)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("matmul", "precond_solve", "max_iters", "return_basis"),
+)
 def mbcg(
     matmul: Callable[[jax.Array], jax.Array],
     B: jax.Array,
@@ -53,16 +73,21 @@ def mbcg(
     precond_solve: Callable[[jax.Array], jax.Array] | None = None,
     max_iters: int = 20,
     tol: float = 1e-4,
+    return_basis: bool = False,
 ) -> MBCGResult:
-    """Solve K̂⁻¹B for all columns of B simultaneously.
+    """Solve K̂⁻¹B for all columns (and all leading batch dims) of B at once.
 
     Args:
-      matmul: blackbox ``M ↦ K̂ @ M`` for (n, t) M.
-      B: (n, t) right-hand sides (first column is typically y, the rest are
-        probe vectors z_i).
+      matmul: blackbox ``M ↦ K̂ @ M`` for (..., n, t) M (must broadcast over
+        any leading batch dims B carries).
+      B: (n,), (n, t) or (..., n, t) right-hand sides (first column is
+        typically y, the rest are probe vectors z_i).
       precond_solve: ``R ↦ P̂⁻¹ R``; identity if None.
       max_iters: fixed trip count p.
       tol: relative-residual convergence threshold per column.
+      return_basis: also record the preconditioned Lanczos basis
+        W = [z_j/√(r_jᵀz_j)] per column — O(p·n·t) extra memory, used by the
+        posterior solve cache.
     """
     if precond_solve is None:
         precond_solve = lambda R: R
@@ -71,64 +96,74 @@ def mbcg(
     squeeze = B.ndim == 1
     if squeeze:
         B = B[:, None]
-    n, t = B.shape
+    n, t = B.shape[-2:]
     compute_dtype = jnp.promote_types(B.dtype, jnp.float32)
     Bc = B.astype(compute_dtype)
 
-    b_norm = jnp.linalg.norm(Bc, axis=0)  # (t,)
+    b_norm = jnp.linalg.norm(Bc, axis=-2)  # (..., t)
     b_norm = jnp.where(b_norm == 0, 1.0, b_norm)
 
     U0 = jnp.zeros_like(Bc)
     R0 = Bc  # r = b - K u, u0 = 0
     Z0 = precond_solve(R0).astype(compute_dtype)
     D0 = Z0
-    rz0 = jnp.sum(R0 * Z0, axis=0)  # (t,)
-    active0 = jnp.linalg.norm(R0, axis=0) / b_norm > tol
+    rz0 = jnp.sum(R0 * Z0, axis=-2)  # (..., t)
+    active0 = jnp.linalg.norm(R0, axis=-2) / b_norm > tol
 
     def step(carry, _):
         U, R, Z, D, rz, active = carry
         V = matmul(D).astype(compute_dtype)
-        dv = jnp.sum(D * V, axis=0)
+        dv = jnp.sum(D * V, axis=-2)
         alpha = _safe_div(rz, dv)
         alpha = jnp.where(active, alpha, 0.0)  # converged columns freeze
 
-        U = U + alpha[None, :] * D
-        R = R - alpha[None, :] * V
+        U = U + alpha[..., None, :] * D
+        R = R - alpha[..., None, :] * V
         Znew = precond_solve(R).astype(compute_dtype)
-        rz_new = jnp.sum(R * Znew, axis=0)
+        rz_new = jnp.sum(R * Znew, axis=-2)
         beta = _safe_div(rz_new, rz)
         beta = jnp.where(active, beta, 0.0)
-        D = jnp.where(active[None, :], Znew + beta[None, :] * D, D)
-        Z = Znew
+        D = jnp.where(active[..., None, :], Znew + beta[..., None, :] * D, D)
 
-        res = jnp.linalg.norm(R, axis=0) / b_norm
+        res = jnp.linalg.norm(R, axis=-2) / b_norm
         next_active = active & (res > tol)
         out = (alpha, beta, active)
-        return (U, R, Z, D, jnp.where(active, rz_new, rz), next_active), out
+        if return_basis:
+            # preconditioned Lanczos vector of this step: z_j/√(r_jᵀz_j),
+            # zeroed once the column has converged (identity-padded T̃ block)
+            out = out + (jnp.where(active[..., None, :], Z * _safe_rsqrt(rz)[..., None, :], 0.0),)
+        return (U, R, Znew, D, jnp.where(active, rz_new, rz), next_active), out
 
-    (U, R, _, _, _, _), (alphas, betas, actives) = jax.lax.scan(
+    (U, R, _, _, _, _), outs = jax.lax.scan(
         step, (U0, R0, Z0, D0, rz0, active0), None, length=max_iters
     )
+    alphas, betas, actives = outs[:3]
 
-    res_final = jnp.linalg.norm(R, axis=0) / b_norm
-    num_iters = jnp.sum(actives, axis=0)  # (t,)
+    res_final = jnp.linalg.norm(R, axis=-2) / b_norm
+    num_iters = jnp.sum(actives, axis=0)  # (..., t)
 
     solves = U.astype(B.dtype)
+    basis = None
+    if return_basis:
+        basis = jnp.moveaxis(outs[3], 0, -1)  # (..., n, t, p)
     if squeeze:
-        solves = solves[:, 0]
+        solves = solves[..., 0]
+        if basis is not None:
+            basis = basis[..., 0, :]
     return MBCGResult(
         solves=solves,
-        tridiag_alpha=alphas.T,  # (t, p)
-        tridiag_beta=betas.T,
-        active_steps=actives.T,
+        tridiag_alpha=jnp.moveaxis(alphas, 0, -1),  # (..., t, p)
+        tridiag_beta=jnp.moveaxis(betas, 0, -1),
+        active_steps=jnp.moveaxis(actives, 0, -1),
         num_iters=num_iters,
         residual_norm=res_final,
+        basis=basis,
     )
 
 
 def tridiag_matrices(result: MBCGResult) -> jax.Array:
-    """Assemble the (t, p, p) Lanczos tridiagonal matrices T̃_i from the CG
-    coefficients (paper Observation 3 / eq. S5):
+    """Assemble the (..., t, p, p) Lanczos tridiagonal matrices T̃_i from the
+    CG coefficients (paper Observation 3 / eq. S5):
 
         T[0,0]   = 1/α₁
         T[j,j]   = 1/α_{j+1} + β_j/α_j
@@ -136,31 +171,31 @@ def tridiag_matrices(result: MBCGResult) -> jax.Array:
 
     Steps where a column had already converged are padded as an identity
     block, which leaves e₁ᵀ f(T̃) e₁ unchanged for the leading block.
+    Works for any leading batch shape (pure broadcasting — no vmap).
     """
     alphas, betas, active = (
         result.tridiag_alpha,
         result.tridiag_beta,
         result.active_steps,
     )
-    t, p = alphas.shape
+    p = alphas.shape[-1]
 
     inv_alpha = _safe_div(jnp.ones_like(alphas), alphas)  # 1/α_j, 0 where masked
 
+    pad = [(0, 0)] * (alphas.ndim - 1) + [(1, 0)]
     # diag_j (0-indexed j): 1/α_j + β_{j-1}/α_{j-1}
-    beta_prev = jnp.pad(betas[:, :-1], ((0, 0), (1, 0)))  # β_{j-1}, 0 for j=0
-    alpha_prev_inv = jnp.pad(inv_alpha[:, :-1], ((0, 0), (1, 0)))
+    beta_prev = jnp.pad(betas[..., :-1], pad)  # β_{j-1}, 0 for j=0
+    alpha_prev_inv = jnp.pad(inv_alpha[..., :-1], pad)
     diag = inv_alpha + beta_prev * alpha_prev_inv
     diag = jnp.where(active, diag, 1.0)  # identity padding
 
-    # offdiag_j connects steps j and j+1: √β_{j+1}? — careful with indexing:
-    # entry (j, j+1) = sqrt(β_j)/α_j  using the β produced at step j
+    # offdiag entry (j, j+1) = sqrt(β_j)/α_j using the β produced at step j
     # (Saad: η_{j+1} = sqrt(β_j)/α_j). Valid only if step j+1 is active.
-    off = _safe_div(jnp.sqrt(jnp.clip(betas[:, :-1], 0.0)), alphas[:, :-1])
-    off = jnp.where(active[:, 1:], off, 0.0)
+    off = _safe_div(jnp.sqrt(jnp.clip(betas[..., :-1], 0.0)), alphas[..., :-1])
+    off = jnp.where(active[..., 1:], off, 0.0)
+    off = jnp.pad(off, [(0, 0)] * (off.ndim - 1) + [(0, 1)])  # (..., t, p)
 
-    T = (
-        jax.vmap(jnp.diag)(diag)
-        + jax.vmap(partial(jnp.diag, k=1))(off)
-        + jax.vmap(partial(jnp.diag, k=-1))(off)
-    )
+    eye = jnp.eye(p, dtype=diag.dtype)
+    upper = off[..., None] * jnp.eye(p, k=1, dtype=diag.dtype)  # [j, j+1] = off_j
+    T = diag[..., None] * eye + upper + jnp.swapaxes(upper, -1, -2)
     return T

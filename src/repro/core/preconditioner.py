@@ -9,6 +9,10 @@ preconditioner are O(n·k²):
   * ``sample_probes`` — z = L g₁ + σ g₂ with zero-mean unit-covariance g,
                   so cov(z) = P̂ exactly: the probe distribution required
                   for preconditioned stochastic Lanczos quadrature.
+
+Batching: ``L`` may carry leading batch dims (b, n, k) with σ² of shape
+(b,) (or scalar) — every operation broadcasts, so one preconditioner
+object serves a whole batch of GP problems inside the batched mBCG path.
 """
 
 from __future__ import annotations
@@ -19,16 +23,24 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .linear_operator import LinearOperator, AddedDiagOperator
-from .pivoted_cholesky import pivoted_cholesky
+from .linear_operator import LinearOperator, AddedDiagOperator, BatchDenseOperator
+from .pivoted_cholesky import pivoted_cholesky, pivoted_cholesky_dense
+
+
+def _bcast_scalar(s, ndim_extra=2):
+    """Reshape a (possibly batched) scalar so it broadcasts against (..., n, t)."""
+    s = jnp.asarray(s)
+    if s.ndim == 0:
+        return s
+    return s.reshape(s.shape + (1,) * ndim_extra)
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class PivotedCholeskyPreconditioner:
-    L: jax.Array  # (n, k)
-    sigma2: jax.Array  # scalar noise
-    inner_chol: jax.Array  # (k, k) chol(σ²I_k + LᵀL)
+    L: jax.Array  # (..., n, k)
+    sigma2: jax.Array  # noise — scalar or (...,) matching L's batch dims
+    inner_chol: jax.Array  # (..., k, k) chol(σ²I_k + LᵀL)
 
     def tree_flatten(self):
         return (self.L, self.sigma2, self.inner_chol), None
@@ -40,48 +52,64 @@ class PivotedCholeskyPreconditioner:
     # -- construction ------------------------------------------------------
     @staticmethod
     def build(L: jax.Array, sigma2) -> "PivotedCholeskyPreconditioner":
-        k = L.shape[1]
+        k = L.shape[-1]
         sigma2 = jnp.asarray(sigma2, L.dtype)
-        inner = sigma2 * jnp.eye(k, dtype=L.dtype) + L.T @ L
+        eye = jnp.eye(k, dtype=L.dtype)
+        inner = _bcast_scalar(sigma2) * eye + jnp.swapaxes(L, -1, -2) @ L
         inner_chol = jnp.linalg.cholesky(inner)
         return PivotedCholeskyPreconditioner(L, sigma2, inner_chol)
 
     # -- the three O(nk²) operations ----------------------------------------
     def solve(self, R: jax.Array) -> jax.Array:
-        """P̂⁻¹ @ R."""
+        """P̂⁻¹ @ R for R of shape (..., n, t) (or (n,) vector)."""
         squeeze = R.ndim == 1
         if squeeze:
             R = R[:, None]
-        Lt_R = self.L.T @ R  # (k, t)
+        Lt_R = jnp.swapaxes(self.L, -1, -2) @ R  # (..., k, t)
         w = jax.scipy.linalg.cho_solve((self.inner_chol, True), Lt_R)
-        out = (R - self.L @ w) / self.sigma2
-        return out[:, 0] if squeeze else out
+        out = (R - self.L @ w) / _bcast_scalar(self.sigma2)
+        return out[..., 0] if squeeze else out
 
     def matmul(self, M: jax.Array) -> jax.Array:
         """P̂ @ M (used in tests / residual checks)."""
-        return self.L @ (self.L.T @ M) + self.sigma2 * M
+        return self.L @ (jnp.swapaxes(self.L, -1, -2) @ M) + _bcast_scalar(
+            self.sigma2
+        ) * M
 
     def logdet(self) -> jax.Array:
-        n, k = self.L.shape
-        return (n - k) * jnp.log(self.sigma2) + 2.0 * jnp.sum(
-            jnp.log(jnp.diagonal(self.inner_chol))
-        )
+        n, k = self.L.shape[-2:]
+        diag = jnp.diagonal(self.inner_chol, axis1=-2, axis2=-1)
+        return (n - k) * jnp.log(self.sigma2) + 2.0 * jnp.sum(jnp.log(diag), axis=-1)
 
     def sample_probes(self, key: jax.Array, num: int, n: int) -> jax.Array:
-        """Draw t probes with covariance exactly P̂ (Rademacher base)."""
-        k = self.L.shape[1]
+        """Draw t probes with covariance exactly P̂ (Rademacher base).
+
+        The Rademacher base draws are shared across any batch dims so a
+        batched run uses the *same* underlying randomness as a loop of
+        unbatched runs with the same key.
+        """
+        k = self.L.shape[-1]
         k1, k2 = jax.random.split(key)
         g1 = jax.random.rademacher(k1, (k, num), dtype=self.L.dtype)
         g2 = jax.random.rademacher(k2, (n, num), dtype=self.L.dtype)
-        return self.L @ g1 + jnp.sqrt(self.sigma2) * g2
+        sig = _bcast_scalar(self.sigma2)
+        return self.L @ g1 + jnp.sqrt(sig) * g2
 
     def inv_quad(self, Z: jax.Array) -> jax.Array:
         """zᵀ P̂⁻¹ z per column — the SLQ probe normalization ‖P̂^{-1/2}z‖²."""
-        return jnp.sum(Z * self.solve(Z), axis=0)
+        return jnp.sum(Z * self.solve(Z), axis=-2)
 
 
+@jax.tree_util.register_pytree_node_class
 class IdentityPreconditioner:
     """No preconditioning: P̂ = I. Probes are plain Rademacher."""
+
+    def tree_flatten(self):
+        return (), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
 
     def solve(self, R):
         return R
@@ -96,7 +124,7 @@ class IdentityPreconditioner:
         return jax.random.rademacher(key, (n, num), dtype=jnp.float32)
 
     def inv_quad(self, Z):
-        return jnp.sum(Z * Z, axis=0)
+        return jnp.sum(Z * Z, axis=-2)
 
 
 def build_preconditioner(
@@ -109,6 +137,9 @@ def build_preconditioner(
     treated as a constant by the autodiff story (stop_gradient): gradients of
     the MLL are produced by the stochastic estimators in
     ``repro.core.inference``, which remain unbiased for any fixed P̂.
+
+    Batched operators (BatchDenseOperator base) get a batched preconditioner
+    via a vmapped pivoted Cholesky — one factor per batch element.
     """
     if rank <= 0:
         return IdentityPreconditioner()
@@ -127,6 +158,12 @@ def build_preconditioner(
     if isinstance(base, LowRankRootOperator):
         return PivotedCholeskyPreconditioner.build(
             jax.lax.stop_gradient(base.root), jax.lax.stop_gradient(op.sigma2)
+        )
+    if isinstance(base, BatchDenseOperator):
+        mats = jax.lax.stop_gradient(base.matrices)
+        L = jax.vmap(lambda K: pivoted_cholesky_dense(K, rank, jitter=jitter))(mats)
+        return PivotedCholeskyPreconditioner.build(
+            L, jax.lax.stop_gradient(op.sigma2)
         )
     L = pivoted_cholesky(
         lambda i: jax.lax.stop_gradient(base.row(i)),

@@ -22,13 +22,14 @@ from .mbcg import MBCGResult, tridiag_matrices
 
 
 def slq_quadrature(T: jax.Array, fn=jnp.log, eig_floor: float = 1e-10) -> jax.Array:
-    """e₁ᵀ f(T̃_i) e₁ for a stack of (t, p, p) symmetric tridiagonal matrices.
+    """e₁ᵀ f(T̃_i) e₁ for a stack of (..., t, p, p) symmetric tridiagonal
+    matrices (leading batch dims broadcast).
 
-    Returns (t,) quadrature values.
+    Returns (..., t) quadrature values.
     """
     evals, evecs = jnp.linalg.eigh(T)
     evals = jnp.clip(evals, eig_floor)  # PSD guard — tiny negative from roundoff
-    first_row = evecs[:, 0, :]  # (t, p)   e₁ᵀV
+    first_row = evecs[..., 0, :]  # (..., t, p)   e₁ᵀV
     return jnp.sum(first_row**2 * fn(evals), axis=-1)
 
 
@@ -45,6 +46,6 @@ def logdet_from_mbcg(
       precond_logdet: log|P̂| (0 when unpreconditioned).
     """
     T = tridiag_matrices(result)
-    quad = slq_quadrature(T)  # (t,)
-    est = jnp.mean(probe_inv_quads * quad)
+    quad = slq_quadrature(T)  # (..., t)
+    est = jnp.mean(probe_inv_quads * quad, axis=-1)
     return est + precond_logdet

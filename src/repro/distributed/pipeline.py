@@ -75,11 +75,12 @@ def pipeline_forward(
         # all-reduce so every stage returns the full outputs (simple API)
         return jax.lax.psum(outputs, axis) / 1.0
 
-    fn = jax.shard_map(
+    from .sharding import compat_shard_map
+
+    fn = compat_shard_map(
         per_stage,
-        mesh=mesh,
+        mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(params_stacked, x_microbatches)

@@ -16,8 +16,48 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
+def current_mesh():
+    """The live mesh, across jax versions: prefer the new abstract-mesh API,
+    fall back to the legacy ``with mesh:`` thread resources."""
+    gm = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gm is not None:
+        mesh = gm()
+        if mesh is not None and mesh.axis_names:
+            return mesh
+        # fall through: a legacy `with mesh:` context sets thread_resources
+        # without the abstract mesh, even on jax versions that have both
+    try:
+        from jax._src.mesh import thread_resources
+
+        pm = thread_resources.env.physical_mesh
+        if pm.axis_names:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the live mesh, across jax
+    versions (jax.set_mesh vs the legacy Mesh context manager)."""
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh  # legacy Mesh is itself a context manager
+
+
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (jax.shard_map vs experimental)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
 def mesh_axes():
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_mesh()
     return tuple(mesh.axis_names) if mesh is not None else ()
 
 
@@ -31,9 +71,18 @@ def has_model_axis():
     return "model" in mesh_axes()
 
 
+def mesh_axis_sizes(mesh):
+    """{axis_name: size} for either mesh flavor (AbstractMesh has
+    axis_sizes but no .devices; legacy Mesh the reverse)."""
+    sizes = getattr(mesh, "axis_sizes", None) or mesh.devices.shape
+    return dict(zip(mesh.axis_names, sizes))
+
+
 def axis_size(name):
-    mesh = jax.sharding.get_abstract_mesh()
-    return dict(zip(mesh.axis_names, mesh.axis_sizes)).get(name, 1)
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    return mesh_axis_sizes(mesh).get(name, 1)
 
 
 def p_batch(*rest):

@@ -1,9 +1,13 @@
 """Exact GP regression through the BBMM engine (paper §6 "Exact").
 
 Training: Adam on the raw (log) hyperparameters of the kernel + noise,
-gradients from the custom-VJP marginal log likelihood.
-Prediction: posterior mean and variance from batched mBCG solves against
-[y, K_X*] — one engine call for the whole test set.
+gradients from the custom-VJP marginal log likelihood.  ``batched_loss``
+evaluates b hyperparameter sets (multi-restart training) in ONE fused
+engine call via the batched mBCG path.
+Prediction: ``predict`` builds a :class:`repro.core.PosteriorCache` (one
+engine call) and serves the mean from it; ``predict_cached`` re-serves
+mean *and* variance from the same cache with zero CG iterations —
+O(n·s + n·m) per request, the serving-traffic path.
 """
 
 from __future__ import annotations
@@ -16,7 +20,11 @@ import jax.numpy as jnp
 
 from repro.core import (
     AddedDiagOperator,
+    BatchDenseOperator,
     BBMMSettings,
+    build_posterior_cache,
+    cached_inv_quad,
+    cached_mean,
     marginal_log_likelihood,
     solve as bbmm_solve,
 )
@@ -69,6 +77,27 @@ class ExactGP:
     def loss(self, params, X, y, key):
         return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
 
+    def batched_operator(self, params_batch, X) -> AddedDiagOperator:
+        """K̂ for a stack of b hyperparameter sets as ONE batched operator.
+
+        Every leaf of ``params_batch`` carries a leading (b,) dim (e.g. from
+        ``jax.tree.map(jnp.stack, ...)``).  The b kernel matrices are
+        materialized batched — the engine then solves all b problems in a
+        single fused mBCG program."""
+        Ks = jax.vmap(lambda p: self.kernel(p)(X, X))(params_batch)
+        return AddedDiagOperator(
+            BatchDenseOperator(Ks), _softplus(params_batch["raw_noise"])
+        )
+
+    def batched_loss(self, params_batch, X, y, key):
+        """(b,) negative MLLs for b hyperparameter sets in one engine call.
+
+        ``y`` may be (n,) (shared targets, broadcast) or (b, n)."""
+        op = self.batched_operator(params_batch, X)
+        b = op.base.batch
+        yb = jnp.broadcast_to(y, (b, y.shape[-1])) if y.ndim == 1 else y
+        return -marginal_log_likelihood(op, yb, key, self.settings)
+
     def fit(self, X, y, *, steps=100, lr=0.1, key=None, verbose=False):
         key = jax.random.PRNGKey(0) if key is None else key
         params = self.init_params(X.shape[-1])
@@ -91,19 +120,59 @@ class ExactGP:
         return params, history
 
     # -- prediction -------------------------------------------------------------
-    def predict(self, params, X, y, Xstar, *, full_cov=False):
-        """Posterior mean and (diagonal) variance at Xstar (Eq. 1)."""
+    def posterior_cache(self, params, X, y, *, key=None, variance_cache=True):
+        """One engine call → reusable solve cache for cheap repeated queries.
+
+        The default key is fixed, so rebuilding the cache for the same
+        (params, X, y) is deterministic — and ``predict`` routes its mean
+        through this exact code path, making cached and uncached means
+        bitwise identical."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        return build_posterior_cache(
+            self.operator(params, X), y, key, self.settings,
+            variance_cache=variance_cache,
+        )
+
+    def predict_cached(self, params, X, cache, Xstar, *, full_cov=False):
+        """Serve mean + variance from a PosteriorCache — zero CG iterations.
+
+        Mean: k*ᵀα, O(n·s).  Variance: Rayleigh–Ritz k*ᵀK̂⁻¹k* from the
+        cached Krylov basis, O(n·m) — conservative (never below the exact
+        posterior variance)."""
+        kern = self.kernel(params)
+        Kxs = kern(X, Xstar)  # (n, s)
+        mean = cached_mean(cache, Kxs)
+        if full_cov:
+            if cache.basis is None:
+                raise ValueError(
+                    "cache was built with variance_cache=False; rebuild with "
+                    "variance_cache=True for covariance queries"
+                )
+            v = cache.basis.T @ Kxs
+            w = jax.scipy.linalg.cho_solve((cache.gram_chol, True), v)
+            return mean, kern(Xstar, Xstar) - v.T @ w
+        var = kern.diag(Xstar) - cached_inv_quad(cache, Kxs)
+        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
+
+    def predict(self, params, X, y, Xstar, *, full_cov=False, key=None):
+        """Posterior mean and (diagonal) variance at Xstar (Eq. 1).
+
+        Builds the posterior cache without its variance stage (mean comes
+        from the identical mBCG program as ``predict_cached``'s cache, so
+        the means are bitwise equal), then runs exact mBCG solves against
+        K_X* for the covariance."""
+        cache = self.posterior_cache(params, X, y, key=key, variance_cache=False)
         op = self.operator(params, X)
         kern = self.kernel(params)
         Kxs = kern(X, Xstar)  # (n, s)
-        B = jnp.concatenate([y[:, None], Kxs], axis=1)
-        solves = bbmm_solve(op, B, self.settings)
-        mean = Kxs.T @ solves[:, 0]
+        mean = cached_mean(cache, Kxs)
+        # variance: exact solves, reusing the cache's preconditioner factors
+        solves = bbmm_solve(op, Kxs, self.settings, precond=cache.precond)
         if full_cov:
-            cov = kern(Xstar, Xstar) - Kxs.T @ solves[:, 1:]
+            cov = kern(Xstar, Xstar) - Kxs.T @ solves
             return mean, cov
         # predictive (observation) variance: latent var + likelihood noise
-        var = kern.diag(Xstar) - jnp.sum(Kxs * solves[:, 1:], axis=0)
+        var = kern.diag(Xstar) - jnp.sum(Kxs * solves, axis=0)
         return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
 
     def noise(self, params):

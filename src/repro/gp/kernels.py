@@ -105,13 +105,20 @@ class DeepKernel:
 @_register
 @dataclasses.dataclass(frozen=True)
 class KernelOperator(LinearOperator):
-    """Exact-GP kernel matrix K(X, X) as a lazy blackbox matmul."""
+    """Exact-GP kernel matrix K(X, X) as a lazy blackbox matmul.
+
+    ``mode="pallas_sharded"`` row-partitions the fused Pallas kernel over the
+    mesh axes in ``data_axes`` (mesh resolved from the live context or the
+    explicit ``mesh`` field): each device holds one row band, and the only
+    per-matmul collective is the all-gather of the RHS."""
 
     kernel: object
     X: jax.Array  # (n, d)
-    mode: str = static_field(default="dense")  # dense | blocked | pallas
+    mode: str = static_field(default="dense")  # dense | blocked | pallas | pallas_sharded
     block_size: int = static_field(default=512)
     shard_rows: bool = static_field(default=False)  # annotate row sharding
+    data_axes: tuple = static_field(default=("data",))  # pallas_sharded row axes
+    mesh: object = static_field(default=None)  # explicit mesh (else live context)
 
     @property
     def shape(self):
@@ -134,6 +141,12 @@ class KernelOperator(LinearOperator):
             from repro.kernels.kernel_matmul.ops import kernel_matmul
 
             out = kernel_matmul(self.kernel, self.X, M)
+        elif self.mode == "pallas_sharded":
+            from repro.kernels.kernel_matmul.ops import sharded_kernel_matmul
+
+            out = sharded_kernel_matmul(
+                self.kernel, self.X, M, self._mesh(), self.data_axes
+            )
         else:  # pragma: no cover
             raise ValueError(self.mode)
         if self.shard_rows:
@@ -141,6 +154,44 @@ class KernelOperator(LinearOperator):
 
             out = jax.lax.with_sharding_constraint(out, P(("pod", "data"), None))
         return out[:, 0] if squeeze else out
+
+    def _mesh(self):
+        if self.mesh is not None:
+            return self.mesh
+        from repro.distributed.sharding import current_mesh
+
+        mesh = current_mesh()
+        if mesh is None:
+            raise ValueError("pallas_sharded needs a mesh (field or live context)")
+        return mesh
+
+    def prepare(self):
+        """Hoist the lengthscale pre-scaling + lane padding out of the CG
+        loop: returns an operator whose per-iteration matmul consumes the
+        already-scaled X (single-device and sharded pallas modes)."""
+        if self.mode not in ("pallas", "pallas_sharded"):
+            return self
+        from repro.kernels.kernel_matmul.ops import (
+            _stationary_kernel_type,
+            prescale_inputs,
+        )
+
+        cls = (
+            PreparedPallasKernelOperator
+            if self.mode == "pallas"
+            else PreparedShardedPallasKernelOperator
+        )
+        extra = {} if self.mode == "pallas" else {
+            "data_axes": self.data_axes,
+            "mesh": self._mesh(),
+        }
+        return cls(
+            kernel=self.kernel,
+            X=self.X,
+            Xs=prescale_inputs(self.X, self.kernel.lengthscale),
+            kernel_type=_stationary_kernel_type(self.kernel),
+            **extra,
+        )
 
     def _blocked_matmul(self, M):
         n = self.X.shape[0]
@@ -154,6 +205,88 @@ class KernelOperator(LinearOperator):
 
         out = jax.lax.map(one_block, blocks).reshape(-1, M.shape[1])
         return out[:n]
+
+    def row(self, i):
+        return self.kernel(self.X[i][None, :], self.X)[0]
+
+    def diagonal(self):
+        return self.kernel.diag(self.X)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PreparedPallasKernelOperator(LinearOperator):
+    """KernelOperator(mode='pallas') after ``prepare()``: X is already
+    divided by the (possibly ARD) lengthscale and lane-padded, so the CG
+    loop's per-iteration matmul does no redundant pre-scaling work."""
+
+    kernel: object  # original kernel (row/diagonal accessors, outputscale)
+    X: jax.Array  # (n, d) original inputs (row/diagonal accessors)
+    Xs: jax.Array  # (n, d128) pre-scaled + lane-aligned
+    kernel_type: str = static_field(default="rbf")
+
+    @property
+    def shape(self):
+        n = self.X.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    def matmul(self, M):
+        from repro.kernels.kernel_matmul.ops import fused_kernel_matmul_prescaled
+
+        return fused_kernel_matmul_prescaled(
+            self.Xs,
+            self.Xs,
+            M,
+            self.kernel.outputscale,
+            jnp.float32(0.0),
+            kernel_type=self.kernel_type,
+        )
+
+    def row(self, i):
+        return self.kernel(self.X[i][None, :], self.X)[0]
+
+    def diagonal(self):
+        return self.kernel.diag(self.X)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PreparedShardedPallasKernelOperator(LinearOperator):
+    """KernelOperator(mode='pallas_sharded') after ``prepare()``: pre-scaled
+    X and a resolved mesh, so the CG loop's per-iteration matmul is just the
+    shard_map'd Pallas call (one RHS all-gather, no redundant pre-scaling)."""
+
+    kernel: object
+    X: jax.Array
+    Xs: jax.Array  # (n, d128) pre-scaled + lane-aligned, replicated
+    kernel_type: str = static_field(default="rbf")
+    data_axes: tuple = static_field(default=("data",))
+    mesh: object = static_field(default=None)
+
+    @property
+    def shape(self):
+        n = self.X.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return self.X.dtype
+
+    def matmul(self, M):
+        from repro.kernels.kernel_matmul.ops import sharded_kernel_matmul_prescaled
+
+        return sharded_kernel_matmul_prescaled(
+            self.Xs,
+            M,
+            self.kernel.outputscale,
+            self.mesh,
+            self.data_axes,
+            kernel_type=self.kernel_type,
+        )
 
     def row(self, i):
         return self.kernel(self.X[i][None, :], self.X)[0]

@@ -23,7 +23,6 @@ from repro.core import (
     BBMMSettings,
     LowRankRootOperator,
     marginal_log_likelihood,
-    solve as bbmm_solve,
 )
 from repro.optim import adam
 from .exact import KERNELS, _softplus, _inv_softplus
@@ -101,16 +100,52 @@ class SGPR:
                 print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
         return params, history
 
-    def predict(self, params, X, y, Xstar):
-        """SoR predictive: mean/var under the low-rank kernel."""
-        op = self.operator(params, X)
-        R, kern, Luu = self._root(params, X)
+    # -- serving cache ---------------------------------------------------------
+    def posterior_cache(self, params, X, y):
+        """Exact O(n·m²) Woodbury serving cache for the SoR posterior.
+
+        Because K̂ = RRᵀ + σ²I exactly, the posterior solve has a closed
+        m-dimensional form — no CG at all.  Cached quantities make every
+        subsequent query O(s·m + m²):
+
+          alpha = K̂⁻¹y,   w = Rᵀα  (mean weights),
+          H = RᵀK̂⁻¹R      (variance correction in inducing coordinates),
+          Luu               (maps k(X*,U) → Rstar coordinates).
+        """
+        R, _, Luu = self._root(params, X)
+        s2 = self.noise(params)
+        m = R.shape[1]
+        G = R.T @ R
+        C = jnp.linalg.cholesky(s2 * jnp.eye(m, dtype=R.dtype) + G)
+        alpha = (y - R @ jax.scipy.linalg.cho_solve((C, True), R.T @ y)) / s2
+        H = (G - G @ jax.scipy.linalg.cho_solve((C, True), G)) / s2
+        return {
+            "alpha": alpha,
+            "w": R.T @ alpha,
+            "H": H,
+            "Luu": Luu,
+            "noise": s2,
+        }
+
+    def predict_cached(self, params, cache, Xstar):
+        """Mean/variance from the Woodbury cache — O(s·m²), no solves."""
+        kern = self.kernel(params)
         U = params["inducing"]
         Ksu = kern(Xstar, U)
-        Rstar = jax.scipy.linalg.solve_triangular(Luu, Ksu.T, lower=True).T  # (s, m)
-        Q_sx = Rstar @ R.T  # SoR cross-cov (s, n)
-        B = jnp.concatenate([y[:, None], Q_sx.T], axis=1)
-        solves = bbmm_solve(op, B, self.settings)
-        mean = Q_sx @ solves[:, 0]
-        var = jnp.sum(Rstar * Rstar, axis=1) - jnp.sum(Q_sx.T * solves[:, 1:], axis=0)
-        return mean, jnp.clip(var, 1e-8) + self.noise(params)
+        Rstar = jax.scipy.linalg.solve_triangular(
+            cache["Luu"], Ksu.T, lower=True
+        ).T  # (s, m)
+        mean = Rstar @ cache["w"]
+        var = jnp.sum(Rstar * Rstar, axis=1) - jnp.sum(
+            Rstar * (Rstar @ cache["H"]), axis=1
+        )
+        return mean, jnp.clip(var, 1e-8) + cache["noise"]
+
+    def predict(self, params, X, y, Xstar):
+        """SoR predictive: mean/var under the low-rank kernel.
+
+        Routed through :meth:`posterior_cache` — the Woodbury algebra is
+        exact for the SoR kernel, so this *replaces* the per-query CG run
+        (mean is bitwise identical between predict and predict_cached)."""
+        cache = self.posterior_cache(params, X, y)
+        return self.predict_cached(params, cache, Xstar)

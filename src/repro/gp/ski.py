@@ -27,6 +27,9 @@ from repro.core import (
     KroneckerOperator,
     ScaledOperator,
     ToeplitzOperator,
+    build_posterior_cache,
+    cached_inv_quad,
+    cached_mean,
     marginal_log_likelihood,
     solve as bbmm_solve,
 )
@@ -164,26 +167,49 @@ class SKI:
                 print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
         return params, geom, history
 
-    def predict(self, params, geom, y, Xstar):
-        """SKI predictive mean/var: cross-covariances interpolate the same
-        grid (k(x*, X) ≈ w*ᵀ K_UU Wᵀ)."""
-        op = self.operator(params, geom)
+    def _cross(self, params, geom, Xstar):
+        """SKI cross-covariance machinery for a test block: returns
+        (KXs (n, s), kss (s,)) — k(x*, X) ≈ W* K_UU Wᵀ interpolated on the
+        same grid as training."""
         kuu = self._kuu(params, geom["grid"])
         s_idx, s_val = geom["grid"].interpolate(Xstar)
-
         star_op = InterpolatedOperator(indices=s_idx, values=s_val, base=kuu)
-        # cross matmul: Q_sx @ V = W* K_UU (Wᵀ V)
-        train_op = op.base  # the InterpolatedOperator over training W
+        train_op = InterpolatedOperator(
+            indices=geom["indices"], values=geom["values"], base=kuu
+        )
+        KXs = train_op._W_matmul(
+            kuu.matmul(star_op._Wt_matmul(jnp.eye(Xstar.shape[0])))
+        )
+        return KXs, star_op.diagonal()
 
-        def cross_matmul(V):
-            return star_op._W_matmul(kuu.matmul(train_op._Wt_matmul(V)))
+    def posterior_cache(self, params, geom, y, *, key=None, variance_cache=True):
+        """One engine call → :class:`repro.core.PosteriorCache` over the SKI
+        operator (fixed default key ⇒ deterministic rebuilds, and
+        ``predict`` shares this exact path for its mean)."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        return build_posterior_cache(
+            self.operator(params, geom), y, key, self.settings,
+            variance_cache=variance_cache,
+        )
 
-        alpha = bbmm_solve(op, y[:, None], self.settings)[:, 0]
-        mean = cross_matmul(alpha[:, None])[:, 0]
+    def predict_cached(self, params, geom, cache, Xstar):
+        """Serve SKI mean/variance from the cache — zero CG iterations:
+        O(s·4^d + m log m) interpolation + O(n·m) Rayleigh–Ritz variance."""
+        KXs, kss = self._cross(params, geom, Xstar)
+        mean = cached_mean(cache, KXs)
+        var = kss - cached_inv_quad(cache, KXs)
+        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
 
-        # diagonal of predictive covariance via probe solves on k_X*
-        KXs = train_op._W_matmul(kuu.matmul(star_op._Wt_matmul(jnp.eye(Xstar.shape[0]))))
-        solves = bbmm_solve(op, KXs, self.settings)
-        kss = star_op.diagonal()
+    def predict(self, params, geom, y, Xstar, *, key=None):
+        """SKI predictive mean/var: cross-covariances interpolate the same
+        grid (k(x*, X) ≈ w*ᵀ K_UU Wᵀ).  Mean comes from the posterior cache
+        (bitwise identical to ``predict_cached``); variance runs exact mBCG
+        solves against k_X*."""
+        cache = self.posterior_cache(params, geom, y, key=key, variance_cache=False)
+        op = self.operator(params, geom)
+        KXs, kss = self._cross(params, geom, Xstar)
+        mean = cached_mean(cache, KXs)
+        # variance: exact solves, reusing the cache's preconditioner factors
+        solves = bbmm_solve(op, KXs, self.settings, precond=cache.precond)
         var = kss - jnp.sum(KXs * solves, axis=0)
         return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])

@@ -14,6 +14,20 @@ revisited across j and accumulated in place (classic Pallas reduction
 pattern).  Distance algebra uses the ‖x‖²+‖x'‖²−2xxᵀ expansion so the MXU
 does the heavy lifting; exp/Matérn polynomials run on the VPU.
 
+Edge handling is *in-kernel*: the grid rounds up (``pl.cdiv``) and a column
+validity mask zeroes both the kernel-tile columns and the RHS rows that fall
+beyond ``n_cols`` — no host-side padding of M (which would otherwise be paid
+on every CG iteration), no ``n % block == 0`` restriction.  Partial edge
+blocks may read unspecified values; every such value is routed through a
+``jnp.where`` before it can reach the accumulator.
+
+Row partitioning for multi-device execution: the row operand ``X1`` may be a
+contiguous row-shard of the full X whose global position is given by the
+dynamic ``row_offset`` operand — the σ²-diagonal is emitted at global
+row == global col, so D devices can each compute their (n/D, t) slab of the
+product while only the (n, t) RHS is ever all-gathered (Wang et al. 2019,
+"Exact GPs on a Million Data Points").
+
 Block defaults (256, 512) keep the working set ≈ (256+512)·128·4B for X
 tiles + 256·512·4B for the kernel tile + M/out tiles ≈ 1.3 MB ≪ 16 MB VMEM
 at t=128, and all matmul dims are multiples of the 128-lane MXU.
@@ -45,15 +59,17 @@ def _apply_stationary(kernel_type: str, d2, outputscale):
 
 
 def _kernel_matmul_kernel(
+    off_ref,  # (1,) int32  global row offset of the X1 shard (SMEM-like)
     x1_ref,  # (bn, d)   row block of X / ℓ
     x2_ref,  # (bm, d)   col block of X / ℓ
     m_ref,  # (bm, t)   block of M
-    scal_ref,  # (2,)    [outputscale, sigma2]  (SMEM)
+    scal_ref,  # (2,)    [outputscale, sigma2]
     o_ref,  # (bn, t)   output tile (revisited over j)
     *,
     kernel_type: str,
     bn: int,
     bm: int,
+    n_cols: int,
 ):
     i, j = pl.program_id(0), pl.program_id(1)
 
@@ -62,6 +78,7 @@ def _kernel_matmul_kernel(
     m = m_ref[...].astype(jnp.float32)
     outputscale = scal_ref[0]
     sigma2 = scal_ref[1]
+    row_offset = off_ref[0]
 
     # ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2⟨xi, xj⟩   (inner product on the MXU)
     n1 = jnp.sum(x1 * x1, axis=-1, keepdims=True)  # (bn, 1)
@@ -73,10 +90,19 @@ def _kernel_matmul_kernel(
 
     k_tile = _apply_stationary(kernel_type, d2, outputscale)
 
-    # added diagonal σ²I where global row == global col
-    rows = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 0)
+    # global coordinates of this tile
+    rows = row_offset + i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 0)
     cols = j * bm + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+
+    # added diagonal σ²I where global row == global col, then edge masking:
+    # kernel-tile columns beyond n_cols are zeroed (kills any unspecified
+    # values a partial x2 block may have produced — NaN-safe via where)
     k_tile = k_tile + jnp.where(rows == cols, sigma2, 0.0)
+    k_tile = jnp.where(cols < n_cols, k_tile, 0.0)
+
+    # matching mask on the RHS rows of this block
+    m_rows = j * bm + jax.lax.broadcasted_iota(jnp.int32, m.shape, 0)
+    m = jnp.where(m_rows < n_cols, m, 0.0)
 
     partial_out = jax.lax.dot_general(
         k_tile, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
@@ -91,36 +117,54 @@ def _kernel_matmul_kernel(
         o_ref[...] += partial_out
 
 
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
 def kernel_matmul_pallas(
-    X_scaled: jax.Array,  # (n, d)  inputs pre-divided by lengthscale, padded
-    M: jax.Array,  # (n, t)  padded
+    X1: jax.Array,  # (rows, d) row shard, pre-divided by lengthscale
+    X2: jax.Array,  # (cols, d) full column inputs, pre-divided by lengthscale
+    M: jax.Array,  # (cols, t)
     outputscale: jax.Array,
     sigma2: jax.Array,
+    row_offset: jax.Array | int = 0,  # global row index of X1[0]
     *,
     kernel_type: str = "rbf",
     bn: int = 256,
     bm: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
-    n, d = X_scaled.shape
-    t = M.shape[1]
-    assert n % bn == 0 and n % bm == 0, (n, bn, bm)
+    """(K(X1, X2) + σ²I_global) @ M → (rows, t), edge-masked in kernel."""
+    rows, d = X1.shape
+    cols, t = M.shape
+    assert X2.shape[0] == cols, (X2.shape, M.shape)
+
+    # clamp blocks to the (sublane-aligned) problem size so tiny problems
+    # don't allocate huge VMEM tiles; the grid rounds up and the kernel masks
+    bn = min(bn, _round_up(rows, 8))
+    bm = min(bm, _round_up(cols, 8))
 
     scal = jnp.stack([outputscale.astype(jnp.float32), sigma2.astype(jnp.float32)])
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1)
 
-    grid = (n // bn, n // bm)
+    grid = (pl.cdiv(rows, bn), pl.cdiv(cols, bm))
     return pl.pallas_call(
         functools.partial(
-            _kernel_matmul_kernel, kernel_type=kernel_type, bn=bn, bm=bm
+            _kernel_matmul_kernel,
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            n_cols=cols,
         ),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
             pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
             pl.BlockSpec((bm, t), lambda i, j: (j, 0)),
             pl.BlockSpec((2,), lambda i, j: (0,)),
         ],
         out_specs=pl.BlockSpec((bn, t), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, t), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((rows, t), jnp.float32),
         interpret=interpret,
-    )(X_scaled, X_scaled, M, scal)
+    )(off, X1, X2, M, scal)

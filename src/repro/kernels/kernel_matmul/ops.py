@@ -1,8 +1,18 @@
-"""Jit'd public wrapper for the fused kernel matmul.
+"""Jit'd public wrappers for the fused kernel matmul.
 
-Handles padding to hardware-aligned tiles, lengthscale pre-scaling,
-backend selection (interpret=True off-TPU), and the LinearOperator-facing
-API used by ``KernelOperator(mode="pallas")``.
+Three layers:
+
+  * :func:`prescale_inputs` — the once-per-solve work: ARD lengthscale
+    division + MXU lane alignment of the feature dim.  Hoisted out of the CG
+    loop via ``KernelOperator.prepare()`` so it is paid once per solve, not
+    once per iteration.
+  * :func:`fused_kernel_matmul` / :func:`fused_kernel_matmul_prescaled` —
+    single-device entry points (edge masking is in-kernel; M is never padded).
+  * :func:`sharded_kernel_matmul` — ``shard_map`` row-partitioned execution:
+    each of D devices keeps only its (n/D × bm) kernel tiles in VMEM and the
+    only collective per matmul is ONE all-gather of the (n, t) RHS —
+    O(n·t) communication against O(n²·(d+t)/D) compute, the multi-device
+    extension of BBMM from Wang et al. 2019.
 """
 
 from __future__ import annotations
@@ -11,6 +21,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from .kernel_matmul import kernel_matmul_pallas
 
@@ -28,10 +39,61 @@ def _on_tpu():
     return jax.default_backend() == "tpu"
 
 
-@partial(
-    jax.jit,
-    static_argnames=("kernel_type", "bn", "bm", "interpret"),
-)
+def prescale_inputs(X, lengthscale):
+    """X/ℓ (ARD broadcasts a (d,) ℓ per-dimension) + lane-align features.
+
+    This is everything about X the kernel needs that does not change across
+    CG iterations — call once per solve."""
+    Xs = (X / lengthscale).astype(jnp.float32)
+    return _pad_to(Xs, 128, 1)
+
+
+@partial(jax.jit, static_argnames=("kernel_type", "bn", "bm", "interpret"))
+def fused_kernel_matmul_prescaled(
+    Xs_rows,
+    Xs_cols,
+    M,
+    outputscale,
+    sigma2,
+    row_offset=0,
+    *,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+):
+    """(K(X1,X2)+σ²I) @ M for pre-scaled inputs. Returns f32 (rows, t).
+
+    Accepts a leading batch dim on M ((b, n, t) → vmapped pallas call)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    squeeze = M.ndim == 1
+    if squeeze:
+        M = M[:, None]
+    t0 = M.shape[-1]
+    if not interpret:
+        # compiled (Mosaic) path: keep the tile's trailing dim a multiple of
+        # the 128-lane MXU — the row dim needs no padding (in-kernel masked)
+        M = _pad_to(M, 128, M.ndim - 1)
+    call = partial(
+        kernel_matmul_pallas,
+        kernel_type=kernel_type,
+        bn=bn,
+        bm=bm,
+        interpret=interpret,
+    )
+    outputscale = jnp.asarray(outputscale)
+    sigma2 = jnp.asarray(sigma2)
+    if M.ndim == 3:  # batched RHS: one grid per batch element via vmap
+        out = jax.vmap(
+            lambda m: call(Xs_rows, Xs_cols, m.astype(jnp.float32), outputscale, sigma2, row_offset)
+        )(M)
+        return out[..., :t0]
+    out = call(Xs_rows, Xs_cols, M.astype(jnp.float32), outputscale, sigma2, row_offset)
+    out = out[:, :t0]
+    return out[:, 0] if squeeze else out
+
+
 def fused_kernel_matmul(
     X,
     M,
@@ -44,53 +106,126 @@ def fused_kernel_matmul(
     bm=512,
     interpret=None,
 ):
-    """(K(X,X)+σ²I) @ M via the Pallas kernel. Returns f32 (n, t)."""
-    if interpret is None:
-        interpret = not _on_tpu()
-    squeeze = M.ndim == 1
-    if squeeze:
-        M = M[:, None]
-    n, t0 = X.shape[0], M.shape[1]
-
-    blk = max(bn, bm)
-    Xs = (X / lengthscale).astype(jnp.float32)
-    Xp = _pad_to(Xs, blk, 0)
-    Xp = _pad_to(Xp, 128, 1)  # lane-align the feature dim for the MXU
-    Mp = _pad_to(_pad_to(M.astype(jnp.float32), blk, 0), 128, 1)
-
-    # σ² must not touch padded phantom rows' diagonal? — harmless: padded
-    # rows produce padded outputs that are sliced away, and padded columns
-    # of X are zero so they contribute k(x,0)·0-block only via M's zero rows.
-    out = kernel_matmul_pallas(
-        Xp,
-        Mp,
-        jnp.asarray(outputscale),
-        jnp.asarray(sigma2),
+    """(K(X,X)+σ²I) @ M via the Pallas kernel (any n — no padding of M)."""
+    Xs = prescale_inputs(X, lengthscale)
+    return fused_kernel_matmul_prescaled(
+        Xs,
+        Xs,
+        M,
+        outputscale,
+        sigma2,
         kernel_type=kernel_type,
-        bn=min(bn, Xp.shape[0]),
-        bm=min(bm, Xp.shape[0]),
+        bn=bn,
+        bm=bm,
         interpret=interpret,
     )
-    out = out[:n, :t0]
-    return out[:, 0] if squeeze else out
+
+
+def _stationary_kernel_type(kernel):
+    from repro.gp.kernels import RBFKernel, MaternKernel
+
+    if isinstance(kernel, RBFKernel):
+        return "rbf"
+    if isinstance(kernel, MaternKernel):
+        return {0.5: "matern12", 1.5: "matern32", 2.5: "matern52"}[kernel.nu]
+    raise TypeError(f"pallas path supports stationary kernels, got {kernel}")
 
 
 def kernel_matmul(kernel, X, M):
     """LinearOperator-facing dispatch: map a repro.gp kernel object onto the
     fused Pallas call (no σ² — the AddedDiagOperator adds it outside)."""
-    from repro.gp.kernels import RBFKernel, MaternKernel
-
-    if isinstance(kernel, RBFKernel):
-        ktype = "rbf"
-    elif isinstance(kernel, MaternKernel):
-        ktype = {0.5: "matern12", 1.5: "matern32", 2.5: "matern52"}[kernel.nu]
-    else:
-        raise TypeError(f"pallas path supports stationary kernels, got {kernel}")
     return fused_kernel_matmul(
         X,
         M,
         kernel.lengthscale,
         kernel.outputscale,
         jnp.float32(0.0),
-        kernel_type=ktype,
+        kernel_type=_stationary_kernel_type(kernel),
+    )
+
+
+def sharded_kernel_matmul_prescaled(
+    Xs,
+    M,
+    outputscale,
+    mesh,
+    axes=("data",),
+    *,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+):
+    """Row-partitioned fused kernel matmul for pre-scaled inputs.
+
+    Layout: Xs replicated (n·d is small), M row-sharded over ``axes``.  Each
+    device all-gathers M (the only collective), slices its own row band of
+    Xs, and runs the Pallas kernel with the band's global ``row_offset`` so
+    tile coordinates — and the σ² diagonal, were it nonzero — stay globally
+    correct.  Output is row-sharded like M.
+    """
+    from repro.distributed.sharding import compat_shard_map, mesh_axis_sizes
+
+    squeeze = M.ndim == 1
+    if squeeze:
+        M = M[:, None]
+    n = Xs.shape[0]
+    sizes = mesh_axis_sizes(mesh)
+    shards = 1
+    for a in axes:
+        shards *= sizes[a]
+    if n % shards != 0:
+        raise ValueError(f"n={n} must divide evenly over {shards} shards")
+
+    def body(Xs_full, M_loc, outputscale):
+        M_full = jax.lax.all_gather(M_loc, axes, axis=0, tiled=True)
+        idx = jax.lax.axis_index(axes)
+        n_loc = n // shards
+        X_loc = jax.lax.dynamic_slice_in_dim(Xs_full, idx * n_loc, n_loc, axis=0)
+        return fused_kernel_matmul_prescaled(
+            X_loc,
+            Xs_full,
+            M_full,
+            outputscale,
+            jnp.float32(0.0),
+            row_offset=idx * n_loc,
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            interpret=interpret,
+        )
+
+    out = compat_shard_map(
+        body,
+        mesh,
+        in_specs=(P(None, None), P(axes, None), P()),
+        out_specs=P(axes, None),
+    )(Xs, M.astype(jnp.float32), jnp.asarray(outputscale, jnp.float32))
+    return out[:, 0] if squeeze else out
+
+
+def sharded_kernel_matmul(
+    kernel,
+    X,
+    M,
+    mesh,
+    axes=("data",),
+    *,
+    bn=256,
+    bm=512,
+    interpret=None,
+):
+    """Row-partitioned fused kernel matmul K(X,X) @ M over a device mesh
+    (convenience wrapper: prescales per call — the CG hot path goes through
+    ``KernelOperator.prepare()`` so prescaling is paid once per solve)."""
+    return sharded_kernel_matmul_prescaled(
+        prescale_inputs(X, kernel.lengthscale),
+        M,
+        kernel.outputscale,
+        mesh,
+        axes,
+        kernel_type=_stationary_kernel_type(kernel),
+        bn=bn,
+        bm=bm,
+        interpret=interpret,
     )

@@ -1,0 +1,202 @@
+"""PosteriorCache: repeated posterior queries must be bitwise identical to
+the uncached path on the mean, skip CG entirely, and never *undershoot* the
+exact posterior variance (the Rayleigh–Ritz projection is conservative)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.inference as inference_mod
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    DenseOperator,
+    build_posterior_cache,
+    cached_inv_quad,
+    cached_mean,
+)
+from repro.gp import SGPR, SKI, ExactGP
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def toy(key, n, noise=0.05):
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, 1)) * 2.0 - 1.0
+    y = jnp.sin(4.0 * x[:, 0]) + noise * jax.random.normal(ky, (n,))
+    return x, y
+
+
+class TestCoreCache:
+    def test_mean_matches_dense_solve(self):
+        n = 100
+        x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(0), (n,)))
+        K = jnp.exp(-((x[:, None] - x[None, :]) ** 2) / (2 * 0.25**2))
+        op = AddedDiagOperator(DenseOperator(K), 0.05)
+        y = jnp.sin(5 * x)
+        s = BBMMSettings(num_probes=8, max_cg_iters=60, cg_tol=1e-8)
+        cache = build_posterior_cache(op, y, jax.random.PRNGKey(1), s)
+        Kd = K + 0.05 * jnp.eye(n)
+        xs = jnp.linspace(0, 1, 30)
+        Kxs = jnp.exp(-((x[:, None] - xs[None, :]) ** 2) / (2 * 0.25**2))
+        np.testing.assert_allclose(
+            cached_mean(cache, Kxs), Kxs.T @ jnp.linalg.solve(Kd, y), rtol=1e-3, atol=1e-4
+        )
+
+    def test_variance_conservative_and_tight_at_full_rank(self):
+        """k*ᵀ·basis(G⁻¹)basisᵀ·k* ≤ k*ᵀK̂⁻¹k* always (never-overconfident
+        serving variance); equality once the cache basis spans ℝⁿ."""
+        n = 60
+        x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(2), (n,)))
+        K = jnp.exp(-((x[:, None] - x[None, :]) ** 2) / (2 * 0.3**2))
+        op = AddedDiagOperator(DenseOperator(K), 0.1)
+        y = jnp.sin(5 * x)
+        Kd = K + 0.1 * jnp.eye(n)
+        xs = jnp.linspace(0, 1, 40)
+        Kxs = jnp.exp(-((x[:, None] - xs[None, :]) ** 2) / (2 * 0.3**2))
+        exact = jnp.sum(Kxs * jnp.linalg.solve(Kd, Kxs), axis=0)
+
+        # full-rank cache: (t+1)(p+1) ≥ n  →  essentially exact
+        s = BBMMSettings(num_probes=8, max_cg_iters=40, cg_tol=1e-8)
+        cache = build_posterior_cache(op, y, jax.random.PRNGKey(3), s)
+        q = cached_inv_quad(cache, Kxs)
+        assert bool(jnp.all(q <= exact + 1e-3 * exact.max()))
+        np.testing.assert_allclose(np.asarray(q), np.asarray(exact), rtol=5e-3, atol=1e-4)
+
+        # small cache: still conservative
+        s_small = BBMMSettings(num_probes=2, max_cg_iters=6, cg_tol=1e-8)
+        cache_small = build_posterior_cache(op, y, jax.random.PRNGKey(4), s_small)
+        q_small = cached_inv_quad(cache_small, Kxs)
+        assert bool(jnp.all(q_small <= exact + 1e-3 * exact.max()))
+
+
+class TestExactGPCache:
+    def test_mean_bitwise_identical_and_skips_cg(self, monkeypatch):
+        """Acceptance: cached predictions are bitwise-identical on the mean
+        to the uncached path, and the cached query performs ZERO mBCG calls
+        (counted by monkeypatching the engine's CG entry point)."""
+        X, y = toy(jax.random.PRNGKey(0), 120)
+        gp = ExactGP(settings=BBMMSettings(max_cg_iters=40))
+        params = gp.init_params(1)
+        Xs = jnp.linspace(-1, 1, 37)[:, None]
+
+        mean_ref, var_ref = gp.predict(params, X, y, Xs)
+
+        calls = {"n": 0}
+        real_mbcg = inference_mod.mbcg
+
+        def counting_mbcg(*a, **k):
+            calls["n"] += 1
+            return real_mbcg(*a, **k)
+
+        monkeypatch.setattr(inference_mod, "mbcg", counting_mbcg)
+
+        cache = gp.posterior_cache(params, X, y)
+        build_calls = calls["n"]
+        assert build_calls >= 1  # the one engine call lives in the build
+
+        for _ in range(3):  # repeated serving queries
+            mean_c, var_c = gp.predict_cached(params, X, cache, Xs)
+        assert calls["n"] == build_calls  # ZERO additional CG solves
+        assert np.array_equal(np.asarray(mean_c), np.asarray(mean_ref))
+        assert bool(jnp.all(var_c > 0))
+        # conservative: never undershoots the exact posterior variance
+        # (var_ref is itself CG-approximate — allow its convergence slack)
+        assert bool(jnp.all(var_c >= var_ref - 1e-3))
+
+    def test_cache_rebuild_deterministic(self):
+        X, y = toy(jax.random.PRNGKey(1), 80)
+        gp = ExactGP()
+        params = gp.init_params(1)
+        c1 = gp.posterior_cache(params, X, y)
+        c2 = gp.posterior_cache(params, X, y)
+        assert np.array_equal(np.asarray(c1.alpha), np.asarray(c2.alpha))
+        assert np.array_equal(np.asarray(c1.basis), np.asarray(c2.basis))
+
+    def test_full_cov_cached(self):
+        X, y = toy(jax.random.PRNGKey(2), 60)
+        gp = ExactGP(settings=BBMMSettings(max_cg_iters=60, cg_tol=1e-8))
+        params = gp.init_params(1)
+        Xs = jnp.linspace(-1, 1, 9)[:, None]
+        cache = gp.posterior_cache(params, X, y)
+        mean, cov = gp.predict_cached(params, X, cache, Xs, full_cov=True)
+        assert cov.shape == (9, 9)
+        np.testing.assert_allclose(cov, cov.T, atol=1e-5)
+        assert bool(jnp.all(jnp.diagonal(cov) > -1e-5))
+
+
+class TestSGPRCache:
+    def test_predict_equals_cached_and_skips_cg(self, monkeypatch):
+        X, y = toy(jax.random.PRNGKey(3), 200)
+        gp = SGPR(num_inducing=30)
+        params = gp.init_params(X)
+        Xs = jnp.linspace(-0.9, 0.9, 25)[:, None]
+
+        mean_ref, var_ref = gp.predict(params, X, y, Xs)
+
+        calls = {"n": 0}
+        real_mbcg = inference_mod.mbcg
+        monkeypatch.setattr(
+            inference_mod,
+            "mbcg",
+            lambda *a, **k: (calls.__setitem__("n", calls["n"] + 1), real_mbcg(*a, **k))[1],
+        )
+        cache = gp.posterior_cache(params, X, y)
+        mean_c, var_c = gp.predict_cached(params, cache, Xs)
+        assert calls["n"] == 0  # SoR cache is pure Woodbury — no CG anywhere
+        assert np.array_equal(np.asarray(mean_c), np.asarray(mean_ref))
+        np.testing.assert_allclose(np.asarray(var_c), np.asarray(var_ref), rtol=1e-6)
+
+    def test_woodbury_cache_exact_vs_dense(self):
+        """The SoR cache is algebraically exact: compare with a dense solve
+        of the SoR kernel."""
+        X, y = toy(jax.random.PRNGKey(4), 90)
+        gp = SGPR(num_inducing=20, jitter=1e-5)
+        params = gp.init_params(X)
+        R, kern, Luu = gp._root(params, X)
+        Kd = R @ R.T + gp.noise(params) * jnp.eye(90)
+        Xs = jnp.linspace(-0.9, 0.9, 15)[:, None]
+        U = params["inducing"]
+        Ksu = kern(Xs, U)
+        Rstar = jax.scipy.linalg.solve_triangular(Luu, Ksu.T, lower=True).T
+        Q_sx = Rstar @ R.T
+        mean_dense = Q_sx @ jnp.linalg.solve(Kd, y)
+        var_dense = jnp.sum(Rstar * Rstar, 1) - jnp.sum(
+            Q_sx.T * jnp.linalg.solve(Kd, Q_sx.T), 0
+        )
+        cache = gp.posterior_cache(params, X, y)
+        mean_c, var_c = gp.predict_cached(params, cache, Xs)
+        np.testing.assert_allclose(np.asarray(mean_c), np.asarray(mean_dense), rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(
+            np.asarray(var_c - gp.noise(params)),
+            np.asarray(jnp.clip(var_dense, 1e-8)),
+            rtol=2e-3,
+            atol=2e-4,
+        )
+
+
+class TestSKICache:
+    def test_mean_bitwise_and_variance_sane(self, monkeypatch):
+        X, y = toy(jax.random.PRNGKey(5), 150)
+        gp = SKI(grid_size=48, settings=BBMMSettings(max_cg_iters=30))
+        geom = gp.prepare(X)
+        params = gp.init_params(X)
+        Xs = jnp.linspace(-0.9, 0.9, 20)[:, None]
+
+        mean_ref, var_ref = gp.predict(params, geom, y, Xs)
+
+        calls = {"n": 0}
+        real_mbcg = inference_mod.mbcg
+        monkeypatch.setattr(
+            inference_mod,
+            "mbcg",
+            lambda *a, **k: (calls.__setitem__("n", calls["n"] + 1), real_mbcg(*a, **k))[1],
+        )
+        cache = gp.posterior_cache(params, geom, y)
+        build_calls = calls["n"]
+        mean_c, var_c = gp.predict_cached(params, geom, cache, Xs)
+        assert calls["n"] == build_calls  # queries add no CG
+        assert np.array_equal(np.asarray(mean_c), np.asarray(mean_ref))
+        assert bool(jnp.all(var_c > 0))
+        assert bool(jnp.all(var_c >= var_ref - 1e-3))  # conservative (CG slack)

@@ -31,6 +31,15 @@ def main() -> None:
         action="store_true",
         help="trimmed problem sizes (CI budget); affects the speed suite",
     )
+    ap.add_argument(
+        "--dtype",
+        choices=["float32", "bfloat16"],
+        default="float32",
+        help="compute dtype for the speed suite's engine rows: bfloat16 runs "
+        "them at precision='mixed' (bf16 kernel tiles, f32 accumulation, "
+        "periodic f32 residual refresh); the mixed-vs-highest tolerance row "
+        "is recorded either way",
+    )
     args = ap.parse_args()
 
     from . import complexity, mae, preconditioner, solve_error, speed
@@ -49,7 +58,7 @@ def main() -> None:
     for name in wanted:
         print(f"# --- {name} ---", flush=True)
         if name == "speed":
-            rows = suites[name](fast=args.fast)
+            rows = suites[name](fast=args.fast, dtype=args.dtype)
             _write_bench_speed(rows, fast=args.fast)
         else:
             suites[name]()

@@ -18,6 +18,7 @@ The dry-run roofline (EXPERIMENTS §Roofline) covers the hardware side.
 regenerate every PR.
 """
 
+import dataclasses
 import time
 
 import jax
@@ -37,11 +38,6 @@ from .common import emit, rbf_problem, save_artifact, timeit
 SET = BBMMSettings(num_probes=10, max_cg_iters=20, precond_rank=5)
 
 
-def _bbmm_mll_terms(K, y, key):
-    op = AddedDiagOperator(DenseOperator(K), 0.01)
-    return inv_quad_logdet(op, y, key, SET)
-
-
 def _chol_mll_terms(K, y):
     A = K + 0.01 * jnp.eye(K.shape[0])
     L = jnp.linalg.cholesky(A)
@@ -49,26 +45,35 @@ def _chol_mll_terms(K, y):
     return y @ alpha, 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
 
 
-def _bench_exact(rows, sizes, key):
-    """Fig 2 left: exact-GP engine scaling, with CG iteration counts."""
-    bbmm_j = jax.jit(_bbmm_mll_terms)
+def _bench_exact(rows, sizes, key, settings=SET, dtype="float32"):
+    """Fig 2 left: exact-GP engine scaling, with CG iteration counts.
+
+    ``dtype='bfloat16'`` runs the engine rows at precision='mixed' (the
+    --dtype flag of benchmarks/run.py)."""
+
+    def bbmm(K, y, key):
+        op = AddedDiagOperator(DenseOperator(K), 0.01)
+        return inv_quad_logdet(op, y, key, settings)
+
+    bbmm_j = jax.jit(bbmm)
     chol_j = jax.jit(_chol_mll_terms)
     for n in sizes:
         X, y = rbf_problem(jax.random.PRNGKey(0), n)
         K = jnp.exp(-0.5 * jnp.sum((X[:, None] - X[None]) ** 2, -1) / 0.25)
         t_b = timeit(bbmm_j, K, y, key)
         t_c = timeit(chol_j, K, y)
-        st = engine_state(AddedDiagOperator(DenseOperator(K), 0.01), y, key, SET)
+        st = engine_state(AddedDiagOperator(DenseOperator(K), 0.01), y, key, settings)
         iters = int(jnp.max(st.cg_iters))
         emit(
             f"fig2_exact_bbmm_n{n}",
             t_b,
-            f"chol={t_c*1e6:.0f}us;speedup={t_c/t_b:.2f}x;cg_iters={iters}",
+            f"chol={t_c*1e6:.0f}us;speedup={t_c/t_b:.2f}x;cg_iters={iters};dtype={dtype}",
         )
         rows.append(
             {
                 "model": "exact",
                 "n": n,
+                "dtype": dtype,
                 "bbmm_s": t_b,
                 "chol_s": t_c,
                 "speedup_vs_chol": t_c / t_b,
@@ -123,6 +128,102 @@ def _bench_batched(rows, key):
     )
 
 
+def _bench_precision(rows, key):
+    """Mixed-vs-highest tolerance study (ISSUE 2): wall time, CG iterations
+    to tol, and MLL absolute error of precision='mixed' (bf16 tiles + f32
+    residual refresh) against the f32 engine on the same problem."""
+    n = 512
+    kx = jax.random.PRNGKey(7)
+    X = jax.random.uniform(kx, (n, 1)) * 2 - 1
+    y = jnp.sin(4 * X[:, 0])
+    kern_K = jnp.exp(-0.5 * jnp.sum((X[:, None] - X[None]) ** 2, -1) / 0.25)
+    op = AddedDiagOperator(DenseOperator(kern_K), 0.1)
+    s_high = BBMMSettings(num_probes=10, max_cg_iters=60, precond_rank=5)
+    s_mixed = dataclasses.replace(s_high, precision="mixed")
+
+    def mll_fn(s):
+        def mll(y, key):
+            iq, ld = inv_quad_logdet(op, y, key, s)
+            return -0.5 * (iq + ld + n * jnp.log(2.0 * jnp.pi))
+
+        return jax.jit(mll)
+
+    mll_high_j, mll_mixed_j = mll_fn(s_high), mll_fn(s_mixed)
+    t_high = timeit(mll_high_j, y, key)
+    t_mixed = timeit(mll_mixed_j, y, key)
+    st_high = engine_state(op, y, key, s_high)
+    st_mixed = engine_state(op, y, key, s_mixed)
+    mll_high = float(mll_high_j(y, key))
+    mll_mixed = float(mll_mixed_j(y, key))
+    err = abs(mll_mixed - mll_high)
+    emit(
+        f"precision_mixed_vs_highest_n{n}",
+        t_mixed,
+        f"highest={t_high*1e6:.0f}us;cg_iters={int(st_mixed.cg_iters.max())}"
+        f"vs{int(st_high.cg_iters.max())};mll_abs_err={err:.3e}",
+    )
+    rows.append(
+        {
+            "model": "precision_study",
+            "n": n,
+            "highest_s": t_high,
+            "mixed_s": t_mixed,
+            "cg_iters_highest": int(st_high.cg_iters.max()),
+            "cg_iters_mixed": int(st_mixed.cg_iters.max()),
+            "resid_highest": float(st_high.residual.max()),
+            "resid_mixed": float(st_mixed.residual.max()),
+            "mll_abs_err": err,
+            "cg_tol": s_high.cg_tol,
+            "refresh_every": s_mixed.cg_refresh_every,
+        }
+    )
+
+
+def _bench_native_batch(rows):
+    """Native batch grid vs the vmapped pallas formulation it replaced:
+    analytic X-tile HBM-load accounting (the acceptance metric — the native
+    grid shares each (bn, d)/(bm, d) X tile across all b batch elements)
+    plus measured interpret-mode wall time for reference."""
+    from repro.kernels.kernel_matmul.kernel_matmul import tile_load_counts
+    from repro.kernels.kernel_matmul.ops import fused_kernel_matmul
+
+    b, n, t = 4, 256, 8
+    bn = bm = 64
+    X = jax.random.normal(jax.random.PRNGKey(8), (n, 2))
+    M = jax.random.normal(jax.random.PRNGKey(9), (b, n, t))
+    args = (jnp.float32(0.7), jnp.float32(1.0), jnp.float32(0.1))
+
+    def native(M):
+        return fused_kernel_matmul(X, M, *args, bn=bn, bm=bm, interpret=True)
+
+    def vmapped(M):
+        return jax.vmap(
+            lambda m: fused_kernel_matmul(X, m, *args, bn=bn, bm=bm, interpret=True)
+        )(M)
+
+    t_native = timeit(native, M)
+    t_vmapped = timeit(vmapped, M)
+    loads = tile_load_counts(n, n, b, t=t, bn=bn, bm=bm)
+    emit(
+        f"native_batch_grid_b{b}_n{n}",
+        t_native,
+        f"vmapped={t_vmapped*1e6:.0f}us;x_loads={loads['native_x_tile_loads']}"
+        f"vs{loads['vmapped_x_tile_loads']};tile_load_speedup={loads['x_load_ratio']:.1f}x",
+    )
+    rows.append(
+        {
+            "model": "native_batch_grid",
+            "n": n,
+            "batch": b,
+            "native_s": t_native,
+            "vmapped_s": t_vmapped,
+            "native_x_tile_loads": loads["native_x_tile_loads"],
+            "vmapped_x_tile_loads": loads["vmapped_x_tile_loads"],
+            "tile_load_speedup": loads["x_load_ratio"],
+        }
+    )
+
+
 def _bench_posterior_cache(rows):
     """PosteriorCache serving: cached query vs full (cache-building)
     prediction for repeated posterior requests."""
@@ -157,16 +258,22 @@ def _bench_posterior_cache(rows):
     )
 
 
-def run(fast=False):
+def run(fast=False, dtype="float32"):
     rows = []
     key = jax.random.PRNGKey(1)
 
     # -- Exact GP engine scaling (Fig 2 left) --------------------------------
-    _bench_exact(rows, [500, 1000] if fast else [500, 1000, 2000, 3500], key)
+    settings = SET if dtype == "float32" else dataclasses.replace(SET, precision="mixed")
+    _bench_exact(
+        rows, [500, 1000] if fast else [500, 1000, 2000, 3500], key,
+        settings=settings, dtype=dtype,
+    )
 
     # -- new hot-path levers --------------------------------------------------
     _bench_batched(rows, key)
     _bench_posterior_cache(rows)
+    _bench_precision(rows, key)
+    _bench_native_batch(rows)
 
     # -- SGPR engine (Fig 2 middle): BBMM low-rank matmul vs m³ Cholesky ----
     for n in [5000] if fast else [5000, 20000, 50000]:

@@ -21,6 +21,12 @@ from .linear_operator import (
     CallableOperator,
 )
 from .mbcg import mbcg, tridiag_matrices, MBCGResult
+from .precision import (
+    as_jnp_dtype,
+    normalize_compute_dtype,
+    precision_compute_dtype,
+    validate_precision,
+)
 from .pivoted_cholesky import pivoted_cholesky, pivoted_cholesky_dense
 from .preconditioner import (
     PivotedCholeskyPreconditioner,

@@ -104,7 +104,9 @@ class ShardedKernelOperator(LinearOperator):
         # operands — closure capture of traced values breaks vjp tracing
         kern_leaves, kern_def = jax.tree_util.tree_flatten(self.kernel)
 
-        compute_dtype = jnp.bfloat16 if self.compute_dtype == "bfloat16" else jnp.float32
+        from .precision import is_reduced
+
+        compute_dtype = jnp.bfloat16 if is_reduced(self.compute_dtype) else jnp.float32
 
         def body(kern_leaves, X_full, M_loc):
             kernel = jax.tree_util.tree_unflatten(kern_def, kern_leaves)
@@ -133,6 +135,13 @@ class ShardedKernelOperator(LinearOperator):
 
     def diagonal(self):
         return self.kernel.diag(self.X)
+
+    def with_compute_dtype(self, compute_dtype):
+        from .precision import normalize_compute_dtype
+
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
+        )
 
 
 def replicated(x):

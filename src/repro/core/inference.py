@@ -45,19 +45,60 @@ import numpy as np
 
 from .linear_operator import LinearOperator
 from .mbcg import mbcg, tridiag_matrices
+from .precision import precision_compute_dtype, validate_precision
 from .preconditioner import build_preconditioner
 from .slq import logdet_from_mbcg, slq_quadrature
 
 
 @dataclasses.dataclass(frozen=True)
 class BBMMSettings:
-    """Inference-engine knobs (paper §6 defaults)."""
+    """Inference-engine knobs (paper §6 defaults).
+
+    ``precision="mixed"`` runs the CG-loop kernel matmuls at bf16 with f32
+    accumulation (operators opt in via ``with_compute_dtype``) and installs
+    the periodic f32 residual refresh (``cg_refresh_every``) inside mBCG so
+    the ``cg_tol`` contract survives the reduced-precision matmul noise.
+    Preconditioner construction, CG vector arithmetic, gradients and the
+    posterior-cache Gram matmul always stay f32.
+    """
 
     num_probes: int = 10  # t — probe vectors for trace/logdet
     max_cg_iters: int = 20  # p — mBCG iterations
     cg_tol: float = 1e-4  # per-column relative residual target
     precond_rank: int = 5  # k — pivoted-Cholesky rank (0 = off)
     precond_jitter: float = 1e-8
+    precision: str = "highest"  # "highest" (all f32) | "mixed" (bf16 tiles)
+    cg_refresh_every: int = 2  # mixed: f32 residual-refresh period (the
+    # tolerance study in benchmarks/speed.py shows period-2 is what keeps
+    # 1e-4 tolerances reachable once bf16 RHS rounding noise ~4e-3·κ bites;
+    # longer periods trade accuracy floor for fewer f32 matmuls)
+
+
+def _solver_matmuls(op: LinearOperator, settings: BBMMSettings):
+    """The precision-policy split of one operator into the mBCG matmuls:
+    (hot-loop matmul, refresh kwargs).  "highest" → one f32 matmul, no
+    refresh; "mixed" → a bf16-tile matmul for the loop (prepared AFTER the
+    dtype switch so the pre-scaled X is stored half-width) plus the f32
+    matmul of the same operator for the periodic residual refresh."""
+    validate_precision(settings.precision)
+    solver = op.prepare()
+    if settings.precision == "mixed":
+        if settings.cg_refresh_every <= 0:
+            # the refresh is the mechanism that makes mixed mode honest —
+            # running bf16 CG without it silently reports convergence the
+            # true residual never reached
+            raise ValueError(
+                "precision='mixed' requires cg_refresh_every >= 1, got "
+                f"{settings.cg_refresh_every}"
+            )
+        mixed = op.with_compute_dtype(
+            precision_compute_dtype(settings.precision)
+        ).prepare()
+        return mixed.matmul, {
+            "refresh_every": settings.cg_refresh_every,
+            "refresh_matmul": solver.matmul,
+        }
+    return solver.matmul, {}
 
 
 class InferenceState(NamedTuple):
@@ -127,14 +168,15 @@ def _run_engine(
     Z = jnp.broadcast_to(Z, (*batch_shape, n, settings.num_probes))
     B = jnp.concatenate([y[..., None], Z], axis=-1)
 
-    solver = op.prepare()
+    matmul, refresh_kwargs = _solver_matmuls(op, settings)
     res = mbcg(
-        solver.matmul,
+        matmul,
         B,
         precond_solve=precond.solve,
         max_iters=settings.max_cg_iters,
         tol=settings.cg_tol,
         return_basis=return_basis,
+        **refresh_kwargs,
     )
     probe_solves = res.solves[..., 1:]
 
@@ -328,11 +370,13 @@ def solve(op, B, settings: BBMMSettings = BBMMSettings(), *, precond=None):
         precond = build_preconditioner(
             op, settings.precond_rank, jitter=settings.precond_jitter
         )
+    matmul, refresh_kwargs = _solver_matmuls(op, settings)
     res = mbcg(
-        op.prepare().matmul,
+        matmul,
         B,
         precond_solve=precond.solve,
         max_iters=settings.max_cg_iters,
         tol=settings.cg_tol,
+        **refresh_kwargs,
     )
     return res.solves

@@ -25,6 +25,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .precision import is_reduced, normalize_compute_dtype
+
+
+def _mixed_matmul(A, B):
+    """A @ B with bf16 MXU operands and f32 accumulation — the reduced-
+    precision contraction every mixed-policy operator shares."""
+    return jnp.matmul(
+        A.astype(jnp.bfloat16),
+        B.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
 
 def _register(cls):
     """Register a dataclass operator as a pytree (fields with metadata
@@ -88,6 +100,20 @@ class LinearOperator:
         Wrappers recurse into their children."""
         return self
 
+    # -- precision policy --------------------------------------------------
+    def with_compute_dtype(self, compute_dtype) -> "LinearOperator":
+        """Return an equivalent operator whose matmul runs its heavy
+        contractions at ``compute_dtype`` ('float32' | 'bfloat16', or the
+        'highest'/'mixed' aliases), always accumulating in f32.
+
+        Default: no-op — operators whose matmul has no reduced-precision
+        formulation worth taking (Toeplitz/FFT, diagonal, blackbox
+        callables) stay at full precision under the mixed policy, which is
+        always *correct*, just not faster.  Wrappers recurse into their
+        children; σ² diagonals and scalar scales stay f32."""
+        normalize_compute_dtype(compute_dtype)  # validate even on the no-op
+        return self
+
     # -- algebra ----------------------------------------------------------
     def __add__(self, other):
         if isinstance(other, LinearOperator):
@@ -109,9 +135,15 @@ class LinearOperator:
 @_register
 @dataclasses.dataclass(frozen=True)
 class DenseOperator(LinearOperator):
-    """Explicit symmetric matrix."""
+    """Explicit symmetric matrix.
+
+    ``compute_dtype="bfloat16"`` rounds both matmul operands to bf16 and
+    accumulates in f32 — on TPU the 2× MXU-rate path, everywhere else the
+    faithful emulation of it that the mixed-precision CG tests and the
+    benchmark tolerance study run against."""
 
     matrix: jax.Array
+    compute_dtype: str = static_field(default="float32")
 
     @property
     def shape(self):
@@ -122,7 +154,14 @@ class DenseOperator(LinearOperator):
         return self.matrix.dtype
 
     def matmul(self, M):
+        if is_reduced(self.compute_dtype):
+            return _mixed_matmul(self.matrix, M)
         return self.matrix @ M
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
+        )
 
     def diagonal(self):
         return jnp.diagonal(self.matrix)
@@ -189,6 +228,9 @@ class ScaledOperator(LinearOperator):
     def prepare(self):
         return ScaledOperator(self.base.prepare(), self.scale)
 
+    def with_compute_dtype(self, compute_dtype):
+        return ScaledOperator(self.base.with_compute_dtype(compute_dtype), self.scale)
+
 
 @_register
 @dataclasses.dataclass(frozen=True)
@@ -225,6 +267,9 @@ class SumOperator(LinearOperator):
 
     def prepare(self):
         return SumOperator(tuple(op.prepare() for op in self.ops))
+
+    def with_compute_dtype(self, compute_dtype):
+        return SumOperator(tuple(op.with_compute_dtype(compute_dtype) for op in self.ops))
 
 
 @_register
@@ -265,6 +310,10 @@ class AddedDiagOperator(LinearOperator):
     def prepare(self):
         return AddedDiagOperator(self.base.prepare(), self.sigma2)
 
+    def with_compute_dtype(self, compute_dtype):
+        # σ²·M stays f32 — only the base kernel matmul takes reduced precision
+        return AddedDiagOperator(self.base.with_compute_dtype(compute_dtype), self.sigma2)
+
 
 @_register
 @dataclasses.dataclass(frozen=True)
@@ -276,6 +325,7 @@ class LowRankRootOperator(LinearOperator):
     """
 
     root: jax.Array  # (n, m)
+    compute_dtype: str = static_field(default="float32")
 
     @property
     def shape(self):
@@ -287,7 +337,15 @@ class LowRankRootOperator(LinearOperator):
         return self.root.dtype
 
     def matmul(self, M):
+        if is_reduced(self.compute_dtype):
+            # both O(tnm) contractions at bf16, each accumulating in f32
+            return _mixed_matmul(self.root, _mixed_matmul(self.root.T, M))
         return self.root @ (self.root.T @ M)
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
+        )
 
     def diagonal(self):
         return jnp.sum(self.root * self.root, axis=-1)
@@ -407,6 +465,11 @@ class InterpolatedOperator(LinearOperator):
     def _base_entry(self, a, b):
         return self.base.row(a)[b]
 
+    def with_compute_dtype(self, compute_dtype):
+        # the sparse W gather/scatter stays f32 (segment_sum accumulation);
+        # only the base K_UU matmul is eligible for reduced precision
+        return dataclasses.replace(self, base=self.base.with_compute_dtype(compute_dtype))
+
 
 @_register
 @dataclasses.dataclass(frozen=True)
@@ -467,6 +530,11 @@ class KroneckerOperator(LinearOperator):
             r = jnp.outer(r, f.row(j)).reshape(-1)
         return r
 
+    def with_compute_dtype(self, compute_dtype):
+        return KroneckerOperator(
+            tuple(f.with_compute_dtype(compute_dtype) for f in self.factors)
+        )
+
 
 @_register
 @dataclasses.dataclass(frozen=True)
@@ -476,6 +544,7 @@ class BatchDenseOperator(LinearOperator):
     takes (b, n, t)."""
 
     matrices: jax.Array  # (b, n, n)
+    compute_dtype: str = static_field(default="float32")
 
     @property
     def shape(self):
@@ -490,7 +559,14 @@ class BatchDenseOperator(LinearOperator):
         return self.matrices.dtype
 
     def matmul(self, M):
+        if is_reduced(self.compute_dtype):
+            return _mixed_matmul(self.matrices, M)
         return self.matrices @ M  # broadcasts (b,n,n) @ (..., n, t)
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
+        )
 
     def diagonal(self):
         return jax.vmap(jnp.diagonal)(self.matrices)

@@ -1,0 +1,76 @@
+"""The BBMM precision policy.
+
+BBMM's entire cost is the repeated kernel matmul inside mBCG, so the one
+precision decision that matters is the dtype of the *kernel tiles* and the
+tile×RHS products on the MXU.  Everything else — CG vector updates, inner
+products, the σ² diagonal, preconditioner solves, gradients — always stays
+in float32.
+
+Two policies, named from the user-facing end down to the kernel:
+
+  * ``precision="highest"`` → ``compute_dtype="float32"``: every stage f32
+    (the seed behaviour).
+  * ``precision="mixed"``   → ``compute_dtype="bfloat16"``: kernel tiles and
+    the tile×RHS product run in bf16 with f32 accumulation
+    (``preferred_element_type=float32``) — double MXU throughput and half
+    the HBM/all-gather payload for X and M.  CG tolerance semantics are
+    preserved by a periodic f32 residual refresh inside mBCG (see
+    ``repro.core.mbcg``).
+
+``compute_dtype`` is the low-level knob threaded through the Pallas kernel,
+``prescale_inputs``, the ``KernelOperator`` family and
+``LinearOperator.with_compute_dtype``; ``precision`` is the end-to-end knob
+on ``BBMMSettings`` / ``ExactGP`` / ``SGPR`` / ``SKI``.  Both accept either
+vocabulary — ``normalize_compute_dtype`` maps between them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+PRECISIONS = ("highest", "mixed")
+
+# precision alias → canonical compute_dtype name
+_PRECISION_TO_COMPUTE = {"highest": "float32", "mixed": "bfloat16"}
+
+_COMPUTE_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def normalize_compute_dtype(compute_dtype) -> str:
+    """Canonical compute-dtype name ('float32' | 'bfloat16').
+
+    Accepts either vocabulary ('highest'/'mixed' or 'float32'/'bfloat16')
+    plus actual jnp dtypes, so call sites can pass whichever knob they hold.
+    """
+    if compute_dtype in (jnp.float32, jnp.bfloat16):
+        return jnp.dtype(compute_dtype).name
+    name = _PRECISION_TO_COMPUTE.get(compute_dtype, compute_dtype)
+    if name not in _COMPUTE_DTYPES:
+        raise ValueError(
+            f"unknown compute_dtype {compute_dtype!r}; expected one of "
+            f"{sorted(_COMPUTE_DTYPES)} or precision {PRECISIONS}"
+        )
+    return name
+
+
+def as_jnp_dtype(compute_dtype):
+    """The jnp dtype for a compute_dtype/precision name."""
+    return _COMPUTE_DTYPES[normalize_compute_dtype(compute_dtype)]
+
+
+def validate_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(f"precision must be one of {PRECISIONS}, got {precision!r}")
+    return precision
+
+
+def precision_compute_dtype(precision: str) -> str:
+    """End-to-end precision knob → compute_dtype name."""
+    return _PRECISION_TO_COMPUTE[validate_precision(precision)]
+
+
+def is_reduced(compute_dtype) -> bool:
+    """True when the policy selects bf16 MXU operands.  Operators must test
+    their ``compute_dtype`` field through this (never ``== "bfloat16"``) so
+    the 'mixed' alias means the same thing on every construction path."""
+    return normalize_compute_dtype(compute_dtype) == "bfloat16"

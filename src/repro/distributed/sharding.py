@@ -56,6 +56,14 @@ def compat_shard_map(f, mesh, in_specs, out_specs):
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 
+def row_shard_spec(ndim, axes=("data",)):
+    """P(…, axes, None): shard the row (-2) dim of an (…, n, t) operand over
+    ``axes``, leading batch dims replicated — the layout of M and of the
+    matmul output in every row-partitioned BBMM path (2-dim RHS and the
+    native-batch 3-dim RHS alike)."""
+    return P(*([None] * (ndim - 2)), axes, None)
+
+
 def mesh_axes():
     mesh = current_mesh()
     return tuple(mesh.axis_names) if mesh is not None else ()

@@ -50,6 +50,19 @@ class ExactGP:
     mode: str = "dense"  # dense | blocked | pallas (the blackbox matmul impl)
     block_size: int = 512
     settings: BBMMSettings = dataclasses.field(default_factory=BBMMSettings)
+    # end-to-end precision knob: "highest" (all f32) or "mixed" (bf16 kernel
+    # tiles + f32 accumulation + periodic f32 residual refresh in mBCG).
+    # None (default) follows ``settings.precision``; an explicit value wins
+    # over it unconditionally — so replace(gp, precision="highest") really
+    # does switch a mixed model back.  ``settings.precision`` is what the
+    # engine reads either way.
+    precision: str | None = None
+
+    def __post_init__(self):
+        if self.precision is not None:
+            self.settings = dataclasses.replace(
+                self.settings, precision=self.precision
+            )
 
     # -- parameterization ---------------------------------------------------
     def init_params(self, d: int, ard: bool = False):

@@ -23,9 +23,11 @@ import jax.numpy as jnp
 
 from repro.core.linear_operator import (
     LinearOperator,
+    _mixed_matmul,
     _register,
     static_field,
 )
+from repro.core.precision import is_reduced, normalize_compute_dtype
 
 
 def sq_dist(X1: jax.Array, X2: jax.Array) -> jax.Array:
@@ -110,7 +112,14 @@ class KernelOperator(LinearOperator):
     ``mode="pallas_sharded"`` row-partitions the fused Pallas kernel over the
     mesh axes in ``data_axes`` (mesh resolved from the live context or the
     explicit ``mesh`` field): each device holds one row band, and the only
-    per-matmul collective is the all-gather of the RHS."""
+    per-matmul collective is the all-gather of the RHS.
+
+    ``compute_dtype`` ('float32' | 'bfloat16', or the 'highest'/'mixed'
+    precision aliases) selects the MXU operand dtype of the heavy
+    contractions — bf16 tiles with f32 accumulation for the pallas paths,
+    the equivalent rounded-operand matmul for the dense and blocked modes;
+    accumulation, masking and the output stay f32 (see
+    ``repro.core.precision``)."""
 
     kernel: object
     X: jax.Array  # (n, d)
@@ -119,6 +128,7 @@ class KernelOperator(LinearOperator):
     shard_rows: bool = static_field(default=False)  # annotate row sharding
     data_axes: tuple = static_field(default=("data",))  # pallas_sharded row axes
     mesh: object = static_field(default=None)  # explicit mesh (else live context)
+    compute_dtype: str = static_field(default="float32")
 
     @property
     def shape(self):
@@ -134,18 +144,20 @@ class KernelOperator(LinearOperator):
         if squeeze:
             M = M[:, None]
         if self.mode == "dense":
-            out = self.kernel(self.X, self.X) @ M
+            K = self.kernel(self.X, self.X)
+            out = _mixed_matmul(K, M) if is_reduced(self.compute_dtype) else K @ M
         elif self.mode == "blocked":
             out = self._blocked_matmul(M)
         elif self.mode == "pallas":
             from repro.kernels.kernel_matmul.ops import kernel_matmul
 
-            out = kernel_matmul(self.kernel, self.X, M)
+            out = kernel_matmul(self.kernel, self.X, M, self.compute_dtype)
         elif self.mode == "pallas_sharded":
             from repro.kernels.kernel_matmul.ops import sharded_kernel_matmul
 
             out = sharded_kernel_matmul(
-                self.kernel, self.X, M, self._mesh(), self.data_axes
+                self.kernel, self.X, M, self._mesh(), self.data_axes,
+                compute_dtype=self.compute_dtype,
             )
         else:  # pragma: no cover
             raise ValueError(self.mode)
@@ -168,7 +180,9 @@ class KernelOperator(LinearOperator):
     def prepare(self):
         """Hoist the lengthscale pre-scaling + lane padding out of the CG
         loop: returns an operator whose per-iteration matmul consumes the
-        already-scaled X (single-device and sharded pallas modes)."""
+        already-scaled X (single-device and sharded pallas modes).  Under a
+        bf16 ``compute_dtype`` the pre-scaled X is *stored* in bf16 — half
+        the HBM footprint / gather payload for the whole solve."""
         if self.mode not in ("pallas", "pallas_sharded"):
             return self
         from repro.kernels.kernel_matmul.ops import (
@@ -188,9 +202,15 @@ class KernelOperator(LinearOperator):
         return cls(
             kernel=self.kernel,
             X=self.X,
-            Xs=prescale_inputs(self.X, self.kernel.lengthscale),
+            Xs=prescale_inputs(self.X, self.kernel.lengthscale, self.compute_dtype),
             kernel_type=_stationary_kernel_type(self.kernel),
+            compute_dtype=self.compute_dtype,
             **extra,
+        )
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
     def _blocked_matmul(self, M):
@@ -199,9 +219,11 @@ class KernelOperator(LinearOperator):
         pad = (-n) % b
         Xp = jnp.pad(self.X, ((0, pad), (0, 0)))
         blocks = Xp.reshape(-1, b, self.X.shape[1])
+        reduced = is_reduced(self.compute_dtype)
 
         def one_block(Xb):
-            return self.kernel(Xb, self.X) @ M  # (b, t)
+            tile = self.kernel(Xb, self.X)  # (b, n)
+            return _mixed_matmul(tile, M) if reduced else tile @ M  # (b, t)
 
         out = jax.lax.map(one_block, blocks).reshape(-1, M.shape[1])
         return out[:n]
@@ -222,8 +244,9 @@ class PreparedPallasKernelOperator(LinearOperator):
 
     kernel: object  # original kernel (row/diagonal accessors, outputscale)
     X: jax.Array  # (n, d) original inputs (row/diagonal accessors)
-    Xs: jax.Array  # (n, d128) pre-scaled + lane-aligned
+    Xs: jax.Array  # (n, d128) pre-scaled + lane-aligned (stored at compute_dtype)
     kernel_type: str = static_field(default="rbf")
+    compute_dtype: str = static_field(default="float32")
 
     @property
     def shape(self):
@@ -244,6 +267,16 @@ class PreparedPallasKernelOperator(LinearOperator):
             self.kernel.outputscale,
             jnp.float32(0.0),
             kernel_type=self.kernel_type,
+            compute_dtype=self.compute_dtype,
+        )
+
+    def with_compute_dtype(self, compute_dtype):
+        # Xs keeps its stored dtype (a prepared bf16 Xs cannot regain f32
+        # bits); the kernel casts operands to the requested compute_dtype
+        from repro.core.precision import normalize_compute_dtype
+
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
     def row(self, i):
@@ -266,6 +299,7 @@ class PreparedShardedPallasKernelOperator(LinearOperator):
     kernel_type: str = static_field(default="rbf")
     data_axes: tuple = static_field(default=("data",))
     mesh: object = static_field(default=None)
+    compute_dtype: str = static_field(default="float32")
 
     @property
     def shape(self):
@@ -286,6 +320,12 @@ class PreparedShardedPallasKernelOperator(LinearOperator):
             self.mesh,
             self.data_axes,
             kernel_type=self.kernel_type,
+            compute_dtype=self.compute_dtype,
+        )
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
     def row(self, i):

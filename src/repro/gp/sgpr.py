@@ -39,6 +39,17 @@ class SGPR:
     settings: BBMMSettings = dataclasses.field(
         default_factory=lambda: BBMMSettings(precond_rank=1, max_cg_iters=40)
     )  # precond_rank>0 triggers the exact low-rank-root preconditioner
+    # "highest" | "mixed": mixed runs the O(tnm) root contractions at bf16
+    # (f32 accumulation) with the mBCG f32 residual refresh — see
+    # repro.core.precision.  None follows settings.precision; an explicit
+    # value overrides it unconditionally.
+    precision: str | None = None
+
+    def __post_init__(self):
+        if self.precision is not None:
+            self.settings = dataclasses.replace(
+                self.settings, precision=self.precision
+            )
 
     def init_params(self, X):
         n, d = X.shape

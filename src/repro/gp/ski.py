@@ -104,6 +104,19 @@ class SKI:
     grid_size: int = 100  # per dimension
     kernel_type: str = "rbf"
     settings: BBMMSettings = dataclasses.field(default_factory=BBMMSettings)
+    # "highest" | "mixed": accepted for API uniformity with ExactGP/SGPR.
+    # SKI's heavy stage is the FFT Toeplitz matmul, whose circulant
+    # embedding is numerically unsafe at bf16, so the operator keeps its
+    # contractions f32 (with_compute_dtype no-ops on Toeplitz) — mixed only
+    # engages the mBCG residual-refresh machinery.  None follows
+    # settings.precision; an explicit value overrides it unconditionally.
+    precision: str | None = None
+
+    def __post_init__(self):
+        if self.precision is not None:
+            self.settings = dataclasses.replace(
+                self.settings, precision=self.precision
+            )
 
     def init_params(self, X):
         d = X.shape[1]

@@ -14,6 +14,23 @@ revisited across j and accumulated in place (classic Pallas reduction
 pattern).  Distance algebra uses the ‖x‖²+‖x'‖²−2xxᵀ expansion so the MXU
 does the heavy lifting; exp/Matérn polynomials run on the VPU.
 
+Precision policy (``compute_dtype``): with ``"bfloat16"`` the two MXU
+stages — the xxᵀ inner products and the kernel-tile × RHS product — take
+bf16 operands but always accumulate in f32 (``preferred_element_type``),
+doubling MXU throughput and halving the X/M VMEM footprint.  The VPU
+stages (norms, distance assembly, exp/Matérn, the σ² diagonal and all edge
+masking) and the output stay f32 regardless: reduced precision is only
+ever applied where the MXU wins pay for it, never to the accumulator.
+
+Batched RHS is a *native grid dimension*, not a vmap: for M of shape
+(b, n, t) the grid is (rows, cols, b) with the batch dim innermost, so
+all b batch elements consume each (bn, d)/(bm, d) X tile while it sits in
+VMEM — X tiles are fetched once per (i, j) grid tile instead of once per
+(batch, i, j) as the vmapped formulation pays (``tile_load_counts`` gives
+the exact accounting).  The output block spans the whole batch (b, bn, t)
+so the j/b reduction stays on consecutive grid steps — the only pattern
+for which Pallas guarantees in-place revisiting.
+
 Edge handling is *in-kernel*: the grid rounds up (``pl.cdiv``) and a column
 validity mask zeroes both the kernel-tile columns and the RHS rows that fall
 beyond ``n_cols`` — no host-side padding of M (which would otherwise be paid
@@ -26,11 +43,14 @@ contiguous row-shard of the full X whose global position is given by the
 dynamic ``row_offset`` operand — the σ²-diagonal is emitted at global
 row == global col, so D devices can each compute their (n/D, t) slab of the
 product while only the (n, t) RHS is ever all-gathered (Wang et al. 2019,
-"Exact GPs on a Million Data Points").
+"Exact GPs on a Million Data Points").  ``row_offset`` composes with the
+batch grid, so the sharded path gets batched execution for free.
 
 Block defaults (256, 512) keep the working set ≈ (256+512)·128·4B for X
 tiles + 256·512·4B for the kernel tile + M/out tiles ≈ 1.3 MB ≪ 16 MB VMEM
-at t=128, and all matmul dims are multiples of the 128-lane MXU.
+at t=128, and all matmul dims are multiples of the 128-lane MXU.  The
+batched output block is (b, bn, t); ``bn`` is halved until it fits the
+VMEM budget for large b.
 """
 
 from __future__ import annotations
@@ -40,6 +60,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.precision import as_jnp_dtype, normalize_compute_dtype
+
+# VMEM budget for the batched (b, bn, t) f32 output block; bn is halved
+# until the block fits (the X/M/kernel tiles are small next to it).
+_BATCH_OUT_VMEM_BYTES = 4 * 1024 * 1024
 
 
 def _apply_stationary(kernel_type: str, d2, outputscale):
@@ -58,33 +84,25 @@ def _apply_stationary(kernel_type: str, d2, outputscale):
     raise ValueError(kernel_type)
 
 
-def _kernel_matmul_kernel(
-    off_ref,  # (1,) int32  global row offset of the X1 shard (SMEM-like)
-    x1_ref,  # (bn, d)   row block of X / ℓ
-    x2_ref,  # (bm, d)   col block of X / ℓ
-    m_ref,  # (bm, t)   block of M
-    scal_ref,  # (2,)    [outputscale, sigma2]
-    o_ref,  # (bn, t)   output tile (revisited over j)
-    *,
-    kernel_type: str,
-    bn: int,
-    bm: int,
-    n_cols: int,
+def _masked_kernel_tile(
+    x1, x2, scal_ref, row_offset, i, j, *, kernel_type, bn, bm, n_cols, mxu_dtype
 ):
-    i, j = pl.program_id(0), pl.program_id(1)
-
-    x1 = x1_ref[...].astype(jnp.float32)
-    x2 = x2_ref[...].astype(jnp.float32)
-    m = m_ref[...].astype(jnp.float32)
+    """One (bn, bm) kernel tile: distances on the MXU (at ``mxu_dtype`` with
+    f32 accumulation), stationary map + σ² diagonal + edge masking in f32."""
     outputscale = scal_ref[0]
     sigma2 = scal_ref[1]
-    row_offset = off_ref[0]
 
-    # ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2⟨xi, xj⟩   (inner product on the MXU)
-    n1 = jnp.sum(x1 * x1, axis=-1, keepdims=True)  # (bn, 1)
-    n2 = jnp.sum(x2 * x2, axis=-1, keepdims=True)  # (bm, 1)
+    # ‖xi−xj‖² = ‖xi‖² + ‖xj‖² − 2⟨xi, xj⟩   (inner product on the MXU).
+    # Norms are a cheap VPU reduction — keep them f32 even in mixed mode.
+    x1f = x1.astype(jnp.float32)
+    x2f = x2.astype(jnp.float32)
+    n1 = jnp.sum(x1f * x1f, axis=-1, keepdims=True)  # (bn, 1)
+    n2 = jnp.sum(x2f * x2f, axis=-1, keepdims=True)  # (bm, 1)
     inner = jax.lax.dot_general(
-        x1, x2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        x1.astype(mxu_dtype),
+        x2.astype(mxu_dtype),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )
     d2 = jnp.maximum(n1 + n2.T - 2.0 * inner, 0.0)
 
@@ -98,14 +116,43 @@ def _kernel_matmul_kernel(
     # kernel-tile columns beyond n_cols are zeroed (kills any unspecified
     # values a partial x2 block may have produced — NaN-safe via where)
     k_tile = k_tile + jnp.where(rows == cols, sigma2, 0.0)
-    k_tile = jnp.where(cols < n_cols, k_tile, 0.0)
+    return jnp.where(cols < n_cols, k_tile, 0.0)
 
-    # matching mask on the RHS rows of this block
+
+def _tile_rhs_product(k_tile, m, j, bm, n_cols, mxu_dtype):
+    """Edge-mask the RHS block and run the tile×RHS MXU stage (f32 accum)."""
     m_rows = j * bm + jax.lax.broadcasted_iota(jnp.int32, m.shape, 0)
     m = jnp.where(m_rows < n_cols, m, 0.0)
+    return jax.lax.dot_general(
+        k_tile.astype(mxu_dtype),
+        m.astype(mxu_dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
 
-    partial_out = jax.lax.dot_general(
-        k_tile, m, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+
+def _kernel_matmul_kernel(
+    off_ref,  # (1,) int32  global row offset of the X1 shard (SMEM-like)
+    x1_ref,  # (bn, d)   row block of X / ℓ
+    x2_ref,  # (bm, d)   col block of X / ℓ
+    m_ref,  # (bm, t)   block of M
+    scal_ref,  # (2,)    [outputscale, sigma2]
+    o_ref,  # (bn, t)   output tile (revisited over j)
+    *,
+    kernel_type: str,
+    bn: int,
+    bm: int,
+    n_cols: int,
+    mxu_dtype,
+):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    k_tile = _masked_kernel_tile(
+        x1_ref[...], x2_ref[...], scal_ref, off_ref[0], i, j,
+        kernel_type=kernel_type, bn=bn, bm=bm, n_cols=n_cols, mxu_dtype=mxu_dtype,
+    )
+    partial_out = _tile_rhs_product(
+        k_tile, m_ref[...].astype(jnp.float32), j, bm, n_cols, mxu_dtype
     )
 
     @pl.when(j == 0)
@@ -117,14 +164,102 @@ def _kernel_matmul_kernel(
         o_ref[...] += partial_out
 
 
+def _kernel_matmul_batched_kernel(
+    off_ref,  # (1,) int32
+    x1_ref,  # (bn, d)   row block — shared across the batch grid dim
+    x2_ref,  # (bm, d)   col block — shared across the batch grid dim
+    m_ref,  # (1, bm, t) block of this batch element's M
+    scal_ref,  # (2,)
+    o_ref,  # (b, bn, t) full-batch output slab (revisited over j and b)
+    *,
+    kernel_type: str,
+    bn: int,
+    bm: int,
+    n_cols: int,
+    mxu_dtype,
+):
+    """Native batch grid: grid (rows, cols, batch), batch innermost.
+
+    The X blocks' index maps ignore the batch coordinate, so for a fixed
+    (i, j) all b batch elements reuse the X tiles already resident in VMEM —
+    and the kernel tile itself is recomputed per batch element (cheap next to
+    the b× saving on X HBM traffic; fusing it across b would need a (bn, bm)
+    scratch that outlives the batch loop, which the output slab already
+    provides for the product).  The output block spans the whole batch and is
+    indexed only by i, so the (j, b) reduction revisits it on consecutive
+    grid steps — the supported Pallas accumulation pattern.
+    """
+    i, j, b = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    k_tile = _masked_kernel_tile(
+        x1_ref[...], x2_ref[...], scal_ref, off_ref[0], i, j,
+        kernel_type=kernel_type, bn=bn, bm=bm, n_cols=n_cols, mxu_dtype=mxu_dtype,
+    )
+    partial_out = _tile_rhs_product(
+        k_tile, m_ref[0].astype(jnp.float32), j, bm, n_cols, mxu_dtype
+    )
+
+    sl = pl.dslice(b, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[sl] = partial_out[None]
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[sl] += partial_out[None]
+
+
 def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
+
+
+def _effective_blocks(rows: int, cols: int, t: int, batch: int | None, bn: int, bm: int):
+    """The block sizes the kernel will actually run with: clamped to the
+    (sublane-aligned) problem size, and — batched — halved until the
+    (b, bn, t) f32 output slab fits the VMEM budget."""
+    bn = min(bn, _round_up(rows, 8))
+    bm = min(bm, _round_up(cols, 8))
+    if batch is not None:
+        while batch * bn * t * 4 > _BATCH_OUT_VMEM_BYTES and bn > 8:
+            bn = _round_up(bn // 2, 8)
+        if batch * bn * t * 4 > 4 * _BATCH_OUT_VMEM_BYTES:
+            # even bn=8 can't fit the (b, bn, t) output slab in VMEM —
+            # fail loudly instead of letting Mosaic die opaquely
+            raise ValueError(
+                f"batched kernel matmul: batch={batch} × t={t} output slab "
+                f"exceeds the VMEM budget even at bn=8; split the batch into "
+                f"chunks (e.g. lax.map over ≤{4 * _BATCH_OUT_VMEM_BYTES // (8 * t * 4)}"
+                f"-element groups) or reduce t"
+            )
+    return bn, bm
+
+
+def tile_load_counts(
+    rows: int, cols: int, batch: int, *, t: int = 128, bn: int = 256, bm: int = 512
+) -> dict:
+    """Analytic X-tile HBM-load accounting: native batch grid vs vmap.
+
+    Mirrors the index maps above: per batch sweep the (bn, d) row tile is
+    fetched once per i (it only changes when i does) and the (bm, d) column
+    tile once per (i, j).  The vmapped formulation pays that b times; the
+    native grid's X index maps ignore the batch coordinate, so it pays once.
+    """
+    ebn, ebm = _effective_blocks(rows, cols, t, batch, bn, bm)
+    gi, gj = pl.cdiv(rows, ebn), pl.cdiv(cols, ebm)
+    per_sweep = gi + gi * gj  # x1 loads + x2 loads for one (i, j) sweep
+    return {
+        "grid": (gi, gj, batch),
+        "native_x_tile_loads": per_sweep,
+        "vmapped_x_tile_loads": batch * per_sweep,
+        "x_load_ratio": batch,  # == vmapped / native by construction
+    }
 
 
 def kernel_matmul_pallas(
     X1: jax.Array,  # (rows, d) row shard, pre-divided by lengthscale
     X2: jax.Array,  # (cols, d) full column inputs, pre-divided by lengthscale
-    M: jax.Array,  # (cols, t)
+    M: jax.Array,  # (cols, t) or (b, cols, t)
     outputscale: jax.Array,
     sigma2: jax.Array,
     row_offset: jax.Array | int = 0,  # global row index of X1[0]
@@ -133,29 +268,45 @@ def kernel_matmul_pallas(
     bn: int = 256,
     bm: int = 512,
     interpret: bool = False,
+    compute_dtype: str = "float32",
 ) -> jax.Array:
-    """(K(X1, X2) + σ²I_global) @ M → (rows, t), edge-masked in kernel."""
+    """(K(X1, X2) + σ²I_global) @ M → (rows, t) or (b, rows, t), edge-masked
+    in kernel.  ``compute_dtype="bfloat16"`` runs the MXU stages in bf16 with
+    f32 accumulation; the output is always f32.  A 3-dim M takes the native
+    batch grid (one pallas_call, X tiles shared across the batch)."""
+    batched = M.ndim == 3
     rows, d = X1.shape
-    cols, t = M.shape
+    cols, t = M.shape[-2:]
     assert X2.shape[0] == cols, (X2.shape, M.shape)
+    mxu_dtype = as_jnp_dtype(compute_dtype)
 
-    # clamp blocks to the (sublane-aligned) problem size so tiny problems
-    # don't allocate huge VMEM tiles; the grid rounds up and the kernel masks
-    bn = min(bn, _round_up(rows, 8))
-    bm = min(bm, _round_up(cols, 8))
+    batch = M.shape[0] if batched else None
+    bn, bm = _effective_blocks(rows, cols, t, batch, bn, bm)
 
     scal = jnp.stack([outputscale.astype(jnp.float32), sigma2.astype(jnp.float32)])
     off = jnp.asarray(row_offset, jnp.int32).reshape(1)
 
+    common = dict(kernel_type=kernel_type, bn=bn, bm=bm, n_cols=cols, mxu_dtype=mxu_dtype)
+    if batched:
+        grid = (pl.cdiv(rows, bn), pl.cdiv(cols, bm), batch)
+        return pl.pallas_call(
+            functools.partial(_kernel_matmul_batched_kernel, **common),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1,), lambda i, j, b: (0,)),
+                pl.BlockSpec((bn, d), lambda i, j, b: (i, 0)),
+                pl.BlockSpec((bm, d), lambda i, j, b: (j, 0)),
+                pl.BlockSpec((1, bm, t), lambda i, j, b: (b, j, 0)),
+                pl.BlockSpec((2,), lambda i, j, b: (0,)),
+            ],
+            out_specs=pl.BlockSpec((batch, bn, t), lambda i, j, b: (0, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((batch, rows, t), jnp.float32),
+            interpret=interpret,
+        )(off, X1, X2, M, scal)
+
     grid = (pl.cdiv(rows, bn), pl.cdiv(cols, bm))
     return pl.pallas_call(
-        functools.partial(
-            _kernel_matmul_kernel,
-            kernel_type=kernel_type,
-            bn=bn,
-            bm=bm,
-            n_cols=cols,
-        ),
+        functools.partial(_kernel_matmul_kernel, **common),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda i, j: (0,)),

@@ -13,6 +13,14 @@ Three layers:
     only collective per matmul is ONE all-gather of the (n, t) RHS —
     O(n·t) communication against O(n²·(d+t)/D) compute, the multi-device
     extension of BBMM from Wang et al. 2019.
+
+Every entry point takes a ``compute_dtype`` ('float32' | 'bfloat16', with
+the 'highest'/'mixed' precision aliases accepted) that selects the MXU
+operand dtype per ``repro.core.precision``: the operand casts below are the
+*policy*, not incidental — M and the pre-scaled X are brought to exactly
+``compute_dtype`` (downcast for bf16, upcast for f64 — the Pallas kernel is
+an f32-accumulate kernel either way), and the sharded path's all-gather
+moves the half-width payload when mixed.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.precision import as_jnp_dtype, normalize_compute_dtype
 from .kernel_matmul import kernel_matmul_pallas
 
 
@@ -39,16 +48,22 @@ def _on_tpu():
     return jax.default_backend() == "tpu"
 
 
-def prescale_inputs(X, lengthscale):
+def prescale_inputs(X, lengthscale, compute_dtype="float32"):
     """X/ℓ (ARD broadcasts a (d,) ℓ per-dimension) + lane-align features.
 
     This is everything about X the kernel needs that does not change across
-    CG iterations — call once per solve."""
-    Xs = (X / lengthscale).astype(jnp.float32)
+    CG iterations — call once per solve.  The result is stored at
+    ``compute_dtype``: under the mixed policy X lives in bf16 from here on,
+    halving its HBM footprint and (sharded) broadcast payload; the division
+    itself always runs in the input precision first."""
+    Xs = (X / lengthscale).astype(as_jnp_dtype(compute_dtype))
     return _pad_to(Xs, 128, 1)
 
 
-@partial(jax.jit, static_argnames=("kernel_type", "bn", "bm", "interpret"))
+@partial(
+    jax.jit,
+    static_argnames=("kernel_type", "bn", "bm", "interpret", "compute_dtype"),
+)
 def fused_kernel_matmul_prescaled(
     Xs_rows,
     Xs_cols,
@@ -61,12 +76,22 @@ def fused_kernel_matmul_prescaled(
     bn=256,
     bm=512,
     interpret=None,
+    compute_dtype="float32",
 ):
-    """(K(X1,X2)+σ²I) @ M for pre-scaled inputs. Returns f32 (rows, t).
+    """(K(X1,X2)+σ²I) @ M for pre-scaled inputs. Returns f32 (…, rows, t).
 
-    Accepts a leading batch dim on M ((b, n, t) → vmapped pallas call)."""
+    A leading batch dim on M ((b, n, t)) runs as a native batch grid
+    dimension of ONE pallas_call — every batch element consumes the X tiles
+    already resident in VMEM (b× fewer X-tile loads than the vmapped
+    formulation; see ``kernel_matmul.tile_load_counts``).
+
+    M is cast to ``compute_dtype`` per the precision policy — the one
+    deliberate dtype decision of this entry point (f64 callers get the
+    documented f32-accumulate semantics, bf16 callers under the 'highest'
+    policy get the full-precision MXU path)."""
     if interpret is None:
         interpret = not _on_tpu()
+    compute_dtype = normalize_compute_dtype(compute_dtype)
     squeeze = M.ndim == 1
     if squeeze:
         M = M[:, None]
@@ -75,23 +100,22 @@ def fused_kernel_matmul_prescaled(
         # compiled (Mosaic) path: keep the tile's trailing dim a multiple of
         # the 128-lane MXU — the row dim needs no padding (in-kernel masked)
         M = _pad_to(M, 128, M.ndim - 1)
-    call = partial(
-        kernel_matmul_pallas,
+    M = M.astype(as_jnp_dtype(compute_dtype))
+    out = kernel_matmul_pallas(
+        Xs_rows,
+        Xs_cols,
+        M,
+        jnp.asarray(outputscale),
+        jnp.asarray(sigma2),
+        row_offset,
         kernel_type=kernel_type,
         bn=bn,
         bm=bm,
         interpret=interpret,
+        compute_dtype=compute_dtype,
     )
-    outputscale = jnp.asarray(outputscale)
-    sigma2 = jnp.asarray(sigma2)
-    if M.ndim == 3:  # batched RHS: one grid per batch element via vmap
-        out = jax.vmap(
-            lambda m: call(Xs_rows, Xs_cols, m.astype(jnp.float32), outputscale, sigma2, row_offset)
-        )(M)
-        return out[..., :t0]
-    out = call(Xs_rows, Xs_cols, M.astype(jnp.float32), outputscale, sigma2, row_offset)
-    out = out[:, :t0]
-    return out[:, 0] if squeeze else out
+    out = out[..., :t0]
+    return out[..., 0] if squeeze else out
 
 
 def fused_kernel_matmul(
@@ -105,9 +129,10 @@ def fused_kernel_matmul(
     bn=256,
     bm=512,
     interpret=None,
+    compute_dtype="float32",
 ):
     """(K(X,X)+σ²I) @ M via the Pallas kernel (any n — no padding of M)."""
-    Xs = prescale_inputs(X, lengthscale)
+    Xs = prescale_inputs(X, lengthscale, compute_dtype)
     return fused_kernel_matmul_prescaled(
         Xs,
         Xs,
@@ -118,6 +143,7 @@ def fused_kernel_matmul(
         bn=bn,
         bm=bm,
         interpret=interpret,
+        compute_dtype=compute_dtype,
     )
 
 
@@ -131,7 +157,7 @@ def _stationary_kernel_type(kernel):
     raise TypeError(f"pallas path supports stationary kernels, got {kernel}")
 
 
-def kernel_matmul(kernel, X, M):
+def kernel_matmul(kernel, X, M, compute_dtype="float32"):
     """LinearOperator-facing dispatch: map a repro.gp kernel object onto the
     fused Pallas call (no σ² — the AddedDiagOperator adds it outside)."""
     return fused_kernel_matmul(
@@ -141,6 +167,7 @@ def kernel_matmul(kernel, X, M):
         kernel.outputscale,
         jnp.float32(0.0),
         kernel_type=_stationary_kernel_type(kernel),
+        compute_dtype=compute_dtype,
     )
 
 
@@ -155,6 +182,7 @@ def sharded_kernel_matmul_prescaled(
     bn=256,
     bm=512,
     interpret=None,
+    compute_dtype="float32",
 ):
     """Row-partitioned fused kernel matmul for pre-scaled inputs.
 
@@ -163,9 +191,16 @@ def sharded_kernel_matmul_prescaled(
     Xs, and runs the Pallas kernel with the band's global ``row_offset`` so
     tile coordinates — and the σ² diagonal, were it nonzero — stay globally
     correct.  Output is row-sharded like M.
-    """
-    from repro.distributed.sharding import compat_shard_map, mesh_axis_sizes
 
+    A leading batch dim on M ((b, n, t), batch replicated, rows sharded)
+    flows straight through: the per-device call is the native-batch-grid
+    Pallas kernel with this band's ``row_offset`` — batched sharded
+    execution with no extra machinery.  Under the mixed policy M is cast to
+    bf16 *before* the all-gather, so the one collective moves half the bytes.
+    """
+    from repro.distributed.sharding import compat_shard_map, mesh_axis_sizes, row_shard_spec
+
+    compute_dtype = normalize_compute_dtype(compute_dtype)
     squeeze = M.ndim == 1
     if squeeze:
         M = M[:, None]
@@ -176,9 +211,10 @@ def sharded_kernel_matmul_prescaled(
         shards *= sizes[a]
     if n % shards != 0:
         raise ValueError(f"n={n} must divide evenly over {shards} shards")
+    row_axis = M.ndim - 2
 
     def body(Xs_full, M_loc, outputscale):
-        M_full = jax.lax.all_gather(M_loc, axes, axis=0, tiled=True)
+        M_full = jax.lax.all_gather(M_loc, axes, axis=row_axis, tiled=True)
         idx = jax.lax.axis_index(axes)
         n_loc = n // shards
         X_loc = jax.lax.dynamic_slice_in_dim(Xs_full, idx * n_loc, n_loc, axis=0)
@@ -193,15 +229,20 @@ def sharded_kernel_matmul_prescaled(
             bn=bn,
             bm=bm,
             interpret=interpret,
+            compute_dtype=compute_dtype,
         )
 
     out = compat_shard_map(
         body,
         mesh,
-        in_specs=(P(None, None), P(axes, None), P()),
-        out_specs=P(axes, None),
-    )(Xs, M.astype(jnp.float32), jnp.asarray(outputscale, jnp.float32))
-    return out[:, 0] if squeeze else out
+        in_specs=(P(None, None), row_shard_spec(M.ndim, axes), P()),
+        out_specs=row_shard_spec(M.ndim, axes),
+    )(
+        Xs,
+        M.astype(as_jnp_dtype(compute_dtype)),
+        jnp.asarray(outputscale, jnp.float32),
+    )
+    return out[..., 0] if squeeze else out
 
 
 def sharded_kernel_matmul(
@@ -214,12 +255,13 @@ def sharded_kernel_matmul(
     bn=256,
     bm=512,
     interpret=None,
+    compute_dtype="float32",
 ):
     """Row-partitioned fused kernel matmul K(X,X) @ M over a device mesh
     (convenience wrapper: prescales per call — the CG hot path goes through
     ``KernelOperator.prepare()`` so prescaling is paid once per solve)."""
     return sharded_kernel_matmul_prescaled(
-        prescale_inputs(X, kernel.lengthscale),
+        prescale_inputs(X, kernel.lengthscale, compute_dtype),
         M,
         kernel.outputscale,
         mesh,
@@ -228,4 +270,5 @@ def sharded_kernel_matmul(
         bn=bn,
         bm=bm,
         interpret=interpret,
+        compute_dtype=compute_dtype,
     )

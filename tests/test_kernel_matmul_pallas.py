@@ -171,14 +171,126 @@ def test_engine_through_pallas_ard():
     np.testing.assert_allclose(float(mll_p), float(mll_d), rtol=1e-4)
 
 
-def test_batched_rhs_vmap():
-    """(b, n, t) RHS takes the vmapped pallas path."""
-    X = jax.random.normal(jax.random.PRNGKey(18), (64, 3))
-    M = jax.random.normal(jax.random.PRNGKey(19), (2, 64, 4))
-    out = fused_kernel_matmul(
-        X, M, jnp.float32(0.6), jnp.float32(1.0), jnp.float32(0.1), interpret=True
-    )
-    assert out.shape == (2, 64, 4)
-    for i in range(2):
+@pytest.mark.parametrize("n,t,b", [(64, 4, 2), (100, 3, 3), (257, 5, 4)])
+def test_native_batch_grid_matches_references(n, t, b):
+    """(b, n, t) RHS runs as ONE pallas_call with a native batch grid dim.
+    It must match (i) the vmapped formulation it replaced, (ii) the
+    unbatched kernel per slice, and (iii) the jnp oracle — to f32 tolerance,
+    including non-multiple-of-block n."""
+    X = jax.random.normal(jax.random.PRNGKey(18), (n, 3))
+    M = jax.random.normal(jax.random.PRNGKey(19), (b, n, t))
+    args = (jnp.float32(0.6), jnp.float32(1.0), jnp.float32(0.1))
+    out = fused_kernel_matmul(X, M, *args, bn=64, bm=64, interpret=True)
+    assert out.shape == (b, n, t)
+    vmapped = jax.vmap(
+        lambda m: fused_kernel_matmul(X, m, *args, bn=64, bm=64, interpret=True)
+    )(M)
+    np.testing.assert_allclose(out, vmapped, rtol=1e-5, atol=1e-5)
+    for i in range(b):
+        per_slice = fused_kernel_matmul(X, M[i], *args, bn=64, bm=64, interpret=True)
+        np.testing.assert_allclose(out[i], per_slice, rtol=1e-5, atol=1e-5)
         ref = kernel_matmul_ref(X, M[i], 0.6, 1.0, 0.1)
         np.testing.assert_allclose(out[i], ref, rtol=2e-4, atol=2e-4)
+
+
+def test_native_batch_grid_row_offset():
+    """The batch grid composes with row_offset: row shards of a batched
+    product reassemble to the full batched product (the sharded path's
+    batched execution)."""
+    from repro.kernels.kernel_matmul.ops import (
+        fused_kernel_matmul_prescaled,
+        prescale_inputs,
+    )
+
+    n, shards, b = 120, 3, 2
+    X = jax.random.normal(jax.random.PRNGKey(20), (n, 4))
+    M = jax.random.normal(jax.random.PRNGKey(21), (b, n, 6))
+    Xs = prescale_inputs(X, jnp.float32(0.7))
+    full = fused_kernel_matmul_prescaled(
+        Xs, Xs, M, jnp.float32(1.2), jnp.float32(0.5), interpret=True
+    )
+    n_loc = n // shards
+    parts = [
+        fused_kernel_matmul_prescaled(
+            Xs[i * n_loc : (i + 1) * n_loc],
+            Xs,
+            M,
+            jnp.float32(1.2),
+            jnp.float32(0.5),
+            row_offset=i * n_loc,
+            interpret=True,
+        )
+        for i in range(shards)
+    ]
+    np.testing.assert_allclose(jnp.concatenate(parts, axis=1), full, rtol=1e-5, atol=1e-5)
+
+
+def test_tile_load_accounting():
+    """The native batch grid's X index maps ignore the batch coordinate: X
+    tiles are fetched once per (i, j) grid tile, b× fewer than vmap pays."""
+    from repro.kernels.kernel_matmul.kernel_matmul import tile_load_counts
+
+    counts = tile_load_counts(256, 256, 4, t=8, bn=64, bm=64)
+    assert counts["vmapped_x_tile_loads"] == 4 * counts["native_x_tile_loads"]
+    assert counts["x_load_ratio"] == 4
+
+
+@pytest.mark.mixed_precision
+def test_mixed_precision_kernel_close_to_f32():
+    """compute_dtype='bfloat16': bf16 MXU operands, f32 accumulation.
+    Documented tolerance: 2e-2 relative against the f32 kernel (bf16 has an
+    8-bit mantissa; errors enter through the x·xᵀ inner products and the
+    tile×RHS product, never the accumulator)."""
+    X = jax.random.normal(jax.random.PRNGKey(22), (200, 5))
+    M = jax.random.normal(jax.random.PRNGKey(23), (200, 7))
+    args = (jnp.float32(0.8), jnp.float32(1.1), jnp.float32(0.05))
+    f32 = fused_kernel_matmul(X, M, *args, interpret=True)
+    b16 = fused_kernel_matmul(X, M, *args, interpret=True, compute_dtype="bfloat16")
+    assert b16.dtype == jnp.float32
+    rel = float(jnp.linalg.norm(b16 - f32) / jnp.linalg.norm(f32))
+    assert rel < 2e-2, rel
+    # the precision aliases resolve to the same kernels
+    mixed = fused_kernel_matmul(X, M, *args, interpret=True, compute_dtype="mixed")
+    np.testing.assert_array_equal(mixed, b16)
+
+
+@pytest.mark.mixed_precision
+@pytest.mark.parametrize("n,t,b", [(100, 3, 3)])
+def test_mixed_precision_batched_tolerance(n, t, b):
+    """Native batch grid at bf16: per-slice agreement with the unbatched
+    bf16 kernel stays exact (same arithmetic), f32 agreement within the
+    documented 2e-2."""
+    X = jax.random.normal(jax.random.PRNGKey(24), (n, 3))
+    M = jax.random.normal(jax.random.PRNGKey(25), (b, n, t))
+    args = (jnp.float32(0.6), jnp.float32(1.0), jnp.float32(0.1))
+    b16 = fused_kernel_matmul(
+        X, M, *args, bn=64, bm=64, interpret=True, compute_dtype="bfloat16"
+    )
+    f32 = fused_kernel_matmul(X, M, *args, bn=64, bm=64, interpret=True)
+    for i in range(b):
+        per_slice = fused_kernel_matmul(
+            X, M[i], *args, bn=64, bm=64, interpret=True, compute_dtype="bfloat16"
+        )
+        np.testing.assert_allclose(b16[i], per_slice, rtol=1e-6, atol=1e-6)
+    rel = float(jnp.linalg.norm(b16 - f32) / jnp.linalg.norm(f32))
+    assert rel < 2e-2, rel
+
+
+@pytest.mark.mixed_precision
+def test_prepared_operator_mixed_precision():
+    """KernelOperator.with_compute_dtype threads bf16 through prepare():
+    the prepared Xs is stored half-width and the matmul stays within the
+    documented tolerance of the f32 path."""
+    from repro.gp import KernelOperator, RBFKernel
+
+    X = jax.random.normal(jax.random.PRNGKey(26), (130, 5))
+    M = jax.random.normal(jax.random.PRNGKey(27), (130, 4))
+    kern = RBFKernel(
+        lengthscale=jnp.array([0.3, 0.5, 1.0, 2.0, 0.8]), outputscale=jnp.float32(1.7)
+    )
+    op = KernelOperator(kernel=kern, X=X, mode="pallas")
+    mixed = op.with_compute_dtype("mixed").prepare()
+    assert mixed.Xs.dtype == jnp.bfloat16
+    f32 = op.prepare().matmul(M)
+    rel = float(jnp.linalg.norm(mixed.matmul(M) - f32) / jnp.linalg.norm(f32))
+    assert rel < 2e-2, rel

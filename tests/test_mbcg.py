@@ -135,3 +135,85 @@ class TestPreconditioned:
         evals_pre = jnp.linalg.eigvalsh(jnp.linalg.solve(Pd, K))
         assert float(ritz.max()) <= float(evals_pre.max()) * 1.01
         assert float(ritz.min()) >= float(evals_pre.min()) * 0.99
+
+
+@pytest.mark.mixed_precision
+class TestResidualRefresh:
+    """The f32 residual refresh that keeps ``tol`` honest under reduced-
+    precision matmul noise (ISSUE 2 tentpole)."""
+
+    def _ops(self, A):
+        op32 = DenseOperator(A)
+        return op32, op32.with_compute_dtype("bfloat16")
+
+    def test_bf16_stalls_mixed_converges_within_2x(self):
+        """Ill-conditioned K: bf16-only CG's true residual stalls orders of
+        magnitude above tol, while mixed (bf16 matmul + f32 refresh)
+        converges to tol in ≤ 2× the f32 iteration count."""
+        A = random_spd(jax.random.PRNGKey(30), 96, cond=1e3)
+        b = jax.random.normal(jax.random.PRNGKey(31), (96, 3))
+        tol = 1e-4
+        op32, op16 = self._ops(A)
+
+        def true_res(u):
+            return float(
+                (jnp.linalg.norm(A @ u - b, axis=0) / jnp.linalg.norm(b, axis=0)).max()
+            )
+
+        f32 = mbcg(op32.matmul, b, max_iters=300, tol=tol)
+        bf16 = mbcg(op16.matmul, b, max_iters=300, tol=tol)
+        mixed = mbcg(
+            op16.matmul, b, max_iters=300, tol=tol,
+            refresh_every=2, refresh_matmul=op32.matmul,
+        )
+        assert true_res(f32.solves) < 2 * tol
+        assert true_res(bf16.solves) > 100 * tol  # bf16-only lies/stalls
+        assert true_res(mixed.solves) < 2 * tol  # refresh restores tol
+        assert int(mixed.num_iters.max()) <= 2 * int(f32.num_iters.max())
+
+    def test_residual_norm_reports_true_residual(self):
+        """With refresh on, MBCGResult.residual_norm is the TRUE relative
+        residual of the returned solves — never the recursive estimate."""
+        A = random_spd(jax.random.PRNGKey(32), 80, cond=500.0)
+        b = jax.random.normal(jax.random.PRNGKey(33), (80, 2))
+        op32, op16 = self._ops(A)
+        res = mbcg(
+            op16.matmul, b, max_iters=200, tol=1e-4,
+            refresh_every=2, refresh_matmul=op32.matmul,
+        )
+        true = jnp.linalg.norm(A @ res.solves - b, axis=0) / jnp.linalg.norm(b, axis=0)
+        np.testing.assert_allclose(res.residual_norm, true, rtol=1e-4, atol=1e-6)
+
+    def test_never_diverges_beyond_bf16_budget(self):
+        """κ·ε_bf16 ≫ 1: reduced precision cannot reach tol, but the
+        best-solution snapshot guarantees the answer never exceeds the
+        initial residual (bf16-only diverges by orders of magnitude here)."""
+        x = jnp.sort(jax.random.uniform(jax.random.PRNGKey(34), (128,)))
+        A = jnp.exp(-((x[:, None] - x[None, :]) ** 2) / (2 * 0.2**2)) + 0.01 * jnp.eye(128)
+        b = jax.random.normal(jax.random.PRNGKey(35), (128, 3))
+        op32, op16 = self._ops(A)
+        bf16 = mbcg(op16.matmul, b, max_iters=300, tol=1e-4)
+        mixed = mbcg(
+            op16.matmul, b, max_iters=300, tol=1e-4,
+            refresh_every=2, refresh_matmul=op32.matmul,
+        )
+
+        def true_res(u):
+            return float(
+                (jnp.linalg.norm(A @ u - b, axis=0) / jnp.linalg.norm(b, axis=0)).max()
+            )
+
+        assert true_res(bf16.solves) > 10.0  # unguarded bf16 blows up
+        assert true_res(mixed.solves) <= 1.0 + 1e-5  # monotone: never worse than u=0
+        assert bool(jnp.all(jnp.isfinite(mixed.residual_norm)))
+
+    def test_refresh_noop_at_full_precision(self):
+        """With an exact f32 matmul, refresh must not change the answer
+        materially — same solve, same-or-fewer iterations."""
+        A = random_spd(jax.random.PRNGKey(36), 64, cond=100.0)
+        b = jax.random.normal(jax.random.PRNGKey(37), (64, 2))
+        plain = mbcg(DenseOperator(A).matmul, b, max_iters=100, tol=1e-6)
+        refreshed = mbcg(
+            DenseOperator(A).matmul, b, max_iters=100, tol=1e-6, refresh_every=4
+        )
+        np.testing.assert_allclose(refreshed.solves, plain.solves, rtol=1e-4, atol=1e-5)

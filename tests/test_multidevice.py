@@ -256,6 +256,35 @@ class TestElasticRestore:
 
 
 class TestBf16Tiles:
+    def test_pallas_sharded_mixed_and_batched(self):
+        """pallas_sharded with compute_dtype='bfloat16' (half-width gather
+        payload) stays within CG-recoverable distance of f32, and a batched
+        (b, n, t) RHS flows through the native batch grid per shard."""
+        run_with_devices(
+            """
+            import jax, jax.numpy as jnp, numpy as np
+            from repro.gp import KernelOperator, RBFKernel
+
+            mesh = jax.make_mesh((8,), ("data",))
+            kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.0))
+            X = jax.random.normal(jax.random.PRNGKey(0), (64, 3))
+            M = jax.random.normal(jax.random.PRNGKey(1), (64, 4))
+            Mb = jax.random.normal(jax.random.PRNGKey(2), (2, 64, 4))
+            ref = KernelOperator(kernel=kern, X=X, mode="dense").matmul(M)
+            ref_b = KernelOperator(kernel=kern, X=X, mode="dense").matmul(Mb)
+            with mesh:
+                op = KernelOperator(kernel=kern, X=X, mode="pallas_sharded")
+                o16 = op.with_compute_dtype("mixed").matmul(M)
+                rel = float(jnp.linalg.norm(o16 - ref) / jnp.linalg.norm(ref))
+                assert rel < 0.02, rel
+                ob = op.matmul(Mb)  # batched f32 through the sharded path
+            assert ob.shape == (2, 64, 4)
+            np.testing.assert_allclose(np.asarray(ob), np.asarray(ref_b),
+                                       rtol=5e-4, atol=5e-4)
+            print("OK", rel)
+            """
+        )
+
     def test_bf16_sharded_operator_close_to_f32(self):
         """§Perf hillclimb 3: bf16 tiles must stay within CG-recoverable
         distance of the f32 operator."""

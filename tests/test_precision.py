@@ -1,0 +1,217 @@
+"""End-to-end precision policy: precision="mixed" through models + engine.
+
+Everything here runs under the ``mixed_precision`` marker so CI exercises
+the tier-1 behaviours at both policies (the unmarked suite is the
+precision="highest" run).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    DenseOperator,
+    KroneckerOperator,
+    LowRankRootOperator,
+    ScaledOperator,
+    SumOperator,
+    ToeplitzOperator,
+    engine_state,
+    normalize_compute_dtype,
+    precision_compute_dtype,
+)
+from repro.gp import SGPR, SKI, ExactGP, KernelOperator, RBFKernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.mixed_precision
+
+
+def _problem(n=256, d=2, key=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(key))
+    X = jax.random.uniform(kx, (n, d)) * 2 - 1
+    y = jnp.sin(3 * X[:, 0]) + 0.05 * jax.random.normal(ky, (n,))
+    return X, y
+
+
+class TestPolicyPlumbing:
+    def test_normalize_and_aliases(self):
+        assert normalize_compute_dtype("mixed") == "bfloat16"
+        assert normalize_compute_dtype("highest") == "float32"
+        assert normalize_compute_dtype(jnp.bfloat16) == "bfloat16"
+        assert precision_compute_dtype("mixed") == "bfloat16"
+        with pytest.raises(ValueError):
+            normalize_compute_dtype("float16")
+
+    def test_with_compute_dtype_recursion(self):
+        """Wrappers recurse; σ² and scales stay f32; no-op operators pass
+        through unchanged."""
+        K = jax.random.normal(jax.random.PRNGKey(0), (16, 16))
+        K = K @ K.T + jnp.eye(16)
+        op = AddedDiagOperator(
+            SumOperator((ScaledOperator(DenseOperator(K), jnp.float32(2.0)),
+                         LowRankRootOperator(K[:, :3]))),
+            jnp.float32(0.1),
+        )
+        mixed = op.with_compute_dtype("mixed")
+        assert mixed.base.ops[0].base.compute_dtype == "bfloat16"
+        assert mixed.base.ops[1].compute_dtype == "bfloat16"
+        assert float(mixed.sigma2) == float(op.sigma2)
+        # Toeplitz (FFT matmul) is a documented no-op under the policy
+        toe = ToeplitzOperator(jnp.arange(4.0))
+        assert toe.with_compute_dtype("mixed") is toe
+        kron = KroneckerOperator((toe, toe)).with_compute_dtype("mixed")
+        assert isinstance(kron, KroneckerOperator)
+
+    def test_mixed_matmul_rounds_and_accumulates_f32(self):
+        K = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+        K = K @ K.T
+        M = jax.random.normal(jax.random.PRNGKey(2), (64, 5))
+        out16 = DenseOperator(K).with_compute_dtype("mixed").matmul(M)
+        out32 = K @ M
+        assert out16.dtype == jnp.float32
+        rel = float(jnp.linalg.norm(out16 - out32) / jnp.linalg.norm(out32))
+        assert 0 < rel < 2e-2  # rounded (not identical), but f32-accumulated
+
+
+class TestMixedEngine:
+    def test_exact_gp_mixed_converges_to_tol(self):
+        """The engine's mixed path must still honour cg_tol on a benign
+        problem (the f32 residual refresh at work)."""
+        X, y = _problem()
+        kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.0))
+        op = AddedDiagOperator(KernelOperator(kernel=kern, X=X, mode="dense"), 0.1)
+        s_mixed = BBMMSettings(num_probes=8, max_cg_iters=80, precision="mixed")
+        s_high = BBMMSettings(num_probes=8, max_cg_iters=80)
+        key = jax.random.PRNGKey(3)
+        st_m = engine_state(op, y, key, s_mixed)
+        st_h = engine_state(op, y, key, s_high)
+        assert float(st_m.residual.max()) < 2 * s_mixed.cg_tol
+        assert int(st_m.cg_iters.max()) <= 2 * max(int(st_h.cg_iters.max()), 1)
+
+    def test_cached_means_match_highest_within_1e2(self):
+        """Acceptance criterion: mixed-precision cached means within 1e-2
+        relative error of the f32 path."""
+        X, y = _problem(n=400, d=1, key=7)
+        gp_h = ExactGP(settings=BBMMSettings(num_probes=10, max_cg_iters=40))
+        gp_m = ExactGP(
+            settings=BBMMSettings(num_probes=10, max_cg_iters=40), precision="mixed"
+        )
+        params = gp_h.init_params(1)
+        cache_h = gp_h.posterior_cache(params, X, y)
+        cache_m = gp_m.posterior_cache(params, X, y)
+        Xs = jnp.linspace(-1, 1, 64)[:, None]
+        mean_h, _ = gp_h.predict_cached(params, X, cache_h, Xs)
+        mean_m, _ = gp_m.predict_cached(params, X, cache_m, Xs)
+        rel = float(jnp.linalg.norm(mean_m - mean_h) / jnp.linalg.norm(mean_h))
+        assert rel < 1e-2, rel
+
+    def test_mixed_mll_close_and_differentiable(self):
+        X, y = _problem(n=200)
+        gp_h = ExactGP(mode="dense")
+        gp_m = ExactGP(mode="dense", precision="mixed")
+        params = gp_h.init_params(2)
+        key = jax.random.PRNGKey(4)
+        lh = float(gp_h.loss(params, X, y, key))
+        lm = float(gp_m.loss(params, X, y, key))
+        # MLLs can sit near zero: compare per-datapoint absolute error
+        assert abs(lm - lh) / len(y) < 1e-2
+        g = jax.grad(gp_m.loss)(params, X, y, key)
+        for leaf in jax.tree.leaves(g):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+    def test_pallas_mode_mixed(self):
+        """precision='mixed' through the Pallas kernel path end to end."""
+        X, y = _problem(n=192)
+        gp_h = ExactGP(mode="pallas")
+        gp_m = ExactGP(mode="pallas", precision="mixed")
+        params = gp_h.init_params(2)
+        key = jax.random.PRNGKey(5)
+        lh = float(gp_h.loss(params, X, y, key))
+        lm = float(gp_m.loss(params, X, y, key))
+        assert abs(lm - lh) / len(y) < 1e-2
+
+
+class TestModelKnobs:
+    def test_precision_knob_folds_into_settings(self):
+        for cls in (ExactGP, SGPR, SKI):
+            model = cls(precision="mixed")
+            assert model.settings.precision == "mixed"
+            assert cls().settings.precision == "highest"
+
+    def test_precision_knob_switches_back_and_follows_settings(self):
+        """An explicit precision always wins (switching a mixed model back
+        to 'highest' really does), and the None default follows whatever
+        the provided settings say."""
+        for cls in (ExactGP, SGPR, SKI):
+            back = dataclasses.replace(cls(precision="mixed"), precision="highest")
+            assert back.settings.precision == "highest"
+            follows = cls(settings=cls().settings.__class__(precision="mixed"))
+            assert follows.settings.precision == "mixed"
+
+    def test_mixed_requires_refresh(self):
+        """cg_refresh_every <= 0 under mixed would silently disable the
+        mechanism that makes mixed honest — must be rejected."""
+        X, y = _problem(n=64)
+        gp = ExactGP(
+            mode="dense",
+            settings=BBMMSettings(precision="mixed", cg_refresh_every=0),
+        )
+        with pytest.raises(ValueError, match="cg_refresh_every"):
+            gp.loss(gp.init_params(2), X, y, jax.random.PRNGKey(0))
+
+    def test_blocked_mode_honours_compute_dtype(self):
+        """mode='blocked' participates in the policy: bf16 output differs
+        from (but stays close to) f32, instead of silently ignoring it."""
+        X, _ = _problem(n=96)
+        kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.0))
+        M = jax.random.normal(jax.random.PRNGKey(10), (96, 3))
+        op = KernelOperator(kernel=kern, X=X, mode="blocked", block_size=32)
+        f32 = op.matmul(M)
+        b16 = op.with_compute_dtype("mixed").matmul(M)
+        assert not bool(jnp.all(b16 == f32))  # actually rounded
+        rel = float(jnp.linalg.norm(b16 - f32) / jnp.linalg.norm(f32))
+        assert rel < 2e-2, rel
+
+    def test_mixed_alias_uniform_on_direct_construction(self):
+        """compute_dtype='mixed' passed straight to an operator constructor
+        means bf16 on every mode — not just after with_compute_dtype."""
+        X, _ = _problem(n=64)
+        kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.0))
+        M = jax.random.normal(jax.random.PRNGKey(11), (64, 2))
+        for mode in ("dense", "blocked", "pallas"):
+            op32 = KernelOperator(kernel=kern, X=X, mode=mode)
+            op16 = KernelOperator(kernel=kern, X=X, mode=mode, compute_dtype="mixed")
+            assert not bool(jnp.all(op16.matmul(M) == op32.matmul(M))), mode
+        D = DenseOperator(jnp.eye(8) + 0.1, compute_dtype="mixed")
+        assert not bool(jnp.all(D.matmul(M[:8]) == (jnp.eye(8) + 0.1) @ M[:8]))
+
+    def test_sgpr_mixed_loss_finite_and_close(self):
+        X, y = _problem(n=300, d=1, key=9)
+        sg_h = SGPR(num_inducing=40)
+        sg_m = SGPR(num_inducing=40, precision="mixed")
+        params = sg_h.init_params(X)
+        key = jax.random.PRNGKey(6)
+        lh = float(sg_h.loss(params, X, y, key))
+        lm = float(sg_m.loss(params, X, y, key))
+        assert np.isfinite(lm)
+        assert abs(lm - lh) / abs(lh) < 5e-2
+
+    def test_ski_mixed_loss_finite(self):
+        X, y = _problem(n=256, d=1, key=11)
+        ski = SKI(grid_size=64, precision="mixed")
+        geom = ski.prepare(X)
+        params = ski.init_params(X)
+        loss = float(ski.loss(params, geom, y, jax.random.PRNGKey(8)))
+        assert np.isfinite(loss)
+
+    def test_invalid_precision_rejected(self):
+        X, y = _problem(n=64)
+        gp = ExactGP(mode="dense", settings=BBMMSettings(precision="fp8"))
+        with pytest.raises(ValueError):
+            gp.loss(gp.init_params(2), X, y, jax.random.PRNGKey(0))

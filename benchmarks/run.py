@@ -24,7 +24,14 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default=None,
-        help="comma-separated subset: solve_error,speed,mae,preconditioner,complexity",
+        help="comma-separated subset: solve_error,speed,mae,preconditioner,"
+        "complexity,serve",
+    )
+    ap.add_argument(
+        "--scenario",
+        default=None,
+        help="alias for --only (e.g. --scenario serve: PosteriorSession "
+        "cached-QPS and append-vs-rebuild rows)",
     )
     ap.add_argument(
         "--fast",
@@ -41,8 +48,9 @@ def main() -> None:
         "is recorded either way",
     )
     args = ap.parse_args()
+    only = args.only or args.scenario
 
-    from . import complexity, mae, preconditioner, solve_error, speed
+    from . import complexity, mae, preconditioner, serve, solve_error, speed
 
     suites = {
         "solve_error": solve_error.run,  # paper Fig 1
@@ -50,18 +58,23 @@ def main() -> None:
         "complexity": complexity.run,  # paper §4/§5 claims
         "speed": speed.run,  # paper Fig 2 + batched/cache levers
         "mae": mae.run,  # paper Fig 3
+        "serve": serve.run,  # PosteriorSession QPS + append-vs-rebuild
     }
-    wanted = args.only.split(",") if args.only else list(suites)
+    wanted = only.split(",") if only else list(suites)
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    speed_rows = []  # rows from the perf-trajectory suites (speed, serve)
     for name in wanted:
         print(f"# --- {name} ---", flush=True)
         if name == "speed":
-            rows = suites[name](fast=args.fast, dtype=args.dtype)
-            _write_bench_speed(rows, fast=args.fast)
+            speed_rows += suites[name](fast=args.fast, dtype=args.dtype)
+        elif name == "serve":
+            speed_rows += suites[name](fast=args.fast)
         else:
             suites[name]()
+    if speed_rows:
+        _write_bench_speed(speed_rows, fast=args.fast)
     print(f"# total {time.time()-t0:.1f}s", flush=True)
 
 

@@ -1,0 +1,107 @@
+"""Serving scenario: PosteriorSession under query traffic + streaming
+observations (ISSUE 3 acceptance rows).
+
+Two measurements per model, written into BENCH_speed.json:
+
+  * **cached QPS** — posterior query points served per second from the
+    session cache (zero CG iterations per request);
+  * **append vs rebuild** — steady-state latency of one incremental
+    ``observe`` (``model.update_cache``: exact rank-k Woodbury refresh for
+    SGPR/BLR, warm-started CG + Krylov recycling for ExactGP) against a
+    from-scratch ``posterior_cache`` build on the SAME post-append data,
+    both timed post-compilation at fixed shapes (``timeit``) so the
+    comparison is algorithmic, not tracing overhead.
+
+Acceptance: the append path must be measurably faster than the rebuild,
+and for the Woodbury models it must issue zero CG solves (guarded by
+tests/test_serving.py; here we record the timings).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp import SGPR, BayesianLinearRegression, ExactGP
+from repro.core import BBMMSettings
+from repro.serving import PosteriorSession
+from .common import emit, save_artifact, timeit
+
+
+def _toy(key, n, d=2):
+    kx, ky = jax.random.split(key)
+    X = jax.random.uniform(kx, (n, d)) * 2 - 1
+    y = jnp.sin(3 * X[:, 0]) * jnp.cos(2 * X[:, -1]) + 0.05 * jax.random.normal(ky, (n,))
+    return X, y
+
+
+def _bench_model(rows, name, gp, n, *, d=2, batch=256, k_append=1, fast=False):
+    X, y = _toy(jax.random.PRNGKey(0), n, d)
+    params = gp.init_params(X)
+    data = gp.prepare_inputs(X)
+
+    # cached-QPS: repeated batched queries straight off the session cache
+    session = PosteriorSession(gp, params, X, y, max_staleness=8)
+    Xq = jax.random.uniform(jax.random.PRNGKey(1), (batch, X.shape[1])) * 2 - 1
+    t_query = timeit(lambda: session.query(Xq)[0])
+    qps = batch / t_query
+
+    # append vs rebuild, steady state at fixed shapes: k new rows
+    kx, ky = jax.random.split(jax.random.PRNGKey(2))
+    Xn = jax.random.uniform(kx, (k_append, X.shape[1])) * 2 - 1
+    yn = jnp.sin(3 * Xn[:, 0]) + 0.05 * jax.random.normal(ky, (k_append,))
+    X_full = jnp.concatenate([X, Xn])
+    y_full = jnp.concatenate([y, yn])
+    data_full = gp.prepare_inputs(X_full)
+    cache = gp.posterior_cache(params, data, y)
+    # both paths jitted at fixed shapes: the comparison is the algorithm
+    # (rank-k refresh / warm-started CG vs cold full build), not dispatch.
+    # All arrays enter as jit ARGUMENTS — closure-captured constants would
+    # let XLA constant-fold the entire build at compile time and the
+    # "measurement" would time an empty program
+    append_fn = jax.jit(
+        lambda p, dat, yf, c, Xa, ya: gp.update_cache(p, dat, yf, c, Xa, ya)
+    )
+    rebuild_fn = jax.jit(lambda p, dat, yf: gp.posterior_cache(p, dat, yf))
+    t_append = timeit(append_fn, params, data_full, y_full, cache, Xn, yn)
+    t_rebuild = timeit(rebuild_fn, params, data_full, y_full)
+    speedup = t_rebuild / t_append
+
+    emit(
+        f"serve_{name}_n{n}",
+        t_query,
+        f"qps={qps:.0f};append={t_append*1e6:.0f}us;rebuild={t_rebuild*1e6:.0f}us;"
+        f"append_speedup={speedup:.2f}x",
+    )
+    rows.append(
+        {
+            "model": f"serve_{name}",
+            "n": n,
+            "batch": batch,
+            "k_append": k_append,
+            "cached_query_s": t_query,
+            "cached_qps": qps,
+            "append_s": t_append,
+            "rebuild_s": t_rebuild,
+            "append_speedup": speedup,
+        }
+    )
+
+
+def run(fast=False):
+    rows = []
+    scale = 1 if fast else 2
+    _bench_model(
+        rows, "sgpr", SGPR(num_inducing=64), 1000 * scale, fast=fast
+    )
+    _bench_model(
+        rows, "blr", BayesianLinearRegression(), 10000 * scale, d=64, fast=fast
+    )
+    _bench_model(
+        rows,
+        "exact",
+        ExactGP(settings=BBMMSettings(num_probes=8, max_cg_iters=25)),
+        400 * scale,
+        batch=128,
+        fast=fast,
+    )
+    save_artifact("serve", rows)
+    return rows

@@ -26,8 +26,9 @@ def main():
         settings=BBMMSettings(num_probes=10, max_cg_iters=30, precond_rank=0),
     )
     t0 = time.time()
-    params, geom, history = gp.fit(Xtr, ytr, steps=30, lr=0.1, verbose=True)
+    params, history = gp.fit(Xtr, ytr, steps=30, lr=0.1, verbose=True)
     t_fit = time.time() - t0
+    geom = gp.prepare_inputs(Xtr)
 
     mean, _ = gp.predict(params, geom, ytr, Xte[:2000])
     mae = float(jnp.mean(jnp.abs(mean - yte[:2000])))

@@ -27,7 +27,11 @@ from .precision import (
     precision_compute_dtype,
     validate_precision,
 )
-from .pivoted_cholesky import pivoted_cholesky, pivoted_cholesky_dense
+from .pivoted_cholesky import (
+    pivoted_cholesky,
+    pivoted_cholesky_dense,
+    pivoted_cholesky_sharded,
+)
 from .preconditioner import (
     PivotedCholeskyPreconditioner,
     IdentityPreconditioner,
@@ -40,6 +44,7 @@ from .inference import (
     InferenceState,
     PosteriorCache,
     build_posterior_cache,
+    extend_posterior_cache,
     cached_mean,
     cached_inv_quad,
     inv_quad_logdet,

@@ -72,6 +72,14 @@ class BBMMSettings:
     # tolerance study in benchmarks/speed.py shows period-2 is what keeps
     # 1e-4 tolerances reachable once bf16 RHS rounding noise ~4e-3·κ bites;
     # longer periods trade accuracy floor for fewer f32 matmuls)
+    cg_refresh_adaptive: bool = False  # mixed: stretch the refresh period
+    # geometrically (×2 per clean refresh, capped below) while the measured
+    # recursive-vs-true drift stays under mbcg.REFRESH_DRIFT_GATE, snapping
+    # back to cg_refresh_every on violation — recovers the f32-matmul FLOPs
+    # the static period-2 default burns on well-conditioned solves
+    cg_refresh_max_period: int = 16  # cap for the adaptive stretch
+    # (0 → uncapped, i.e. max_cg_iters; positive values are floored at
+    # cg_refresh_every)
 
 
 def _solver_matmuls(op: LinearOperator, settings: BBMMSettings):
@@ -94,9 +102,16 @@ def _solver_matmuls(op: LinearOperator, settings: BBMMSettings):
         mixed = op.with_compute_dtype(
             precision_compute_dtype(settings.precision)
         ).prepare()
+        # cap semantics match mbcg: 0 → uncapped (max_iters); a positive cap
+        # is floored at the base period so adaptivity can never shrink it
+        cap = settings.cg_refresh_max_period
+        if cap > 0:
+            cap = max(cap, settings.cg_refresh_every)
         return mixed.matmul, {
             "refresh_every": settings.cg_refresh_every,
             "refresh_matmul": solver.matmul,
+            "refresh_adaptive": settings.cg_refresh_adaptive,
+            "refresh_max_period": cap,
         }
     return solver.matmul, {}
 
@@ -323,6 +338,130 @@ def build_posterior_cache(
         precond=precond,
         inv_quad=inv_quad,
         logdet=logdet,
+        cg_iters=res.num_iters,
+    )
+
+
+def extend_posterior_cache(
+    op: LinearOperator,
+    y: jax.Array,
+    cache: PosteriorCache,
+    settings: BBMMSettings = BBMMSettings(),
+) -> PosteriorCache:
+    """Incremental PosteriorCache update after data rows were appended.
+
+    ``op``/``y`` are the FULL updated system (old n rows plus k appended
+    ones); ``cache`` is the cache built for the first n rows.  Instead of
+    re-running the whole (t+1)-column engine block from a cold start, the
+    update recycles everything the old cache knows:
+
+      * **warm-started solve** — the old ``alpha`` (zero-padded to n+k) is
+        the initial iterate; one single-column mBCG run solves only the
+        residual correction K̂'δ = y' − K̂'u₀, whose energy is concentrated
+        on the appended rows and their couplings, so it converges in far
+        fewer iterations than a from-scratch solve (and reaches the SAME
+        final tolerance: the run targets ‖y' − K̂'u‖ ≤ cg_tol·‖y'‖ by
+        rescaling ``tol`` with ‖y'‖/‖r₀‖);
+      * **Krylov-basis recycling** — the old orthonormal basis, zero-padded
+        to the new rows, stays orthonormal, and because the old n×n block
+        of K̂' equals the old K̂ exactly, its Gram factor is *reused as is*;
+        only the genuinely new directions (the new alpha + the δ-run's
+        Lanczos vectors, projected against the recycled span and QR'd) are
+        multiplied through the blackbox — O(n²·q) for q ≈ p+1 new columns
+        instead of the full build's O(n²·m).  The Galerkin inverse-quad is
+        conservative for ANY full-rank basis (it is the infimum of the
+        quadratic form over the span), so correctness never depends on how
+        stale the recycled directions are — only tightness does.
+
+    The basis grows by ≤ max_cg_iters+1 columns per update; the serving
+    layer's ``max_staleness`` policy bounds that growth by forcing a full
+    rebuild.  ``logdet`` is NaN on the updated cache (the SLQ estimate is
+    not incrementally maintained) and ``probes``/``probe_solves`` are the
+    old columns zero-padded — stale diagnostics, unused by serving queries.
+    """
+    if y.ndim != 1:
+        raise ValueError("posterior cache supports a single problem (y of shape (n,))")
+    n = y.shape[0]
+    n_old = cache.alpha.shape[0]
+    k = n - n_old
+    if k <= 0:
+        raise ValueError(
+            f"extend_posterior_cache needs appended rows (cache n={n_old}, y n={n})"
+        )
+    variance_cache = cache.basis is not None
+
+    precond = build_preconditioner(
+        op, settings.precond_rank, jitter=settings.precond_jitter
+    )
+    matmul, refresh_kwargs = _solver_matmuls(op, settings)
+    solver = op.prepare()
+
+    u0 = jnp.pad(cache.alpha, (0, k))
+    r0 = y - solver.matmul(u0[:, None])[:, 0]  # f32 true residual
+    # mbcg's tol is relative to ‖r0‖; rescale so the TARGET stays
+    # ‖y − K̂u‖ ≤ cg_tol·‖y‖ — the same contract as the full build
+    norm_y = jnp.linalg.norm(y)
+    norm_r0 = jnp.linalg.norm(r0)
+    tol_eff = settings.cg_tol * norm_y / jnp.maximum(norm_r0, 1e-30)
+
+    res = mbcg(
+        matmul,
+        r0[:, None],
+        precond_solve=precond.solve,
+        max_iters=settings.max_cg_iters,
+        tol=tol_eff,
+        return_basis=variance_cache,
+        **refresh_kwargs,
+    )
+    alpha = u0 + res.solves[:, 0]
+    inv_quad = jnp.dot(y, alpha)
+
+    basis = gram_chol = None
+    if variance_cache:
+        B_old = jnp.pad(cache.basis, ((0, k), (0, 0)))  # still orthonormal
+        m_old = B_old.shape[1]
+        # the basis can hold at most n orthonormal columns; past that the
+        # Gram goes singular, so cap the fresh block at the rank budget
+        # (q_cap == 0 ⇒ the recycled span is already full-dimensional and
+        # the old factor serves as is — conservativeness is unaffected)
+        q_cap = max(n - m_old, 0)
+        if q_cap == 0:
+            basis, gram_chol = B_old, cache.gram_chol
+        else:
+            fresh = jnp.concatenate(
+                [alpha[:, None], res.basis.reshape(n, -1)], axis=-1
+            ).astype(jnp.float32)
+            # project out the recycled span, orthonormalize the remainder
+            fresh = fresh - B_old @ (B_old.T @ fresh)
+            N = jnp.linalg.qr(fresh)[0][:, :q_cap]  # (n, q)
+            KN = solver.matmul(N)  # blackbox matmul on q ≪ m columns only
+            # old Gram block recycled exactly: the padded basis hits only
+            # the old n×n block of K̂', which is the old K̂ — CᵀC already
+            # includes its jitter, and overstating the Gram only makes the
+            # served variance MORE conservative
+            top = cache.gram_chol @ cache.gram_chol.T
+            cross = B_old.T @ KN  # (m, q)
+            low = N.T @ KN
+            low = 0.5 * (low + low.T)
+            q = low.shape[0]
+            jitter = 1e-6 * jnp.trace(low) / q
+            gram = jnp.block(
+                [[top, cross],
+                 [cross.T, low + jitter * jnp.eye(q, dtype=low.dtype)]]
+            )
+            basis = jnp.concatenate([B_old, N], axis=-1)
+            gram_chol = jnp.linalg.cholesky(gram)
+
+    pad_rows = ((0, k), (0, 0))
+    return PosteriorCache(
+        alpha=alpha,
+        basis=basis,
+        gram_chol=gram_chol,
+        probes=jnp.pad(cache.probes, pad_rows),
+        probe_solves=jnp.pad(cache.probe_solves, pad_rows),
+        precond=precond,
+        inv_quad=inv_quad,
+        logdet=jnp.float32(jnp.nan),
         cg_iters=res.num_iters,
     )
 

@@ -56,6 +56,18 @@ the CG three-term recurrence, so the recovered tridiagonals (and hence the
 SLQ log-det) are perturbed — the benchmark suite's tolerance study
 quantifies the resulting MLL error.
 
+**Adaptive refresh period** (``refresh_adaptive=True``): the static
+default period pays an f32 matmul every ``refresh_every`` steps even when
+the bf16 recursion is tracking the truth closely.  The adaptive policy
+uses the drift measurement each refresh already computes: while the
+maximum per-column drift stays below ``REFRESH_DRIFT_GATE`` the period
+*doubles* (geometric stretch, capped at ``refresh_max_period``), and on a
+violation it snaps straight back to the base ``refresh_every`` — so a
+well-conditioned solve pays O(log p) refreshes instead of p/period, while
+an ill-conditioned one degenerates to the honest static schedule.  The
+count of f32 refreshes actually taken is reported as
+``MBCGResult.num_refreshes``.
+
 Note on Algorithm 2 as printed in the paper: its β update uses
 (z_j∘z_j)/(z_{j-1}∘z_{j-1}); the textbook PCG recurrence (and GPyTorch's
 implementation) uses r·z in both places.  We implement the standard PCG
@@ -82,6 +94,16 @@ class MBCGResult(NamedTuple):
     # basis W (columns z_j/√(r_jᵀz_j)); populated only with return_basis=True.
     # Satisfies K̂⁻¹ ≈ W T̃⁻¹ Wᵀ per RHS column — the LOVE-style posterior
     # covariance cache (see repro.core.inference.build_posterior_cache).
+    num_refreshes: jax.Array | None = None  # scalar int32: in-loop f32
+    # residual refreshes actually taken (None when refresh_every == 0) —
+    # the FLOP-accounting diagnostic for the adaptive refresh policy.
+
+
+# Adaptive refresh: stretch the period only while the recursive residual is
+# tracking the true one this tightly (max per-column relative drift).  The
+# momentum guard fires at 0.25; stretching stops well before that so the
+# geometric schedule never rides the edge of the honesty gate.
+REFRESH_DRIFT_GATE = 0.1
 
 
 def _safe_div(num, den):
@@ -103,6 +125,8 @@ def _safe_rsqrt(x):
         "return_basis",
         "refresh_every",
         "refresh_matmul",
+        "refresh_adaptive",
+        "refresh_max_period",
     ),
 )
 def mbcg(
@@ -115,6 +139,8 @@ def mbcg(
     return_basis: bool = False,
     refresh_every: int = 0,
     refresh_matmul: Callable[[jax.Array], jax.Array] | None = None,
+    refresh_adaptive: bool = False,
+    refresh_max_period: int = 0,
 ) -> MBCGResult:
     """Solve K̂⁻¹B for all columns (and all leading batch dims) of B at once.
 
@@ -140,6 +166,13 @@ def mbcg(
         snapshot buffers.
       refresh_matmul: the full-precision ``M ↦ K̂ @ M`` used by the refresh
         (defaults to ``matmul`` — useful only as drift control then).
+      refresh_adaptive: stretch the refresh period geometrically (×2 per
+        refresh, capped at ``refresh_max_period``) while the measured
+        recursive-vs-true drift stays below ``REFRESH_DRIFT_GATE``; snap
+        back to ``refresh_every`` on a violation.  Recovers the f32-matmul
+        FLOPs the static schedule burns on well-conditioned solves.
+      refresh_max_period: cap for the adaptive stretch (0 → ``max_iters``,
+        i.e. effectively uncapped).
     """
     if precond_solve is None:
         precond_solve = lambda R: R
@@ -189,7 +222,8 @@ def mbcg(
         return (U, R, Znew, D, jnp.where(active, rz_new, rz), next_active), out
 
     def step_refresh(carry, it):
-        U, R, Z, D, rz, active, U_best, R_best, best_res = carry
+        (U, R, Z, D, rz, active, U_best, R_best, best_res,
+         period, since, nref) = carry
         V = matmul(D).astype(compute_dtype)
         dv = jnp.sum(D * V, axis=-2)
         alpha = _safe_div(rz, dv)
@@ -199,6 +233,7 @@ def mbcg(
         alpha = jnp.where(active, alpha, 0.0)
         U = U + alpha[..., None, :] * D
         Rrec = R - alpha[..., None, :] * V
+        do_refresh = since + 1 >= period
 
         def _advance(U, Rrec, D):
             Znew = precond_solve(Rrec).astype(compute_dtype)
@@ -206,7 +241,7 @@ def mbcg(
             beta = jnp.where(active, _safe_div(rz_new, rz), 0.0)
             Dn = jnp.where(active[..., None, :], Znew + beta[..., None, :] * D, D)
             return (U, Rrec, Znew, Dn, jnp.where(active, rz_new, rz),
-                    U_best, R_best, best_res, beta)
+                    U_best, R_best, best_res, beta, jnp.float32(0.0))
 
         # f32 residual refresh: replace the recursive residual with the true
         # b − K̂u, re-derive the masks from it (columns may REactivate), and
@@ -246,29 +281,43 @@ def mbcg(
             )
             beta_f = jnp.where(drift < 0.25, _safe_div(rzf, rz), 0.0)
             Df = Zf + beta_f[..., None, :] * D
-            return (Uc, Rf, Zf, Df, rzf, Ub, Rb, rb, beta_f)
+            return (Uc, Rf, Zf, Df, rzf, Ub, Rb, rb, beta_f, jnp.max(drift))
 
-        (U, Rn, Zn, Dn, rz_c, U_best, R_best, best_res, beta) = jax.lax.cond(
-            (it + 1) % refresh_every == 0, _refresh, _advance, U, Rrec, D
+        (U, Rn, Zn, Dn, rz_c, U_best, R_best, best_res, beta, drift_max) = (
+            jax.lax.cond(do_refresh, _refresh, _advance, U, Rrec, D)
         )
+        since = jnp.where(do_refresh, 0, since + 1)
+        nref = nref + do_refresh.astype(jnp.int32)
+        if refresh_adaptive:
+            # geometric stretch while the recursion tracks the truth; snap
+            # back to the base period the moment the drift gate is violated
+            cap = refresh_max_period if refresh_max_period > 0 else max_iters
+            stretched = jnp.minimum(period * 2, cap)
+            updated = jnp.where(
+                drift_max < REFRESH_DRIFT_GATE, stretched, refresh_every
+            )
+            period = jnp.where(do_refresh, updated, period)
         out = (alpha, beta, active)
         if return_basis:
             out = out + (jnp.where(active[..., None, :], Z * _safe_rsqrt(rz)[..., None, :], 0.0),)
         res = jnp.linalg.norm(Rn, axis=-2) / b_norm
         # a column whose best refreshed iterate already meets tol freezes
         next_active = jnp.minimum(res, best_res) > tol
-        return (U, Rn, Zn, Dn, rz_c, next_active, U_best, R_best, best_res), out
+        return (U, Rn, Zn, Dn, rz_c, next_active, U_best, R_best, best_res,
+                period, since, nref), out
 
     carry0 = (U0, R0, Z0, D0, rz0, active0)
     step = step_plain
     if refresh_every:
         res0 = jnp.linalg.norm(R0, axis=-2) / b_norm
-        carry0 = carry0 + (U0, R0, res0)
+        carry0 = carry0 + (U0, R0, res0,
+                           jnp.int32(refresh_every), jnp.int32(0), jnp.int32(0))
         step = step_refresh
     final_carry, outs = jax.lax.scan(step, carry0, jnp.arange(max_iters))
     U, R = final_carry[0], final_carry[1]
     alphas, betas, actives = outs[:3]
 
+    num_refreshes = None
     if refresh_every:
         # one last f32 refresh so post-final-cycle progress counts, then the
         # best refreshed iterate per column is the returned solve — with its
@@ -280,6 +329,7 @@ def mbcg(
         res_t = jnp.where(jnp.isfinite(res_t), res_t, jnp.inf)
         U = jnp.where((res_t < best_res)[..., None, :], U, U_best)
         res_final = jnp.minimum(res_t, best_res)
+        num_refreshes = final_carry[11]
     else:
         res_final = jnp.linalg.norm(R, axis=-2) / b_norm
     num_iters = jnp.sum(actives, axis=0)  # (..., t)
@@ -300,6 +350,7 @@ def mbcg(
         num_iters=num_iters,
         residual_norm=res_final,
         basis=basis,
+        num_refreshes=num_refreshes,
     )
 
 

@@ -24,7 +24,40 @@ import jax
 import jax.numpy as jnp
 
 from .linear_operator import LinearOperator, AddedDiagOperator, BatchDenseOperator
-from .pivoted_cholesky import pivoted_cholesky, pivoted_cholesky_dense
+from .pivoted_cholesky import (
+    pivoted_cholesky,
+    pivoted_cholesky_dense,
+    pivoted_cholesky_sharded,
+)
+
+
+def _precond_shard_axes(n: int) -> tuple:
+    """The mesh data axes to row-shard the pivoted-Cholesky build over —
+    () when there is no live mesh, no data axes, only one shard, or the
+    row count does not divide evenly (the generic path then stays
+    replicated; correctness never depends on the sharding)."""
+    try:
+        from repro.distributed.sharding import (
+            batch_axes,
+            current_mesh,
+            mesh_axis_sizes,
+        )
+
+        mesh = current_mesh()
+        if mesh is None:
+            return ()
+        axes = batch_axes()
+        if not axes:
+            return ()
+        sizes = mesh_axis_sizes(mesh)
+        shards = 1
+        for a in axes:
+            shards *= sizes[a]
+        if shards <= 1 or n % shards != 0:
+            return ()
+        return axes
+    except Exception:
+        return ()
 
 
 def _bcast_scalar(s, ndim_extra=2):
@@ -128,7 +161,7 @@ class IdentityPreconditioner:
 
 
 def build_preconditioner(
-    op: LinearOperator, rank: int, *, jitter: float = 1e-8
+    op: LinearOperator, rank: int, *, jitter: float = 1e-8, shard: bool | None = None
 ):
     """Build P̂ from an AddedDiagOperator K̂ = K + σ²I.
 
@@ -140,6 +173,12 @@ def build_preconditioner(
 
     Batched operators (BatchDenseOperator base) get a batched preconditioner
     via a vmapped pivoted Cholesky — one factor per batch element.
+
+    Under a live mesh whose data axes evenly divide n, the generic path
+    row-shards the O(n·k) pivoted-Cholesky state updates with shard_map
+    (``pivoted_cholesky_sharded``) — removing the last replicated O(n)
+    stage of the distributed solve path.  ``shard=False`` forces the
+    replicated build; ``shard=True`` requires it to be shardable.
     """
     if rank <= 0:
         return IdentityPreconditioner()
@@ -165,11 +204,20 @@ def build_preconditioner(
         return PivotedCholeskyPreconditioner.build(
             L, jax.lax.stop_gradient(op.sigma2)
         )
-    L = pivoted_cholesky(
-        lambda i: jax.lax.stop_gradient(base.row(i)),
-        jax.lax.stop_gradient(base.diagonal()),
-        rank,
-        jitter=jitter,
-    )
+    axes = _precond_shard_axes(base.shape[0]) if shard in (None, True) else ()
+    if shard is True and not axes:
+        raise ValueError(
+            "shard=True but no live mesh data axes evenly divide "
+            f"n={base.shape[0]}"
+        )
+    if axes:
+        L = pivoted_cholesky_sharded(base, rank, jitter=jitter, axes=axes)
+    else:
+        L = pivoted_cholesky(
+            lambda i: jax.lax.stop_gradient(base.row(i)),
+            jax.lax.stop_gradient(base.diagonal()),
+            rank,
+            jitter=jitter,
+        )
     sigma2 = jax.lax.stop_gradient(op.sigma2)
     return PivotedCholeskyPreconditioner.build(L, sigma2)

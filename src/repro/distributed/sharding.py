@@ -15,6 +15,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# The jax version this repo's compat shims are written against.  The whole
+# suite passes on this pin through the legacy branches below
+# (compat_shard_map's jax.experimental fallback, current_mesh's
+# thread_resources probe, use_mesh's legacy context path, mesh_axis_sizes's
+# devices.shape fallback).  tests/test_jax_pin.py fails loudly when the
+# installed jax moves off this pin: per ROADMAP, that is the moment to
+# DELETE the legacy branches (shrink the shims, don't grow them), migrate
+# the `with mesh:` test contexts to jax.set_mesh, and bump this constant.
+PINNED_JAX = "0.4.37"
+
 
 def current_mesh():
     """The live mesh, across jax versions: prefer the new abstract-mesh API,

@@ -3,6 +3,11 @@
 K̂ = (X·s)(X·s)ᵀ + σ²I — a LowRankRootOperator.  One BBMM matmul costs
 O(t·n·d); inference is O(p·t·n·d) with no bespoke derivation — the whole
 model is the operator below.
+
+Serving: inherited from :class:`repro.gp.model.WoodburyCachePredictor` —
+the root rows ARE the scaled features (no triangular map needed, Luu is
+None), so the posterior has an exact d-dimensional Woodbury cache:
+O(s·d²) CG-free queries and exact rank-k streaming appends.
 """
 
 from __future__ import annotations
@@ -17,58 +22,60 @@ from repro.core import (
     BBMMSettings,
     LowRankRootOperator,
     marginal_log_likelihood,
-    solve as bbmm_solve,
 )
-from repro.optim import adam
-from .exact import _softplus, _inv_softplus
+from .exact import _softplus, _inv_softplus, _input_dim
+from .model import WoodburyCachePredictor
+from .training import fit_gp
 
 
 @dataclasses.dataclass
-class BayesianLinearRegression:
+class BayesianLinearRegression(WoodburyCachePredictor):
     settings: BBMMSettings = dataclasses.field(
         default_factory=lambda: BBMMSettings(precond_rank=1)
     )  # precond_rank>0 triggers the exact low-rank-root preconditioner
+    # "highest" | "mixed": mixed runs the O(tnd) root contractions at bf16
+    # (f32 accumulation) with the mBCG f32 residual refresh.  None follows
+    # settings.precision; an explicit value overrides it unconditionally.
+    precision: str | None = None
 
-    def init_params(self, d):
+    def __post_init__(self):
+        if self.precision is not None:
+            self.settings = dataclasses.replace(
+                self.settings, precision=self.precision
+            )
+
+    # -- GPModel protocol ------------------------------------------------------
+    def prepare_inputs(self, X):
+        return X
+
+    def init_params(self, X, key=None):
+        d = _input_dim(X)
         return {
             "raw_prior_scale": jnp.zeros((d,)) + _inv_softplus(jnp.float32(1.0)),
             "raw_noise": _inv_softplus(jnp.float32(0.1)),
         }
 
-    def operator(self, params, X):
-        root = X * _softplus(params["raw_prior_scale"])[None, :]
+    def operator(self, params, data):
+        root = data * _softplus(params["raw_prior_scale"])[None, :]
         return AddedDiagOperator(LowRankRootOperator(root), _softplus(params["raw_noise"]))
 
-    def loss(self, params, X, y, key):
-        return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
+    def noise(self, params):
+        return _softplus(params["raw_noise"])
 
-    def fit(self, X, y, *, steps=100, lr=0.05, key=None):
+    def loss(self, params, data, y, key):
+        return -marginal_log_likelihood(self.operator(params, data), y, key, self.settings)
+
+    def fit(self, X, y, *, steps=100, lr=0.05, key=None, verbose=False):
         key = jax.random.PRNGKey(3) if key is None else key
-        params = self.init_params(X.shape[1])
-        init, update = adam(lr)
-        opt = init(params)
+        return fit_gp(self, X, y, steps=steps, lr=lr, key=key, verbose=verbose)
 
-        @jax.jit
-        def step(params, opt, k):
-            loss, g = jax.value_and_grad(self.loss)(params, X, y, k)
-            params, opt = update(g, opt, params)
-            return params, opt, loss
+    # -- serving cache (WoodburyCachePredictor hooks) --------------------------
+    def _woodbury_root(self, params, data):
+        return data * _softplus(params["raw_prior_scale"])[None, :], None
 
-        history = []
-        for _ in range(steps):
-            key, sub = jax.random.split(key)
-            params, opt, loss = step(params, opt, sub)
-            history.append(float(loss))
-        return params, history
+    def _woodbury_root_rows(self, params, Luu, Xq):
+        # the root rows ARE the scaled features — no triangular map
+        return Xq * _softplus(params["raw_prior_scale"])[None, :]
 
-    def predict(self, params, X, y, Xstar):
-        op = self.operator(params, X)
-        s = _softplus(params["raw_prior_scale"])
-        root_star = Xstar * s[None, :]
-        root = X * s[None, :]
-        Ksx = root_star @ root.T
-        B = jnp.concatenate([y[:, None], Ksx.T], axis=1)
-        solves = bbmm_solve(op, B, self.settings)
-        mean = Ksx @ solves[:, 0]
-        var = jnp.sum(root_star * root_star, 1) - jnp.sum(Ksx.T * solves[:, 1:], axis=0)
-        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
+    # posterior_cache / predict_cached / predict / update_cache:
+    # inherited from WoodburyCachePredictor (repro.gp.model)

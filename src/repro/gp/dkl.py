@@ -5,20 +5,26 @@ feature map can be a small MLP (built here) or *any* backbone from the
 repro.models zoo (wrap its pooled hidden state — see
 examples/deep_kernel_lm.py).  Gradients flow into network weights through
 BBMM's custom VJP: the network is just another kernel hyperparameter.
+
+Because the feature map lives *inside* the kernel, DKL reduces to the
+exact-GP serving story on featurized inputs: the full
+:class:`repro.gp.model.KrylovCachePredictor` surface (posterior cache,
+CG-free cached queries, streaming updates) and the ``precision=`` knob
+come for free through the shared protocol layer.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import AddedDiagOperator, BBMMSettings, marginal_log_likelihood, solve as bbmm_solve
-from repro.optim import adam
-from .exact import KERNELS, _softplus, _inv_softplus
+from repro.core import AddedDiagOperator, BBMMSettings, marginal_log_likelihood
+from .exact import KERNELS, _softplus, _inv_softplus, _input_dim
 from .kernels import DeepKernel, KernelOperator
+from .model import KrylovCachePredictor
+from .training import fit_gp
 
 
 def mlp_init(key, sizes):
@@ -40,15 +46,31 @@ def mlp_apply(params, X):
 
 
 @dataclasses.dataclass
-class DKLExactGP:
+class DKLExactGP(KrylovCachePredictor):
     hidden: tuple = (32, 32, 2)  # paper maps into a low-dim space for SKI
     kernel_type: str = "rbf"
     feature_fn: callable = None  # override to plug an LM backbone
     settings: BBMMSettings = dataclasses.field(default_factory=BBMMSettings)
+    # "highest" | "mixed": same semantics as ExactGP — the kernel-tile ×
+    # RHS contractions on the featurized inputs run at bf16 with f32
+    # accumulation plus the mBCG f32 residual refresh (the feature-map
+    # forward pass itself stays f32).  None follows settings.precision; an
+    # explicit value overrides it unconditionally.
+    precision: str | None = None
 
-    def init_params(self, d, key=None):
+    def __post_init__(self):
+        if self.precision is not None:
+            self.settings = dataclasses.replace(
+                self.settings, precision=self.precision
+            )
+
+    # -- GPModel protocol: inputs / parameterization --------------------------
+    def prepare_inputs(self, X):
+        return X
+
+    def init_params(self, X, key=None):
+        d = _input_dim(X)
         key = jax.random.PRNGKey(7) if key is None else key
-        feat_d = self.hidden[-1] if self.feature_fn is None else d
         return {
             "net": mlp_init(key, (d,) + self.hidden) if self.feature_fn is None else {},
             "raw_lengthscale": jnp.zeros(()) + _inv_softplus(jnp.float32(0.5)),
@@ -66,42 +88,24 @@ class DKLExactGP:
         )
         return DeepKernel(base=base, net_params=params["net"], feature_fn=self._features())
 
-    def operator(self, params, X):
+    def operator(self, params, data):
         return AddedDiagOperator(
-            KernelOperator(kernel=self.kernel(params), X=X, mode="dense"),
+            KernelOperator(kernel=self.kernel(params), X=data, mode="dense"),
             _softplus(params["raw_noise"]),
         )
 
-    def loss(self, params, X, y, key):
-        return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
+    def noise(self, params):
+        return _softplus(params["raw_noise"])
+
+    def loss(self, params, data, y, key):
+        return -marginal_log_likelihood(self.operator(params, data), y, key, self.settings)
 
     def fit(self, X, y, *, steps=150, lr=0.01, key=None, verbose=False):
         key = jax.random.PRNGKey(8) if key is None else key
-        params = self.init_params(X.shape[1])
-        init, update = adam(lr)
-        opt = init(params)
+        return fit_gp(
+            self, X, y, steps=steps, lr=lr, key=key, verbose=verbose, log_every=20
+        )
 
-        @jax.jit
-        def step(params, opt, k):
-            loss, g = jax.value_and_grad(self.loss)(params, X, y, k)
-            params, opt = update(g, opt, params)
-            return params, opt, loss
-
-        history = []
-        for i in range(steps):
-            key, sub = jax.random.split(key)
-            params, opt, loss = step(params, opt, sub)
-            history.append(float(loss))
-            if verbose and i % 20 == 0:
-                print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
-        return params, history
-
-    def predict(self, params, X, y, Xstar):
-        op = self.operator(params, X)
-        kern = self.kernel(params)
-        Kxs = kern(X, Xstar)
-        B = jnp.concatenate([y[:, None], Kxs], axis=1)
-        solves = bbmm_solve(op, B, self.settings)
-        mean = Kxs.T @ solves[:, 0]
-        var = kern.diag(Xstar) - jnp.sum(Kxs * solves[:, 1:], axis=0)
-        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
+    # posterior_cache / predict_cached / predict / update_cache:
+    # inherited from KrylovCachePredictor — the exact-GP cache on
+    # featurized inputs (the deep kernel featurizes internally)

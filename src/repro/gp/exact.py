@@ -1,13 +1,17 @@
 """Exact GP regression through the BBMM engine (paper §6 "Exact").
 
-Training: Adam on the raw (log) hyperparameters of the kernel + noise,
-gradients from the custom-VJP marginal log likelihood.  ``batched_loss``
-evaluates b hyperparameter sets (multi-restart training) in ONE fused
-engine call via the batched mBCG path.
-Prediction: ``predict`` builds a :class:`repro.core.PosteriorCache` (one
-engine call) and serves the mean from it; ``predict_cached`` re-serves
-mean *and* variance from the same cache with zero CG iterations —
-O(n·s + n·m) per request, the serving-traffic path.
+Training: the shared Adam driver (``repro.gp.training.fit_gp``) on the raw
+(log) hyperparameters of the kernel + noise, gradients from the
+custom-VJP marginal log likelihood.  ``batched_loss`` evaluates b
+hyperparameter sets (multi-restart training) in ONE fused engine call via
+the batched mBCG path.
+Prediction/serving: inherited from
+:class:`repro.gp.model.KrylovCachePredictor` — ``predict`` builds a
+:class:`repro.core.PosteriorCache` (one engine call) and serves the mean
+from it; ``predict_cached`` re-serves mean *and* variance from the same
+cache with zero CG iterations — O(n·s + n·m) per request, the
+serving-traffic path; ``update_cache`` streams data appends in via
+warm-started CG with Krylov-basis recycling.
 """
 
 from __future__ import annotations
@@ -22,14 +26,11 @@ from repro.core import (
     AddedDiagOperator,
     BatchDenseOperator,
     BBMMSettings,
-    build_posterior_cache,
-    cached_inv_quad,
-    cached_mean,
     marginal_log_likelihood,
-    solve as bbmm_solve,
 )
-from repro.optim import adam
 from .kernels import KernelOperator, RBFKernel, MaternKernel
+from .model import KrylovCachePredictor
+from .training import fit_gp
 
 
 def _softplus(x):
@@ -40,12 +41,18 @@ def _inv_softplus(y):
     return jnp.log(jnp.expm1(y))
 
 
+def _input_dim(X) -> int:
+    """Protocol canonical form is the (n, d) input array; a bare int d is
+    accepted for convenience at direct call sites."""
+    return X if isinstance(X, int) else X.shape[-1]
+
+
 KERNELS = {"rbf": RBFKernel, "matern52": partial(MaternKernel, nu=2.5),
            "matern32": partial(MaternKernel, nu=1.5), "matern12": partial(MaternKernel, nu=0.5)}
 
 
 @dataclasses.dataclass
-class ExactGP:
+class ExactGP(KrylovCachePredictor):
     kernel_type: str = "rbf"
     mode: str = "dense"  # dense | blocked | pallas (the blackbox matmul impl)
     block_size: int = 512
@@ -64,8 +71,13 @@ class ExactGP:
                 self.settings, precision=self.precision
             )
 
-    # -- parameterization ---------------------------------------------------
-    def init_params(self, d: int, ard: bool = False):
+    # -- GPModel protocol: inputs / parameterization --------------------------
+    def prepare_inputs(self, X):
+        """Exact GP has no hyperparameter-free geometry: data IS X."""
+        return X
+
+    def init_params(self, X, ard: bool = False, key=None):
+        d = _input_dim(X)
         ell0 = jnp.zeros((d,) if ard else ()) + _inv_softplus(jnp.float32(0.5))
         return {
             "raw_lengthscale": ell0,
@@ -80,15 +92,18 @@ class ExactGP:
             outputscale=_softplus(params["raw_outputscale"]),
         )
 
-    def operator(self, params, X) -> AddedDiagOperator:
+    def operator(self, params, data) -> AddedDiagOperator:
         base = KernelOperator(
-            kernel=self.kernel(params), X=X, mode=self.mode, block_size=self.block_size
+            kernel=self.kernel(params), X=data, mode=self.mode, block_size=self.block_size
         )
         return AddedDiagOperator(base, _softplus(params["raw_noise"]))
 
+    def noise(self, params):
+        return _softplus(params["raw_noise"])
+
     # -- training -------------------------------------------------------------
-    def loss(self, params, X, y, key):
-        return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
+    def loss(self, params, data, y, key):
+        return -marginal_log_likelihood(self.operator(params, data), y, key, self.settings)
 
     def batched_operator(self, params_batch, X) -> AddedDiagOperator:
         """K̂ for a stack of b hyperparameter sets as ONE batched operator.
@@ -113,80 +128,7 @@ class ExactGP:
 
     def fit(self, X, y, *, steps=100, lr=0.1, key=None, verbose=False):
         key = jax.random.PRNGKey(0) if key is None else key
-        params = self.init_params(X.shape[-1])
-        init, update = adam(lr)
-        opt = init(params)
+        return fit_gp(self, X, y, steps=steps, lr=lr, key=key, verbose=verbose)
 
-        @jax.jit
-        def step(params, opt, k):
-            loss, g = jax.value_and_grad(self.loss)(params, X, y, k)
-            params, opt = update(g, opt, params)
-            return params, opt, loss
-
-        history = []
-        for i in range(steps):
-            key, sub = jax.random.split(key)
-            params, opt, loss = step(params, opt, sub)
-            history.append(float(loss))
-            if verbose and i % 10 == 0:
-                print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
-        return params, history
-
-    # -- prediction -------------------------------------------------------------
-    def posterior_cache(self, params, X, y, *, key=None, variance_cache=True):
-        """One engine call → reusable solve cache for cheap repeated queries.
-
-        The default key is fixed, so rebuilding the cache for the same
-        (params, X, y) is deterministic — and ``predict`` routes its mean
-        through this exact code path, making cached and uncached means
-        bitwise identical."""
-        key = jax.random.PRNGKey(0) if key is None else key
-        return build_posterior_cache(
-            self.operator(params, X), y, key, self.settings,
-            variance_cache=variance_cache,
-        )
-
-    def predict_cached(self, params, X, cache, Xstar, *, full_cov=False):
-        """Serve mean + variance from a PosteriorCache — zero CG iterations.
-
-        Mean: k*ᵀα, O(n·s).  Variance: Rayleigh–Ritz k*ᵀK̂⁻¹k* from the
-        cached Krylov basis, O(n·m) — conservative (never below the exact
-        posterior variance)."""
-        kern = self.kernel(params)
-        Kxs = kern(X, Xstar)  # (n, s)
-        mean = cached_mean(cache, Kxs)
-        if full_cov:
-            if cache.basis is None:
-                raise ValueError(
-                    "cache was built with variance_cache=False; rebuild with "
-                    "variance_cache=True for covariance queries"
-                )
-            v = cache.basis.T @ Kxs
-            w = jax.scipy.linalg.cho_solve((cache.gram_chol, True), v)
-            return mean, kern(Xstar, Xstar) - v.T @ w
-        var = kern.diag(Xstar) - cached_inv_quad(cache, Kxs)
-        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
-
-    def predict(self, params, X, y, Xstar, *, full_cov=False, key=None):
-        """Posterior mean and (diagonal) variance at Xstar (Eq. 1).
-
-        Builds the posterior cache without its variance stage (mean comes
-        from the identical mBCG program as ``predict_cached``'s cache, so
-        the means are bitwise equal), then runs exact mBCG solves against
-        K_X* for the covariance."""
-        cache = self.posterior_cache(params, X, y, key=key, variance_cache=False)
-        op = self.operator(params, X)
-        kern = self.kernel(params)
-        Kxs = kern(X, Xstar)  # (n, s)
-        mean = cached_mean(cache, Kxs)
-        # variance: exact solves, reusing the cache's preconditioner factors
-        solves = bbmm_solve(op, Kxs, self.settings, precond=cache.precond)
-        if full_cov:
-            cov = kern(Xstar, Xstar) - Kxs.T @ solves
-            return mean, cov
-        # predictive (observation) variance: latent var + likelihood noise
-        var = kern.diag(Xstar) - jnp.sum(Kxs * solves, axis=0)
-        return mean, jnp.clip(var, 1e-8) + _softplus(params["raw_noise"])
-
-    def noise(self, params):
-        return _softplus(params["raw_noise"])
+    # posterior_cache / predict_cached / predict / update_cache:
+    # inherited from KrylovCachePredictor (repro.gp.model)

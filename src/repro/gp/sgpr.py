@@ -8,12 +8,17 @@ O(n·m² + m³) Cholesky-engine path the paper compares against.
 The inducing locations U are ordinary differentiable parameters: BBMM's
 custom VJP carries MLL gradients into them with no extra derivation
 (<50 lines, as the paper advertises).
+
+Serving: inherited from :class:`repro.gp.model.WoodburyCachePredictor` —
+the SoR posterior has a closed m-dimensional Woodbury form, so the cache
+is exact, queries cost O(s·m²) with no CG anywhere, and streaming data
+appends are exact rank-k refreshes of the (G, b) sufficient statistics
+(O(m³), independent of n).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -24,12 +29,13 @@ from repro.core import (
     LowRankRootOperator,
     marginal_log_likelihood,
 )
-from repro.optim import adam
 from .exact import KERNELS, _softplus, _inv_softplus
+from .model import WoodburyCachePredictor
+from .training import fit_gp
 
 
 @dataclasses.dataclass
-class SGPR:
+class SGPR(WoodburyCachePredictor):
     num_inducing: int = 300
     kernel_type: str = "rbf"
     jitter: float = 1e-4
@@ -51,10 +57,15 @@ class SGPR:
                 self.settings, precision=self.precision
             )
 
-    def init_params(self, X):
+    # -- GPModel protocol: inputs / parameterization --------------------------
+    def prepare_inputs(self, X):
+        return X
+
+    def init_params(self, X, key=None):
         n, d = X.shape
         # k-means-free init: random training subset
-        idx = jax.random.permutation(jax.random.PRNGKey(0), n)[: self.num_inducing]
+        key = jax.random.PRNGKey(0) if key is None else key
+        idx = jax.random.permutation(key, n)[: self.num_inducing]
         return {
             "inducing": X[idx],
             "raw_lengthscale": jnp.zeros(()) + _inv_softplus(jnp.float32(0.5)),
@@ -81,82 +92,32 @@ class SGPR:
     def noise(self, params):
         return _softplus(params["raw_noise"]) + self.min_noise
 
-    def operator(self, params, X):
-        R, _, _ = self._root(params, X)
+    def operator(self, params, data):
+        R, _, _ = self._root(params, data)
         return AddedDiagOperator(LowRankRootOperator(R), self.noise(params))
 
-    def loss(self, params, X, y, key):
-        return -marginal_log_likelihood(self.operator(params, X), y, key, self.settings)
+    def loss(self, params, data, y, key):
+        return -marginal_log_likelihood(self.operator(params, data), y, key, self.settings)
 
     def fit(self, X, y, *, steps=100, lr=0.05, key=None, learn_inducing=True, verbose=False):
         key = jax.random.PRNGKey(1) if key is None else key
-        params = self.init_params(X)
-        init, update = adam(lr)
-        opt = init(params)
-
-        @jax.jit
-        def step(params, opt, k):
-            loss, g = jax.value_and_grad(self.loss)(params, X, y, k)
-            if not learn_inducing:
-                g = dict(g, inducing=jnp.zeros_like(g["inducing"]))
-            params, opt = update(g, opt, params)
-            return params, opt, loss
-
-        history = []
-        for i in range(steps):
-            key, sub = jax.random.split(key)
-            params, opt, loss = step(params, opt, sub)
-            history.append(float(loss))
-            if verbose and i % 10 == 0:
-                print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
-        return params, history
-
-    # -- serving cache ---------------------------------------------------------
-    def posterior_cache(self, params, X, y):
-        """Exact O(n·m²) Woodbury serving cache for the SoR posterior.
-
-        Because K̂ = RRᵀ + σ²I exactly, the posterior solve has a closed
-        m-dimensional form — no CG at all.  Cached quantities make every
-        subsequent query O(s·m + m²):
-
-          alpha = K̂⁻¹y,   w = Rᵀα  (mean weights),
-          H = RᵀK̂⁻¹R      (variance correction in inducing coordinates),
-          Luu               (maps k(X*,U) → Rstar coordinates).
-        """
-        R, _, Luu = self._root(params, X)
-        s2 = self.noise(params)
-        m = R.shape[1]
-        G = R.T @ R
-        C = jnp.linalg.cholesky(s2 * jnp.eye(m, dtype=R.dtype) + G)
-        alpha = (y - R @ jax.scipy.linalg.cho_solve((C, True), R.T @ y)) / s2
-        H = (G - G @ jax.scipy.linalg.cho_solve((C, True), G)) / s2
-        return {
-            "alpha": alpha,
-            "w": R.T @ alpha,
-            "H": H,
-            "Luu": Luu,
-            "noise": s2,
-        }
-
-    def predict_cached(self, params, cache, Xstar):
-        """Mean/variance from the Woodbury cache — O(s·m²), no solves."""
-        kern = self.kernel(params)
-        U = params["inducing"]
-        Ksu = kern(Xstar, U)
-        Rstar = jax.scipy.linalg.solve_triangular(
-            cache["Luu"], Ksu.T, lower=True
-        ).T  # (s, m)
-        mean = Rstar @ cache["w"]
-        var = jnp.sum(Rstar * Rstar, axis=1) - jnp.sum(
-            Rstar * (Rstar @ cache["H"]), axis=1
+        grad_mask = None
+        if not learn_inducing:
+            grad_mask = lambda g: dict(g, inducing=jnp.zeros_like(g["inducing"]))
+        return fit_gp(
+            self, X, y, steps=steps, lr=lr, key=key, verbose=verbose,
+            grad_mask=grad_mask,
         )
-        return mean, jnp.clip(var, 1e-8) + cache["noise"]
 
-    def predict(self, params, X, y, Xstar):
-        """SoR predictive: mean/var under the low-rank kernel.
+    # -- serving cache (WoodburyCachePredictor hooks) --------------------------
+    def _woodbury_root(self, params, data):
+        R, _, Luu = self._root(params, data)
+        return R, Luu
 
-        Routed through :meth:`posterior_cache` — the Woodbury algebra is
-        exact for the SoR kernel, so this *replaces* the per-query CG run
-        (mean is bitwise identical between predict and predict_cached)."""
-        cache = self.posterior_cache(params, X, y)
-        return self.predict_cached(params, cache, Xstar)
+    def _woodbury_root_rows(self, params, Luu, Xq):
+        """k(Xq, U) mapped into root coordinates via the cached chol(K_UU)."""
+        Ksu = self.kernel(params)(Xq, params["inducing"])  # (q, m)
+        return jax.scipy.linalg.solve_triangular(Luu, Ksu.T, lower=True).T
+
+    # posterior_cache / predict_cached / predict / update_cache:
+    # inherited from WoodburyCachePredictor (repro.gp.model)

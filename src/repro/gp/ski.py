@@ -33,8 +33,8 @@ from repro.core import (
     marginal_log_likelihood,
     solve as bbmm_solve,
 )
-from repro.optim import adam
 from .exact import _softplus, _inv_softplus
+from .training import fit_gp
 
 
 def _cubic_weights(u):
@@ -118,7 +118,7 @@ class SKI:
                 self.settings, precision=self.precision
             )
 
-    def init_params(self, X):
+    def init_params(self, X, key=None):
         d = X.shape[1]
         return {
             "raw_lengthscale": jnp.zeros((d,)) + _inv_softplus(jnp.float32(0.5)),
@@ -126,12 +126,18 @@ class SKI:
             "raw_noise": _inv_softplus(jnp.float32(0.1)),
         }
 
-    def prepare(self, X):
-        """Precompute geometry (grid + W) — independent of hyperparameters."""
+    def prepare_inputs(self, X):
+        """Precompute geometry (grid + W) — independent of hyperparameters.
+
+        This is SKI's ``data`` in the GPModel protocol: every downstream
+        method takes this geometry dict where other models take X."""
         d = X.shape[1]
         grid = Grid.fit(X, (self.grid_size,) * d)
         indices, values = grid.interpolate(X)
         return {"grid": grid, "indices": indices, "values": values}
+
+    # historical name, kept for direct call sites
+    prepare = prepare_inputs
 
     def _kuu(self, params, grid: Grid):
         """Kronecker-of-Toeplitz K_UU (separable RBF across dims)."""
@@ -158,27 +164,15 @@ class SKI:
     def loss(self, params, geom, y, key):
         return -marginal_log_likelihood(self.operator(params, geom), y, key, self.settings)
 
+    def noise(self, params):
+        return _softplus(params["raw_noise"])
+
     def fit(self, X, y, *, steps=100, lr=0.1, key=None, verbose=False):
+        """(params, history) via the shared driver.  The geometry the loop
+        used is reproducible as ``self.prepare_inputs(X)`` (deterministic
+        in X) — fit no longer returns it, per the GPModel protocol."""
         key = jax.random.PRNGKey(2) if key is None else key
-        geom = self.prepare(X)
-        params = self.init_params(X)
-        init, update = adam(lr)
-        opt = init(params)
-
-        @jax.jit
-        def step(params, opt, k):
-            loss, g = jax.value_and_grad(self.loss)(params, geom, y, k)
-            params, opt = update(g, opt, params)
-            return params, opt, loss
-
-        history = []
-        for i in range(steps):
-            key, sub = jax.random.split(key)
-            params, opt, loss = step(params, opt, sub)
-            history.append(float(loss))
-            if verbose and i % 10 == 0:
-                print(f"step {i:4d}  -mll/n {float(loss)/len(y):.4f}")
-        return params, geom, history
+        return fit_gp(self, X, y, steps=steps, lr=lr, key=key, verbose=verbose)
 
     def _cross(self, params, geom, Xstar):
         """SKI cross-covariance machinery for a test block: returns

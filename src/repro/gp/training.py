@@ -1,0 +1,81 @@
+"""The ONE fit driver behind every GP model (protocol layer of ISSUE 3).
+
+Before this module each of the five models hand-rolled the same Adam loop
+(init → jit'd value_and_grad step → float history); now they all delegate
+to :func:`fit_gp`, which drives any :class:`repro.gp.model.GPModel`
+through the shared path:
+
+    data   = model.prepare_inputs(X)      # hyperparameter-free geometry, once
+    params = model.init_params(X)
+    loop:    loss, g = value_and_grad(model.loss)(params, data, y, key_i)
+
+Settings/precision plumbing rides on the model itself — ``model.loss``
+reads ``model.settings`` (where the ``precision=`` knob was folded by the
+model's ``__post_init__``), so the driver is precision-agnostic by
+construction.
+
+``grad_mask`` covers the one structured-training variant in the zoo
+(SGPR's ``learn_inducing=False`` freezes the inducing locations) without
+forking the loop.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.optim import adam
+
+
+def fit_gp(
+    model,
+    X,
+    y,
+    *,
+    steps: int = 100,
+    lr: float = 0.1,
+    key=None,
+    verbose: bool = False,
+    log_every: int = 10,
+    grad_mask: Callable | None = None,
+):
+    """Fit any GPModel with Adam on the mBCG marginal log likelihood.
+
+    Args:
+      model: a :class:`repro.gp.model.GPModel` (structural — anything with
+        ``prepare_inputs`` / ``init_params`` / ``loss``).
+      X, y: training inputs (n, d) and targets (n,).
+      steps, lr: Adam schedule.
+      key: PRNG key driving the per-step probe draws (fixed default →
+        deterministic histories; models pass their historical defaults).
+      verbose / log_every: print ``-mll/n`` every ``log_every`` steps.
+      grad_mask: optional pytree→pytree transform applied to each gradient
+        before the optimizer update (e.g. zero the inducing-point leaf).
+
+    Returns:
+      (params, history) — final parameters and the per-step loss floats.
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    data = model.prepare_inputs(X)
+    params = model.init_params(X)
+    init, update = adam(lr)
+    opt = init(params)
+
+    @jax.jit
+    def step(params, opt, k):
+        loss, g = jax.value_and_grad(model.loss)(params, data, y, k)
+        if grad_mask is not None:
+            g = grad_mask(g)
+        params, opt = update(g, opt, params)
+        return params, opt, loss
+
+    n = y.shape[-1]
+    history = []
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        params, opt, loss = step(params, opt, sub)
+        history.append(float(loss))
+        if verbose and i % log_every == 0:
+            print(f"step {i:4d}  -mll/n {float(loss)/n:.4f}")
+    return params, history

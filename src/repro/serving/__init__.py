@@ -1,0 +1,14 @@
+"""GP serving subsystem: versioned posterior caches with streaming updates.
+
+``PosteriorSession`` wraps any :class:`repro.gp.model.GPModel` behind the
+serving seam the ROADMAP asks for: cache versioning/fingerprinting
+against (params, X, y), CG-free mean/variance queries, incremental
+``observe`` updates (rank-1 Woodbury / Krylov-basis recycling) with a
+``max_staleness`` rebuild policy, and stale-check + rebuild hooks for
+async refresh.  The batched request driver lives in
+``repro.launch.gp_serve``.
+"""
+
+from .session import CacheInfo, PosteriorSession, fingerprint
+
+__all__ = ["CacheInfo", "PosteriorSession", "fingerprint"]

@@ -1,0 +1,232 @@
+"""PosteriorSession — the versioned serving wrapper over any GPModel.
+
+The session owns the serving triple (params, X, y) and a posterior cache
+derived from it, and keeps the two consistent through an explicit
+version/fingerprint discipline:
+
+  * every live cache carries a :class:`CacheInfo` — a monotonically
+    increasing version number, the SHA-1 **fingerprint** of the exact
+    (params, X, y) it was derived from, and its *staleness* (number of
+    incremental updates since the last full build);
+  * every mutation of the serving state goes through the session API
+    (``observe`` appends data, ``update_params`` swaps hyperparameters),
+    which re-fingerprints the state — a cache whose fingerprint no longer
+    matches is invalid and is rebuilt before the next query is answered;
+  * ``observe(X_new, y_new)`` keeps the cache live *incrementally* when
+    the model supports streaming (``update_cache``): an exact rank-k
+    Woodbury refresh for SGPR/BLR (O(m³), zero CG solves), warm-started
+    CG with Krylov-basis recycling for ExactGP/DKL.  Once
+    ``max_staleness`` consecutive incremental updates have accumulated —
+    or the model has no streaming path (SKI) — it falls back to a full
+    rebuild;
+  * ``stale()`` / ``rebuild()`` are the async-refresh hooks: a background
+    refresher polls ``stale()`` (or just ``staleness > 0``) and calls
+    ``rebuild()`` off the request path; the cache+info swap is atomic
+    under the session lock, so concurrent ``query`` calls always see a
+    consistent (cache, fingerprint) pair.
+
+Queries (``query``) are served entirely from the cache — zero CG
+iterations for every model (guarded by tests/test_serving.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gp.model import missing_protocol_methods, supports_streaming
+
+
+def fingerprint(tree) -> str:
+    """SHA-1 content fingerprint of an arbitrary pytree of arrays.
+
+    Hashes every leaf's shape, dtype and raw bytes (host transfer — this
+    is a mutation-time cost, never a query-time one)."""
+    h = hashlib.sha1()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInfo:
+    """Provenance of a live posterior cache."""
+
+    version: int  # bumped on every cache swap (build or incremental)
+    fingerprint: str  # of the (params, X, y) this cache serves
+    n: int  # training rows covered
+    staleness: int  # incremental updates since the last full build
+
+
+class PosteriorSession:
+    """Versioned, streaming-updatable posterior serving for one GP model.
+
+    Args:
+      model: any :class:`repro.gp.model.GPModel`.
+      params: fitted hyperparameters.
+      X, y: training data the posterior conditions on.
+      max_staleness: how many consecutive incremental ``observe`` updates
+        may accumulate before the next one forces a full rebuild
+        (0 → streaming disabled, every observe rebuilds).  Woodbury
+        updates are algebraically exact, so for SGPR/BLR this bounds only
+        floating-point accumulation; for the Krylov caches it also bounds
+        basis growth (≤ max_cg_iters+1 columns per update).
+      build: build the cache eagerly (default) or lazily on first query.
+    """
+
+    def __init__(self, model, params, X, y, *, max_staleness: int = 8, build: bool = True):
+        missing = missing_protocol_methods(model)
+        if missing:
+            raise TypeError(
+                f"{type(model).__name__} does not implement the GPModel "
+                f"protocol (missing: {missing})"
+            )
+        self.model = model
+        self.max_staleness = int(max_staleness)
+        self._lock = threading.RLock()
+        self._params = params
+        self._X = jnp.atleast_2d(jnp.asarray(X))
+        self._y = jnp.atleast_1d(jnp.asarray(y))
+        self._data = model.prepare_inputs(self._X)
+        self._state_fp = fingerprint((self._params, self._X, self._y))
+        self._cache = None
+        self._info: CacheInfo | None = None
+        self._version = 0
+        if build:
+            self.rebuild()
+
+    # -- state accessors ----------------------------------------------------
+    @property
+    def params(self):
+        return self._params
+
+    @property
+    def X(self):
+        return self._X
+
+    @property
+    def y(self):
+        return self._y
+
+    @property
+    def n(self) -> int:
+        return int(self._y.shape[0])
+
+    @property
+    def cache(self):
+        """The live posterior cache pytree (None before the first build) —
+        read-only; callers wanting sync semantics can
+        ``jax.block_until_ready(jax.tree_util.tree_leaves(session.cache))``."""
+        return self._cache
+
+    @property
+    def cache_info(self) -> CacheInfo | None:
+        """Provenance of the live cache (None before the first build)."""
+        return self._info
+
+    @property
+    def streaming(self) -> bool:
+        return supports_streaming(self.model) and self.max_staleness > 0
+
+    # -- versioning / refresh hooks ----------------------------------------
+    def stale(self) -> bool:
+        """True when the live cache no longer matches (params, X, y) —
+        missing, or fingerprint drift (e.g. ``update_params`` happened and
+        no rebuild ran yet).  Incremental ``observe`` updates re-stamp the
+        cache fingerprint, so a successfully streamed cache is NOT stale;
+        its ``cache_info.staleness`` counts how far it has drifted from a
+        fresh build (the async-refresh signal)."""
+        with self._lock:
+            return self._cache is None or self._info.fingerprint != self._state_fp
+
+    def rebuild(self) -> CacheInfo:
+        """Full posterior-cache build from the current (params, X, y).
+
+        This is the async-refresh hook: it can run on a background worker
+        (it only *reads* serving state until the final atomic swap), while
+        queries keep being served from the previous cache."""
+        with self._lock:
+            params, data, y, fp = self._params, self._data, self._y, self._state_fp
+        cache = self.model.posterior_cache(params, data, y)
+        with self._lock:
+            self._version += 1
+            self._cache = cache
+            self._info = CacheInfo(
+                version=self._version, fingerprint=fp,
+                n=int(y.shape[0]), staleness=0,
+            )
+            return self._info
+
+    def refresh_if_stale(self) -> bool:
+        """Poll-style hook for a background refresher: rebuild when the
+        cache is invalid OR has accumulated incremental updates."""
+        with self._lock:
+            needs = self.stale() or (self._info is not None and self._info.staleness > 0)
+        if needs:
+            self.rebuild()
+        return needs
+
+    # -- mutations ----------------------------------------------------------
+    def update_params(self, params) -> None:
+        """Swap hyperparameters.  Invalidates the cache (fingerprint
+        mismatch); the rebuild happens lazily on the next query, or
+        explicitly via ``rebuild()`` (async refresh)."""
+        with self._lock:
+            self._params = params
+            self._state_fp = fingerprint((self._params, self._X, self._y))
+
+    def observe(self, X_new, y_new) -> str:
+        """Append observations (X_new, y_new) to the posterior.
+
+        Returns the path taken: ``"append"`` (incremental cache update —
+        exact rank-k Woodbury refresh or Krylov-recycled warm-started CG)
+        or ``"rebuild"`` (full build: non-streaming model, no valid cache,
+        or the ``max_staleness`` budget was exhausted).
+        """
+        X_new = jnp.atleast_2d(jnp.asarray(X_new))
+        y_new = jnp.atleast_1d(jnp.asarray(y_new))
+        if X_new.shape[0] != y_new.shape[0]:
+            raise ValueError(
+                f"X_new rows ({X_new.shape[0]}) != y_new length ({y_new.shape[0]})"
+            )
+        with self._lock:
+            can_stream = (
+                self.streaming
+                and self._cache is not None
+                and self._info.fingerprint == self._state_fp
+                and self._info.staleness < self.max_staleness
+            )
+            self._X = jnp.concatenate([self._X, X_new], axis=0)
+            self._y = jnp.concatenate([self._y, y_new], axis=0)
+            self._data = self.model.prepare_inputs(self._X)
+            self._state_fp = fingerprint((self._params, self._X, self._y))
+            if can_stream:
+                self._cache = self.model.update_cache(
+                    self._params, self._data, self._y, self._cache, X_new, y_new
+                )
+                self._version += 1
+                self._info = CacheInfo(
+                    version=self._version, fingerprint=self._state_fp,
+                    n=self.n, staleness=self._info.staleness + 1,
+                )
+                return "append"
+        self.rebuild()
+        return "rebuild"
+
+    # -- queries ------------------------------------------------------------
+    def query(self, Xstar, **kwargs):
+        """Posterior (mean, variance) at Xstar, served from the cache —
+        zero CG iterations.  Rebuilds first if the cache is stale."""
+        if self.stale():
+            self.rebuild()
+        with self._lock:
+            params, data, cache = self._params, self._data, self._cache
+        return self.model.predict_cached(params, data, cache, jnp.asarray(Xstar), **kwargs)

@@ -161,7 +161,8 @@ class TestSKI:
     def test_fit_and_predict_1d(self):
         x, y = toy_1d(jax.random.PRNGKey(8), 500)
         gp = SKI(grid_size=80, settings=BBMMSettings(max_cg_iters=30))
-        params, geom, hist = gp.fit(x, y, steps=60, lr=0.1)
+        params, hist = gp.fit(x, y, steps=60, lr=0.1)
+        geom = gp.prepare_inputs(x)
         assert hist[-1] < hist[0]
         xs = jnp.linspace(-0.9, 0.9, 50)[:, None]
         mean, var = gp.predict(params, geom, y, xs)
@@ -173,7 +174,8 @@ class TestSKI:
         x = jax.random.uniform(key, (200, 2))
         y = jnp.sin(3 * x[:, 0]) * jnp.cos(3 * x[:, 1])
         gp = SKI(grid_size=24, settings=BBMMSettings(max_cg_iters=30))
-        params, geom, hist = gp.fit(x, y, steps=40, lr=0.1)
+        params, hist = gp.fit(x, y, steps=40, lr=0.1)
+        geom = gp.prepare_inputs(x)
         assert hist[-1] < hist[0]
         mean, _ = gp.predict(params, geom, y, x[:20])
         assert float(jnp.mean(jnp.abs(mean - y[:20]))) < 0.15

@@ -1,0 +1,30 @@
+"""jax pin drift guard.
+
+The multi-device paths run through the version-compat shims in
+``repro.distributed.sharding`` (compat_shard_map / current_mesh / use_mesh
+/ mesh_axis_sizes).  Per the ROADMAP, those shims must SHRINK when the
+pinned jax moves, not grow — this test turns an accidental version bump
+into an explicit maintenance task instead of silent shim rot.
+"""
+
+import jax
+
+from repro.distributed.sharding import PINNED_JAX
+
+
+def test_installed_jax_matches_pin():
+    assert jax.__version__ == PINNED_JAX, (
+        f"\njax moved off the pin: installed {jax.__version__}, pinned {PINNED_JAX}.\n"
+        "This is the scheduled moment to shrink the compat shims in\n"
+        "repro.distributed.sharding (do NOT just bump the pin):\n"
+        "  * compat_shard_map: drop the jax.experimental.shard_map fallback,\n"
+        "    call jax.shard_map directly;\n"
+        "  * current_mesh: drop the jax._src.mesh thread_resources probe,\n"
+        "    keep only jax.sharding.get_abstract_mesh;\n"
+        "  * use_mesh: drop the legacy `Mesh as context manager` branch,\n"
+        "    keep only jax.set_mesh;\n"
+        "  * mesh_axis_sizes: drop the mesh.devices.shape fallback,\n"
+        "    keep only mesh.axis_sizes;\n"
+        "  * tests: replace `with mesh:` contexts with jax.set_mesh.\n"
+        "Then update PINNED_JAX (and the pyproject pin) to the new version."
+    )

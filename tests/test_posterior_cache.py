@@ -143,7 +143,7 @@ class TestSGPRCache:
             lambda *a, **k: (calls.__setitem__("n", calls["n"] + 1), real_mbcg(*a, **k))[1],
         )
         cache = gp.posterior_cache(params, X, y)
-        mean_c, var_c = gp.predict_cached(params, cache, Xs)
+        mean_c, var_c = gp.predict_cached(params, X, cache, Xs)
         assert calls["n"] == 0  # SoR cache is pure Woodbury — no CG anywhere
         assert np.array_equal(np.asarray(mean_c), np.asarray(mean_ref))
         np.testing.assert_allclose(np.asarray(var_c), np.asarray(var_ref), rtol=1e-6)
@@ -166,7 +166,7 @@ class TestSGPRCache:
             Q_sx.T * jnp.linalg.solve(Kd, Q_sx.T), 0
         )
         cache = gp.posterior_cache(params, X, y)
-        mean_c, var_c = gp.predict_cached(params, cache, Xs)
+        mean_c, var_c = gp.predict_cached(params, X, cache, Xs)
         np.testing.assert_allclose(np.asarray(mean_c), np.asarray(mean_dense), rtol=2e-4, atol=2e-4)
         np.testing.assert_allclose(
             np.asarray(var_c - gp.noise(params)),

@@ -1,0 +1,160 @@
+"""Fused CG iteration (ISSUE 4): per-iteration wall time, kernel-launch
+count and HBM traffic of the fused Pallas CG step vs the unfused loop.
+
+Three measurements per (n, t, b) grid point, all recorded into
+``BENCH_speed.json`` rows:
+
+  * **per-iteration wall time** — mbcg with ``tol=0`` (no early freeze) at
+    fixed trip count, fused vs unfused, divided by the trip count.  On the
+    CPU benchmark backend the Pallas kernel runs in *interpret mode* (a
+    Python grid loop), so the fused wall time is NOT representative of TPU
+    execution — the backend field in the JSON says which regime a row was
+    measured in; launch/traffic counts are the backend-independent signal.
+  * **kernel launches per iteration** — counted from the jaxpr of one
+    iteration body (``count_pallas_calls``): the fused path must be exactly
+    1; the unfused path is 1 pallas_call + the XLA O(n·t) state passes
+    (``count_nt_passes``), each a separate HBM round-trip (and on TPU a
+    separate fusion launch).
+  * **modeled HBM bytes/iteration** — ``fused_step_tile_counts``, mirrored
+    from the kernel's index maps (measured accounting, not an estimate).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mbcg
+from repro.core.linear_operator import AddedDiagOperator
+from repro.gp import KernelOperator, RBFKernel
+from repro.kernels.kernel_matmul.kernel_matmul import fused_step_tile_counts
+from .common import emit, timeit
+
+
+def _iter_eqns(jaxpr):
+    """Yield (eqn, is_container) depth-first over a (Closed)Jaxpr,
+    recursing into nested jaxprs (scan/cond/jit bodies) but NOT into the
+    pallas kernel body — a pallas_call is one launch, whatever is inside."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        subs = []
+        if eqn.primitive.name != "pallas_call":
+            for v in eqn.params.values():
+                leaves = v if isinstance(v, (list, tuple)) else [v]
+                for leaf in leaves:
+                    if hasattr(leaf, "eqns") or hasattr(leaf, "jaxpr"):
+                        subs.append(leaf)
+        yield eqn, bool(subs)
+        for s in subs:
+            yield from _iter_eqns(s)
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Number of pallas_call launches in one traced iteration body."""
+    return sum(1 for eqn, _ in _iter_eqns(jaxpr) if eqn.primitive.name == "pallas_call")
+
+
+# layout/metadata ops: no HBM traffic of their own (XLA aliases them or
+# folds them into the consumer) — not state passes
+_NO_TRAFFIC = {"reshape", "squeeze", "expand_dims", "broadcast_in_dim", "copy"}
+
+
+def count_nt_passes(jaxpr, nt: int) -> int:
+    """Number of non-pallas leaf eqns materializing an O(n·t) output — each
+    one is a full HBM round-trip of CG state the fused kernel avoids
+    (container eqns like scan/cond are skipped — their bodies are walked —
+    and so are pure layout ops, which XLA aliases rather than copies)."""
+    count = 0
+    for eqn, is_container in _iter_eqns(jaxpr):
+        if (
+            is_container
+            or eqn.primitive.name == "pallas_call"
+            or eqn.primitive.name in _NO_TRAFFIC
+        ):
+            continue
+        if any(getattr(getattr(v, "aval", None), "size", 0) >= nt for v in eqn.outvars):
+            count += 1
+    return count
+
+
+def _bench_point(rows, n, t, b, iters):
+    X = jax.random.normal(jax.random.PRNGKey(n + t), (n, 3))
+    kern = RBFKernel(lengthscale=jnp.float32(0.6), outputscale=jnp.float32(1.2))
+    op = AddedDiagOperator(KernelOperator(kernel=kern, X=X, mode="pallas"), 0.1)
+    prepared = op.prepare()
+    step = prepared.fused_cg_step_fn()
+    shape = (n, t) if b == 1 else (b, n, t)
+    B = jax.random.normal(jax.random.PRNGKey(1), shape)
+
+    fused_fn = jax.jit(
+        lambda B: mbcg(prepared.matmul, B, max_iters=iters, tol=0.0, fused_step=step).solves
+    )
+    unfused_fn = jax.jit(
+        lambda B: mbcg(prepared.matmul, B, max_iters=iters, tol=0.0).solves
+    )
+    t_fused = timeit(fused_fn, B) / iters
+    t_unfused = timeit(unfused_fn, B) / iters
+
+    # launch accounting from the traced iteration bodies
+    sshape = shape[:-2] + (t,)
+    state = (B, B, B, B, jnp.zeros(sshape), jnp.zeros(sshape), jnp.ones(sshape))
+    fused_jaxpr = jax.make_jaxpr(lambda s: step(*s))(state)
+    pallas_fused = count_pallas_calls(fused_jaxpr)
+    nt_fused = count_nt_passes(fused_jaxpr, n * t)
+
+    def unfused_iter(U, R, D, rz):
+        V = prepared.matmul(D)
+        dv = jnp.sum(D * V, axis=-2)
+        alpha = rz / dv
+        U = U + alpha[..., None, :] * D
+        R = R - alpha[..., None, :] * V
+        rz_new = jnp.sum(R * R, axis=-2)
+        D = R + (rz_new / rz)[..., None, :] * D
+        return U, R, D, rz_new
+
+    un_jaxpr = jax.make_jaxpr(unfused_iter)(B, B, B, jnp.ones(sshape))
+    pallas_unfused = count_pallas_calls(un_jaxpr)
+    nt_unfused = count_nt_passes(un_jaxpr, n * t)
+
+    traffic = fused_step_tile_counts(n, n, b, t=t)
+    emit(
+        f"fused_cg_n{n}_t{t}_b{b}",
+        t_fused,
+        f"unfused={t_unfused*1e6:.0f}us;launches={pallas_fused}"
+        f"vs{pallas_unfused}+{nt_unfused}nt;"
+        f"hbm_ratio={traffic['hbm_bytes_ratio']:.2f}x",
+    )
+    rows.append(
+        {
+            "model": "fused_cg",
+            "n": n,
+            "t": t,
+            "batch": b,
+            "cg_iters": iters,
+            "fused_iter_s": t_fused,
+            "unfused_iter_s": t_unfused,
+            "iter_speedup": t_unfused / t_fused,
+            # measured from the jaxpr of one iteration body:
+            "pallas_calls_per_iter_fused": pallas_fused,
+            "pallas_calls_per_iter_unfused": pallas_unfused,
+            "xla_nt_passes_per_iter_fused": nt_fused,
+            "xla_nt_passes_per_iter_unfused": nt_unfused,
+            "launches_per_iter_fused": pallas_fused + nt_fused,
+            "launches_per_iter_unfused": pallas_unfused + nt_unfused,
+            # measured from the kernel's index maps:
+            "hbm_bytes_per_iter_fused": traffic["fused_hbm_bytes_per_iter"],
+            "hbm_bytes_per_iter_unfused": traffic["unfused_hbm_bytes_per_iter"],
+            "hbm_bytes_ratio": traffic["hbm_bytes_ratio"],
+        }
+    )
+
+
+def run(fast=False):
+    rows = []
+    grid = [(128, 8, 1), (128, 8, 4)] if fast else [(256, 8, 1), (256, 8, 4), (384, 16, 1)]
+    iters = 4 if fast else 8
+    t0 = time.time()
+    for n, t, b in grid:
+        _bench_point(rows, n, t, b, iters)
+    print(f"# fused suite {time.time()-t0:.1f}s", flush=True)
+    return rows

@@ -25,13 +25,14 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated subset: solve_error,speed,mae,preconditioner,"
-        "complexity,serve",
+        "complexity,serve,fused",
     )
     ap.add_argument(
         "--scenario",
         default=None,
         help="alias for --only (e.g. --scenario serve: PosteriorSession "
-        "cached-QPS and append-vs-rebuild rows)",
+        "cached-QPS and append-vs-rebuild rows; --scenario fused: per-"
+        "iteration time, launch count and HBM bytes of the fused CG step)",
     )
     ap.add_argument(
         "--fast",
@@ -50,7 +51,7 @@ def main() -> None:
     args = ap.parse_args()
     only = args.only or args.scenario
 
-    from . import complexity, mae, preconditioner, serve, solve_error, speed
+    from . import complexity, fused, mae, preconditioner, serve, solve_error, speed
 
     suites = {
         "solve_error": solve_error.run,  # paper Fig 1
@@ -59,6 +60,7 @@ def main() -> None:
         "speed": speed.run,  # paper Fig 2 + batched/cache levers
         "mae": mae.run,  # paper Fig 3
         "serve": serve.run,  # PosteriorSession QPS + append-vs-rebuild
+        "fused": fused.run,  # fused CG step: launches/iter + HBM bytes/iter
     }
     wanted = only.split(",") if only else list(suites)
 
@@ -69,7 +71,7 @@ def main() -> None:
         print(f"# --- {name} ---", flush=True)
         if name == "speed":
             speed_rows += suites[name](fast=args.fast, dtype=args.dtype)
-        elif name == "serve":
+        elif name in ("serve", "fused"):
             speed_rows += suites[name](fast=args.fast)
         else:
             suites[name]()

@@ -20,7 +20,7 @@ from .linear_operator import (
     InterpolatedOperator,
     CallableOperator,
 )
-from .mbcg import mbcg, tridiag_matrices, MBCGResult
+from .mbcg import mbcg, tridiag_matrices, xla_cg_step, CGStepFn, MBCGResult
 from .precision import (
     as_jnp_dtype,
     normalize_compute_dtype,

@@ -143,6 +143,93 @@ class ShardedKernelOperator(LinearOperator):
             self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
+    def fused_cg_step_fn(self, sigma2=None):
+        """Sharded fused CG step: ONE shard_map region per iteration.
+
+        Each device applies the pending (α, β, γ) updates to its own row
+        band, computes its V band through the chunked local matmul of
+        K̂ = K + σ²I, and contributes partial dᵀV/rᵀr/rᵀV/vᵀV reductions
+        that are ``psum``'d — so the unfused path's replicated XLA passes
+        over the full (n, t) state (and their per-pass collectives under
+        pjit) collapse into one region with a 3-array gather + one O(t)
+        psum."""
+        from repro.distributed.sharding import compat_shard_map, mesh_axis_sizes
+
+        s2 = jnp.float32(0.0) if sigma2 is None else jnp.asarray(sigma2)
+        if s2.ndim:
+            return None
+        mesh = self.mesh
+        if mesh is None:
+            from repro.distributed.sharding import current_mesh
+
+            mesh = current_mesh()
+        if mesh is None:
+            return None
+        axes, chunk = self.data_axes, self.chunk
+        sizes = mesh_axis_sizes(mesh)
+        shards = 1
+        for a in axes:
+            shards *= sizes[a]
+        n = self.X.shape[0]
+        if n % shards != 0:
+            return None  # uneven row bands: keep the unfused fallback
+        kern_leaves, kern_def = jax.tree_util.tree_flatten(self.kernel)
+
+        from .mbcg import xla_cg_step
+        from .precision import is_reduced
+
+        reduced = is_reduced(self.compute_dtype)
+
+        def body(kern_leaves, X_full, s2, U, R, D, V, alpha, beta, gamma):
+            kernel = jax.tree_util.tree_unflatten(kern_def, kern_leaves)
+
+            def local_mm(D_loc):
+                D_full = jax.lax.all_gather(D_loc, axes, axis=D_loc.ndim - 2, tiled=True)
+                Xf = X_full
+                if reduced:
+                    # bf16 MXU tiles with f32 accumulation; the CG state and
+                    # its gather stay f32 so the recurrence never loses bits
+                    Xf = Xf.astype(jnp.bfloat16)
+                    D_full = D_full.astype(jnp.bfloat16)
+                idx = jax.lax.axis_index(axes)
+                n_loc = n // shards
+                X_loc = jax.lax.dynamic_slice_in_dim(Xf, idx * n_loc, n_loc, axis=0)
+                return _local_block_matmul(kernel, X_loc, Xf, D_full, chunk) + s2 * D_loc
+
+            # the canonical CGStepFn recurrence on this device's row band —
+            # only the reductions need the cross-band psum
+            U, R, D, V, red = xla_cg_step(local_mm)(U, R, D, V, alpha, beta, gamma)
+            return U, R, D, V, jax.lax.psum(red, axes)
+
+        def step(U, R, D, V, alpha, beta, gamma):
+            state_spec = P(*([None] * (U.ndim - 2)), axes, None)
+            rep = P(*([None] * (U.ndim - 1)))
+            return compat_shard_map(
+                body,
+                mesh,
+                in_specs=(
+                    tuple(P() for _ in kern_leaves),
+                    P(None, None),
+                    P(),
+                    state_spec,
+                    state_spec,
+                    state_spec,
+                    state_spec,
+                    rep,
+                    rep,
+                    rep,
+                ),
+                out_specs=(
+                    state_spec,
+                    state_spec,
+                    state_spec,
+                    state_spec,
+                    (rep, rep, rep, rep),
+                ),
+            )(tuple(kern_leaves), self.X, s2, U, R, D, V, alpha, beta, gamma)
+
+        return step
+
 
 def replicated(x):
     """Convenience NamedSharding-free replication constraint."""

@@ -46,7 +46,7 @@ import numpy as np
 from .linear_operator import LinearOperator
 from .mbcg import mbcg, tridiag_matrices
 from .precision import precision_compute_dtype, validate_precision
-from .preconditioner import build_preconditioner
+from .preconditioner import IdentityPreconditioner, build_preconditioner
 from .slq import logdet_from_mbcg, slq_quadrature
 
 
@@ -80,14 +80,43 @@ class BBMMSettings:
     cg_refresh_max_period: int = 16  # cap for the adaptive stretch
     # (0 → uncapped, i.e. max_cg_iters; positive values are floored at
     # cg_refresh_every)
+    fuse_cg: bool = False  # run each mBCG iteration as ONE fused kernel
+    # launch when the (prepared) operator advertises a CGStepFn
+    # (LinearOperator.fused_cg_step_fn — the Pallas kernel-matmul family
+    # does): state updates + K̂·D + the per-column reductions in one grid
+    # sweep, leaving only O(t) scalar arithmetic in XLA.  Operators without
+    # the capability keep the unfused loop (transparent fallback), but a
+    # non-identity preconditioner cannot fuse: fuse_cg with precond_rank > 0
+    # raises in mbcg rather than silently falling back — set precond_rank=0.
+    # Composes with precision="mixed": the fused launches run bf16 MXU
+    # stages, the periodic residual refresh stays an f32 matmul.
+    max_basis_columns: int = 0  # serving-memory budget for the Krylov
+    # variance cache under streaming appends (extend_posterior_cache): once
+    # the recycled basis would exceed this many columns it is compacted by
+    # Rayleigh–Ritz truncation — keep the top-m eigendirections of the
+    # small Gram basisᵀK̂basis (still a subspace ⇒ served variances stay
+    # conservative; only tightness degrades).  0 = unbounded (the
+    # max_staleness rebuild policy is then the only growth bound).
+
+
+def _fused_step_of(op: LinearOperator, settings: BBMMSettings):
+    """The operator's CGStepFn when ``fuse_cg`` asks for it and the operator
+    advertises one; None otherwise (mbcg then runs the unfused loop)."""
+    if not settings.fuse_cg:
+        return None
+    fn = getattr(op, "fused_cg_step_fn", None)
+    return fn() if fn is not None else None
 
 
 def _solver_matmuls(op: LinearOperator, settings: BBMMSettings):
     """The precision-policy split of one operator into the mBCG matmuls:
-    (hot-loop matmul, refresh kwargs).  "highest" → one f32 matmul, no
-    refresh; "mixed" → a bf16-tile matmul for the loop (prepared AFTER the
-    dtype switch so the pre-scaled X is stored half-width) plus the f32
-    matmul of the same operator for the periodic residual refresh."""
+    (hot-loop matmul, refresh kwargs, fused CG step or None).  "highest" →
+    one f32 matmul, no refresh; "mixed" → a bf16-tile matmul for the loop
+    (prepared AFTER the dtype switch so the pre-scaled X is stored
+    half-width) plus the f32 matmul of the same operator for the periodic
+    residual refresh.  Under ``fuse_cg`` the CGStepFn comes from the SAME
+    operator as the hot-loop matmul (so mixed mode fuses bf16 launches
+    while the refresh matmul stays f32)."""
     validate_precision(settings.precision)
     solver = op.prepare()
     if settings.precision == "mixed":
@@ -107,13 +136,21 @@ def _solver_matmuls(op: LinearOperator, settings: BBMMSettings):
         cap = settings.cg_refresh_max_period
         if cap > 0:
             cap = max(cap, settings.cg_refresh_every)
-        return mixed.matmul, {
+        refresh = {
             "refresh_every": settings.cg_refresh_every,
             "refresh_matmul": solver.matmul,
             "refresh_adaptive": settings.cg_refresh_adaptive,
             "refresh_max_period": cap,
         }
-    return solver.matmul, {}
+        return mixed.matmul, refresh, _fused_step_of(mixed, settings)
+    return solver.matmul, {}, _fused_step_of(solver, settings)
+
+
+def _precond_solve_arg(precond):
+    """mbcg's ``precond_solve`` for a built preconditioner: None for the
+    identity (mbcg's native no-preconditioner path — and the form the fused
+    CG step composes with), the Woodbury solve otherwise."""
+    return None if isinstance(precond, IdentityPreconditioner) else precond.solve
 
 
 class InferenceState(NamedTuple):
@@ -183,14 +220,15 @@ def _run_engine(
     Z = jnp.broadcast_to(Z, (*batch_shape, n, settings.num_probes))
     B = jnp.concatenate([y[..., None], Z], axis=-1)
 
-    matmul, refresh_kwargs = _solver_matmuls(op, settings)
+    matmul, refresh_kwargs, fused_step = _solver_matmuls(op, settings)
     res = mbcg(
         matmul,
         B,
-        precond_solve=precond.solve,
+        precond_solve=_precond_solve_arg(precond),
         max_iters=settings.max_cg_iters,
         tol=settings.cg_tol,
         return_basis=return_basis,
+        fused_step=fused_step,
         **refresh_kwargs,
     )
     probe_solves = res.solves[..., 1:]
@@ -342,6 +380,26 @@ def build_posterior_cache(
     )
 
 
+def _compact_basis(basis: jax.Array, gram: jax.Array, max_m: int):
+    """Rayleigh–Ritz truncation of a Krylov variance cache to ``max_m``
+    columns: diagonalize the small Gram G = QᵀK̂Q = W Λ Wᵀ, keep the top-m
+    eigendirections, rotate the basis into them.
+
+    The rotated basis Q·W_m stays orthonormal (orthonormal basis × slim
+    orthonormal W), its Gram is exactly diag(Λ_m), and its span is a
+    SUBSPACE of the original — so the Galerkin inverse-quad can only
+    shrink and the served posterior variance stays conservative at any
+    budget; only tightness is traded for the fixed memory."""
+    m = gram.shape[0]
+    lam, W = jnp.linalg.eigh(gram)  # ascending
+    keep = W[:, m - max_m:]
+    lam = lam[m - max_m:]
+    # eigh of the jittered PSD Gram: floor tiny/negative Ritz values at the
+    # same relative jitter scale the full build uses
+    lam = jnp.maximum(lam, 1e-6 * jnp.trace(gram) / m)
+    return basis @ keep, jnp.diag(jnp.sqrt(lam))
+
+
 def extend_posterior_cache(
     op: LinearOperator,
     y: jax.Array,
@@ -393,7 +451,7 @@ def extend_posterior_cache(
     precond = build_preconditioner(
         op, settings.precond_rank, jitter=settings.precond_jitter
     )
-    matmul, refresh_kwargs = _solver_matmuls(op, settings)
+    matmul, refresh_kwargs, fused_step = _solver_matmuls(op, settings)
     solver = op.prepare()
 
     u0 = jnp.pad(cache.alpha, (0, k))
@@ -407,10 +465,11 @@ def extend_posterior_cache(
     res = mbcg(
         matmul,
         r0[:, None],
-        precond_solve=precond.solve,
+        precond_solve=_precond_solve_arg(precond),
         max_iters=settings.max_cg_iters,
         tol=tol_eff,
         return_basis=variance_cache,
+        fused_step=fused_step,
         **refresh_kwargs,
     )
     alpha = u0 + res.solves[:, 0]
@@ -451,6 +510,16 @@ def extend_posterior_cache(
             )
             basis = jnp.concatenate([B_old, N], axis=-1)
             gram_chol = jnp.linalg.cholesky(gram)
+        # Krylov basis compaction: under a serving memory budget the
+        # recycled basis must stop growing by ~p+1 columns per append —
+        # Rayleigh–Ritz truncate to the top-m eigendirections of the small
+        # Gram (conservative for any budget; see _compact_basis)
+        max_m = settings.max_basis_columns
+        if max_m and basis.shape[1] > max_m:
+            gram_full = gram_chol @ gram_chol.T
+            basis, gram_chol = _compact_basis(
+                basis.astype(jnp.float32), gram_full.astype(jnp.float32), max_m
+            )
 
     pad_rows = ((0, k), (0, 0))
     return PosteriorCache(
@@ -509,13 +578,14 @@ def solve(op, B, settings: BBMMSettings = BBMMSettings(), *, precond=None):
         precond = build_preconditioner(
             op, settings.precond_rank, jitter=settings.precond_jitter
         )
-    matmul, refresh_kwargs = _solver_matmuls(op, settings)
+    matmul, refresh_kwargs, fused_step = _solver_matmuls(op, settings)
     res = mbcg(
         matmul,
         B,
-        precond_solve=precond.solve,
+        precond_solve=_precond_solve_arg(precond),
         max_iters=settings.max_cg_iters,
         tol=settings.cg_tol,
+        fused_step=fused_step,
         **refresh_kwargs,
     )
     return res.solves

@@ -100,6 +100,22 @@ class LinearOperator:
         Wrappers recurse into their children."""
         return self
 
+    # -- fused CG capability ----------------------------------------------
+    def fused_cg_step_fn(self, sigma2=None):
+        """Return a :data:`repro.core.mbcg.CGStepFn` executing one whole CG
+        iteration of K̂ = self + σ²I as a single fused launch, or None.
+
+        Default: None — generic operators keep the *unfused* mBCG loop (the
+        engine falls back transparently).  The Pallas kernel-matmul family
+        overrides this: their kernels apply the pending CG state updates,
+        compute V = K̂·D and accumulate the per-column reductions inside one
+        grid sweep (see ``repro.kernels.kernel_matmul``).  ``sigma2`` is the
+        added diagonal folded into the kernel tile —
+        :class:`AddedDiagOperator` threads its noise through here, which is
+        why the capability takes σ² instead of requiring a wrapper-aware
+        kernel."""
+        return None
+
     # -- precision policy --------------------------------------------------
     def with_compute_dtype(self, compute_dtype) -> "LinearOperator":
         """Return an equivalent operator whose matmul runs its heavy
@@ -313,6 +329,16 @@ class AddedDiagOperator(LinearOperator):
     def with_compute_dtype(self, compute_dtype):
         # σ²·M stays f32 — only the base kernel matmul takes reduced precision
         return AddedDiagOperator(self.base.with_compute_dtype(compute_dtype), self.sigma2)
+
+    def fused_cg_step_fn(self, sigma2=None):
+        # fold this diagonal into the base kernel's σ² tile term (the Pallas
+        # kernel emits it at global row == col, so the fused step IS K̂·D)
+        s2 = jnp.asarray(self.sigma2)
+        if s2.ndim:
+            return None  # batched noise: no scalar σ² tile — unfused fallback
+        if sigma2 is not None:
+            s2 = s2 + sigma2
+        return self.base.fused_cg_step_fn(sigma2=s2)
 
 
 @_register

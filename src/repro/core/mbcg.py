@@ -72,6 +72,41 @@ Note on Algorithm 2 as printed in the paper: its β update uses
 (z_j∘z_j)/(z_{j-1}∘z_{j-1}); the textbook PCG recurrence (and GPyTorch's
 implementation) uses r·z in both places.  We implement the standard PCG
 update — it is the one for which Observation 3 (tridiag recovery) holds.
+
+**Fused CG step** (``fused_step``): operators that can execute a whole CG
+iteration inside their kernel (the Pallas kernel-matmul family — see
+``repro.kernels.kernel_matmul``) advertise a :data:`CGStepFn` via
+``LinearOperator.fused_cg_step_fn()``.  When one is passed, the loop body
+becomes ONE fused launch per iteration: the step applies the pending
+per-column (α, β, γ) state updates, computes V = K̂·D and returns the
+four per-column reductions
+
+    dᵀV  (α denominator),   rᵀr  (rz, measured exactly),
+    rᵀV, vᵀV               (the pipelined rz recurrence
+                            rz' = rz − 2α·rᵀV + α²·vᵀV)
+
+so only O(t) scalar arithmetic — α, β, the convergence masks — remains in
+XLA between launches.  Because β for the *next* direction must be formed
+before the next launch measures the next rᵀr, it uses the pipelined-CG
+recurrence (Ghysels & Vanroose 2014) — the one place the fused path's
+arithmetic differs from ``step_plain``; α always uses the exactly measured
+rᵀr, so the recurrence error never compounds into the iterates.  The
+updates land one launch later than in ``step_plain`` (a pending (α, D, V)
+pair is flushed in O(n·t) XLA once, after the loop), which is what lets a
+single grid sweep both consume D and produce the next state.  Convergence
+masking keeps ``step_plain`` semantics exactly: frozen columns get α = 0
+(their U/R freeze bitwise; their D keeps evolving harmlessly — every
+consumer of D is masked through α/β).
+
+The fused path supports only the identity preconditioner: a
+``precond_solve`` cannot run inside the kernel epilogue, so combining the
+two raises immediately rather than silently falling back (set
+``precond_rank=0``, or drop ``fuse_cg``).  It composes with the f32
+residual refresh: refresh steps flush the pending update, measure the
+true residual through ``refresh_matmul`` and re-enter the fused loop with
+a (α=0, β=1, γ=0) no-op prologue — all the ``step_refresh`` guards
+(curvature, momentum keep/restart, best-iterate snapshot, adaptive
+period) apply unchanged.
 """
 
 from __future__ import annotations
@@ -101,9 +136,203 @@ class MBCGResult(NamedTuple):
 
 # Adaptive refresh: stretch the period only while the recursive residual is
 # tracking the true one this tightly (max per-column relative drift).  The
-# momentum guard fires at 0.25; stretching stops well before that so the
-# geometric schedule never rides the edge of the honesty gate.
+# momentum guard fires at REFRESH_MOMENTUM_GATE; stretching stops well
+# before that so the geometric schedule never rides the edge of the
+# honesty gate.
 REFRESH_DRIFT_GATE = 0.1
+
+# Momentum keep/restart threshold at a refresh: the CG direction is kept
+# (β against the refreshed residual) while the recursive residual's
+# relative drift from the true one stays below this; past it the direction
+# restarts from the (preconditioned) true residual.  Shared by the unfused
+# and fused refresh steps — they must apply the same policy.
+REFRESH_MOMENTUM_GATE = 0.25
+
+#: CGStepFn — the pluggable fused-iteration seam.  Signature::
+#:
+#:     step(U, R, D, V, alpha, beta, gamma)
+#:         -> (U', R', D', V', (dv, rr, rv, vv))
+#:
+#: with state of shape (..., n, t), per-column scalars (..., t).  The step
+#: must apply the pending updates  U += α∘D, R −= α∘V, D = γ∘R + β∘D  and
+#: then compute V' = K̂ @ D' plus the four reductions dᵀV, rᵀr, rᵀV, vᵀV of
+#: the UPDATED state.  Operators advertise one via
+#: ``LinearOperator.fused_cg_step_fn()``; :func:`xla_cg_step` builds the
+#: pure-XLA reference from any matmul (the semantics every fused kernel
+#: must match — and the testing oracle for them).
+CGStepFn = Callable
+
+
+def xla_cg_step(matmul: Callable[[jax.Array], jax.Array]) -> CGStepFn:
+    """Reference :data:`CGStepFn` from a plain blackbox matmul.
+
+    Pure XLA — no launch/HBM savings, but bit-for-bit the state recurrence
+    the fused Pallas kernel implements, so tests (and operators without a
+    fused kernel that still want the pipelined recurrence) can run the
+    fused mBCG loop anywhere."""
+
+    def step(U, R, D, V, alpha, beta, gamma):
+        a = alpha[..., None, :]
+        U = U + a * D
+        R = R - a * V
+        D = gamma[..., None, :] * R + beta[..., None, :] * D
+        V = matmul(D).astype(R.dtype)
+        dv = jnp.sum(D * V, axis=-2)
+        rr = jnp.sum(R * R, axis=-2)
+        rv = jnp.sum(R * V, axis=-2)
+        vv = jnp.sum(V * V, axis=-2)
+        return U, R, D, V, (dv, rr, rv, vv)
+
+    return step
+
+
+def _fused_loop(
+    fused_step: CGStepFn,
+    Bc: jax.Array,
+    b_norm: jax.Array,
+    *,
+    tol: float,
+    max_iters: int,
+    return_basis: bool,
+    refresh_every: int,
+    refresh_matmul,
+    refresh_adaptive: bool,
+    refresh_max_period: int,
+):
+    """The fused-launch mBCG loop: ONE CGStepFn call per iteration, O(t)
+    scalar arithmetic in XLA between launches.
+
+    State convention: the (α, β, γ) computed after launch k are *pending* —
+    launch k+1's prologue applies them before its matmul, so U/R in the
+    carry always trail the scalars by one rank-1 update.  The pending pair
+    is flushed once, after the loop.  α uses the exactly measured rᵀr each
+    launch; only β rides the pipelined recurrence rz' = rz − 2α·rᵀV + α²·vᵀV
+    (the next launch re-measures rᵀr, so the recurrence never compounds).
+
+    Returns ``(U_final, per_step_outs, res_final, num_refreshes)`` with the
+    same per-step output convention as the unfused scan bodies."""
+    compute_dtype = Bc.dtype
+    t = Bc.shape[-1]
+    zt = jnp.zeros(Bc.shape[:-2] + (t,), compute_dtype)
+    ones_t = jnp.ones_like(zt)
+    U0 = jnp.zeros_like(Bc)
+    V0 = jnp.zeros_like(Bc)
+    # D0 = 0 is arbitrary: the first launch runs with (α=0, β=0, γ=1), whose
+    # prologue produces U=0, R=B, D=R — the textbook CG start.
+    core0 = (U0, Bc, jnp.zeros_like(Bc), V0, zt, zt, ones_t)
+
+    def fused_plain(carry, it):
+        U, R, D, V, alpha, beta, gamma, active = carry
+        U, R, D, V, (dv, rr, rv, vv) = fused_step(U, R, D, V, alpha, beta, gamma)
+        rz = jnp.maximum(rr, 0.0)  # identity precond: rᵀz = ‖r‖², measured
+        res = jnp.sqrt(rz) / b_norm
+        active = active & (res > tol)
+        alpha = jnp.where(active, _safe_div(rz, dv), 0.0)
+        rz_next = jnp.maximum(rz - 2.0 * alpha * rv + alpha * alpha * vv, 0.0)
+        beta = jnp.where(active, _safe_div(rz_next, rz), 0.0)
+        gamma = jnp.ones_like(beta)
+        out = (alpha, beta, active)
+        if return_basis:
+            # preconditioned Lanczos vector (identity precond: z_j = r_j)
+            out = out + (
+                jnp.where(active[..., None, :], R * _safe_rsqrt(rz)[..., None, :], 0.0),
+            )
+        return (U, R, D, V, alpha, beta, gamma, active), out
+
+    def fused_refresh(carry, it):
+        (U, R, D, V, alpha, beta, gamma,
+         U_best, R_best, best_res, period, since, nref) = carry
+        U, Rk, D, V, (dv, rr, rv, vv) = fused_step(U, R, D, V, alpha, beta, gamma)
+        rz = jnp.maximum(rr, 0.0)
+        res = jnp.sqrt(rz) / b_norm
+        # masking re-derived from the measured ‖r‖ every launch (columns may
+        # REactivate after a refresh exposed a lying recursive residual)
+        active = jnp.minimum(res, best_res) > tol
+        # curvature guard: reduced-precision noise can round dᵀK̂d ≤ 0
+        alpha = jnp.where((dv > 0) & active, _safe_div(rz, dv), 0.0)
+        do_refresh = since + 1 >= period
+
+        def _advance(U, Rk, D, V):
+            rz_next = jnp.maximum(rz - 2.0 * alpha * rv + alpha * alpha * vv, 0.0)
+            beta_n = jnp.where(active, _safe_div(rz_next, rz), 0.0)
+            return (U, Rk, D, alpha, beta_n, jnp.ones_like(beta_n), beta_n,
+                    U_best, R_best, best_res, jnp.float32(0.0))
+
+        def _refresh(U, Rk, D, V):
+            # flush the pending update in f32 XLA (refresh steps only), then
+            # the same guards as step_refresh: NaN hygiene, best-iterate
+            # snapshot, non-finite rescue, drift-gated momentum keep/restart
+            Uf = U + alpha[..., None, :] * D
+            Rrec = Rk - alpha[..., None, :] * V
+            Rf = Bc - refresh_matmul(Uf).astype(compute_dtype)
+            res_f = jnp.linalg.norm(Rf, axis=-2) / b_norm
+            res_f = jnp.where(jnp.isfinite(res_f), res_f, jnp.inf)
+            better = res_f < best_res
+            Ub = jnp.where(better[..., None, :], Uf, U_best)
+            Rb = jnp.where(better[..., None, :], Rf, R_best)
+            rb = jnp.minimum(res_f, best_res)
+            pull = jnp.isinf(res_f)
+            Uc = jnp.where(pull[..., None, :], Ub, Uf)
+            Rf = jnp.where(pull[..., None, :], Rb, Rf)
+            rzf = jnp.sum(Rf * Rf, axis=-2)
+            drift = jnp.linalg.norm(Rrec - Rf, axis=-2) / jnp.maximum(
+                jnp.linalg.norm(Rf, axis=-2), 1e-30
+            )
+            beta_f = jnp.where(drift < REFRESH_MOMENTUM_GATE, _safe_div(rzf, rz), 0.0)
+            Df = Rf + beta_f[..., None, :] * D  # Zf = Rf (identity precond)
+            zero = jnp.zeros_like(alpha)
+            # the state is now fully updated: the next launch must run a
+            # no-op prologue, encoded as (α=0, β=1, γ=0) → D_new = D
+            return (Uc, Rf, Df, zero, jnp.ones_like(zero), zero, beta_f,
+                    Ub, Rb, rb, jnp.max(drift))
+
+        (U, Rn, Dn, alpha_n, beta_n, gamma_n, beta_emit,
+         U_best, R_best, best_res, drift_max) = jax.lax.cond(
+            do_refresh, _refresh, _advance, U, Rk, D, V
+        )
+        since = jnp.where(do_refresh, 0, since + 1)
+        nref = nref + do_refresh.astype(jnp.int32)
+        if refresh_adaptive:
+            cap = refresh_max_period if refresh_max_period > 0 else max_iters
+            stretched = jnp.minimum(period * 2, cap)
+            updated = jnp.where(
+                drift_max < REFRESH_DRIFT_GATE, stretched, refresh_every
+            )
+            period = jnp.where(do_refresh, updated, period)
+        out = (alpha, beta_emit, active)
+        if return_basis:
+            out = out + (
+                jnp.where(active[..., None, :], Rk * _safe_rsqrt(rz)[..., None, :], 0.0),
+            )
+        return (U, Rn, Dn, V, alpha_n, beta_n, gamma_n,
+                U_best, R_best, best_res, period, since, nref), out
+
+    if refresh_every:
+        res0 = jnp.linalg.norm(Bc, axis=-2) / b_norm
+        carry0 = core0 + (U0, Bc, res0,
+                          jnp.int32(refresh_every), jnp.int32(0), jnp.int32(0))
+        final, outs = jax.lax.scan(fused_refresh, carry0, jnp.arange(max_iters))
+        U, _, D, V, alpha_c = final[0], final[1], final[2], final[3], final[4]
+        # flush the pending update (no-op when the last step refreshed), then
+        # one last f32 refresh so post-final-cycle progress counts
+        U = U + alpha_c[..., None, :] * D
+        U_best, best_res = final[7], final[9]
+        res_t = jnp.linalg.norm(
+            Bc - refresh_matmul(U).astype(compute_dtype), axis=-2
+        ) / b_norm
+        res_t = jnp.where(jnp.isfinite(res_t), res_t, jnp.inf)
+        U = jnp.where((res_t < best_res)[..., None, :], U, U_best)
+        return U, outs, jnp.minimum(res_t, best_res), final[12]
+
+    active0 = jnp.ones_like(zt, dtype=bool)
+    carry0 = core0 + (active0,)
+    final, outs = jax.lax.scan(fused_plain, carry0, jnp.arange(max_iters))
+    U, R, D, V, alpha_c = final[0], final[1], final[2], final[3], final[4]
+    a = alpha_c[..., None, :]
+    U = U + a * D
+    R = R - a * V
+    res_final = jnp.linalg.norm(R, axis=-2) / b_norm
+    return U, outs, res_final, None
 
 
 def _safe_div(num, den):
@@ -127,6 +356,7 @@ def _safe_rsqrt(x):
         "refresh_matmul",
         "refresh_adaptive",
         "refresh_max_period",
+        "fused_step",
     ),
 )
 def mbcg(
@@ -141,6 +371,7 @@ def mbcg(
     refresh_matmul: Callable[[jax.Array], jax.Array] | None = None,
     refresh_adaptive: bool = False,
     refresh_max_period: int = 0,
+    fused_step: CGStepFn | None = None,
 ) -> MBCGResult:
     """Solve K̂⁻¹B for all columns (and all leading batch dims) of B at once.
 
@@ -173,7 +404,20 @@ def mbcg(
         FLOPs the static schedule burns on well-conditioned solves.
       refresh_max_period: cap for the adaptive stretch (0 → ``max_iters``,
         i.e. effectively uncapped).
+      fused_step: a :data:`CGStepFn` executing one whole CG iteration as a
+        single fused launch (state updates + K̂·D + the four per-column
+        reductions) — see the module docstring.  Only the identity
+        preconditioner composes with it; passing ``precond_solve`` too is
+        an error, never a silent fallback.  Obtained from
+        ``LinearOperator.fused_cg_step_fn()`` or :func:`xla_cg_step`.
     """
+    if fused_step is not None and precond_solve is not None:
+        raise ValueError(
+            "mbcg: fused_step cannot run a precond_solve inside the fused "
+            "kernel iteration — the fused CG path supports only the identity "
+            "preconditioner.  Set precond_rank=0 (BBMMSettings) to drop the "
+            "pivoted-Cholesky preconditioner, or disable fuse_cg to keep it."
+        )
     if precond_solve is None:
         precond_solve = lambda R: R
     if refresh_matmul is None:
@@ -189,6 +433,40 @@ def mbcg(
 
     b_norm = jnp.linalg.norm(Bc, axis=-2)  # (..., t)
     b_norm = jnp.where(b_norm == 0, 1.0, b_norm)
+
+    if fused_step is not None:
+        U, outs, res_final, num_refreshes = _fused_loop(
+            fused_step,
+            Bc,
+            b_norm,
+            tol=tol,
+            max_iters=max_iters,
+            return_basis=return_basis,
+            refresh_every=refresh_every,
+            refresh_matmul=refresh_matmul,
+            refresh_adaptive=refresh_adaptive,
+            refresh_max_period=refresh_max_period,
+        )
+        alphas, betas, actives = outs[:3]
+        num_iters = jnp.sum(actives, axis=0)
+        solves = U.astype(B.dtype)
+        basis = None
+        if return_basis:
+            basis = jnp.moveaxis(outs[3], 0, -1)  # (..., n, t, p)
+        if squeeze:
+            solves = solves[..., 0]
+            if basis is not None:
+                basis = basis[..., 0, :]
+        return MBCGResult(
+            solves=solves,
+            tridiag_alpha=jnp.moveaxis(alphas, 0, -1),
+            tridiag_beta=jnp.moveaxis(betas, 0, -1),
+            active_steps=jnp.moveaxis(actives, 0, -1),
+            num_iters=num_iters,
+            residual_norm=res_final,
+            basis=basis,
+            num_refreshes=num_refreshes,
+        )
 
     U0 = jnp.zeros_like(Bc)
     R0 = Bc  # r = b - K u, u0 = 0
@@ -279,7 +557,7 @@ def mbcg(
             drift = jnp.linalg.norm(Rrec - Rf, axis=-2) / jnp.maximum(
                 jnp.linalg.norm(Rf, axis=-2), 1e-30
             )
-            beta_f = jnp.where(drift < 0.25, _safe_div(rzf, rz), 0.0)
+            beta_f = jnp.where(drift < REFRESH_MOMENTUM_GATE, _safe_div(rzf, rz), 0.0)
             Df = Zf + beta_f[..., None, :] * D
             return (Uc, Rf, Zf, Df, rzf, Ub, Rb, rb, beta_f, jnp.max(drift))
 

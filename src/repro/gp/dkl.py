@@ -57,12 +57,18 @@ class DKLExactGP(KrylovCachePredictor):
     # forward pass itself stays f32).  None follows settings.precision; an
     # explicit value overrides it unconditionally.
     precision: str | None = None
+    # fused-CG knob: the deep kernel is non-stationary, so the Pallas fused
+    # step does not apply to DKL's operator — True falls back to the
+    # unfused loop.  None follows ``settings.fuse_cg``.
+    fuse_cg: bool | None = None
 
     def __post_init__(self):
         if self.precision is not None:
             self.settings = dataclasses.replace(
                 self.settings, precision=self.precision
             )
+        if self.fuse_cg is not None:
+            self.settings = dataclasses.replace(self.settings, fuse_cg=self.fuse_cg)
 
     # -- GPModel protocol: inputs / parameterization --------------------------
     def prepare_inputs(self, X):

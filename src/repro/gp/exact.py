@@ -64,12 +64,20 @@ class ExactGP(KrylovCachePredictor):
     # does switch a mixed model back.  ``settings.precision`` is what the
     # engine reads either way.
     precision: str | None = None
+    # fused-CG knob: True runs each mBCG iteration as ONE fused kernel
+    # launch when the operator advertises it (mode="pallas"/"pallas_sharded"
+    # — dense/blocked fall back to the unfused loop).  Requires
+    # precond_rank=0 (the pivoted-Cholesky solve cannot fuse; mbcg raises).
+    # None follows ``settings.fuse_cg``; an explicit value wins.
+    fuse_cg: bool | None = None
 
     def __post_init__(self):
         if self.precision is not None:
             self.settings = dataclasses.replace(
                 self.settings, precision=self.precision
             )
+        if self.fuse_cg is not None:
+            self.settings = dataclasses.replace(self.settings, fuse_cg=self.fuse_cg)
 
     # -- GPModel protocol: inputs / parameterization --------------------------
     def prepare_inputs(self, X):

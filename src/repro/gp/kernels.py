@@ -213,6 +213,14 @@ class KernelOperator(LinearOperator):
             self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
+    def fused_cg_step_fn(self, sigma2=None):
+        """Fused CG capability: pallas modes delegate to their prepared form
+        (the engine prepares before the loop anyway); dense/blocked keep the
+        unfused fallback."""
+        if self.mode not in ("pallas", "pallas_sharded"):
+            return None
+        return self.prepare().fused_cg_step_fn(sigma2=sigma2)
+
     def _blocked_matmul(self, M):
         n = self.X.shape[0]
         b = min(self.block_size, n)
@@ -279,6 +287,26 @@ class PreparedPallasKernelOperator(LinearOperator):
             self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
+    def fused_cg_step_fn(self, sigma2=None):
+        """One-launch CG iteration: V = (K+σ²I)·D plus the state updates and
+        the dᵀV/rᵀr/rᵀV/vᵀV reductions, all inside the Pallas sweep (see
+        ``repro.kernels.kernel_matmul.ops.fused_cg_step_prescaled``)."""
+        from repro.kernels.kernel_matmul.ops import fused_cg_step_prescaled
+
+        s2 = jnp.float32(0.0) if sigma2 is None else jnp.asarray(sigma2)
+        if s2.ndim:
+            return None
+        Xs, outputscale = self.Xs, self.kernel.outputscale
+        kernel_type, compute_dtype = self.kernel_type, self.compute_dtype
+
+        def step(U, R, D, V, alpha, beta, gamma):
+            return fused_cg_step_prescaled(
+                Xs, U, R, D, V, alpha, beta, gamma, outputscale, s2,
+                kernel_type=kernel_type, compute_dtype=compute_dtype,
+            )
+
+        return step
+
     def row(self, i):
         return self.kernel(self.X[i][None, :], self.X)[0]
 
@@ -327,6 +355,27 @@ class PreparedShardedPallasKernelOperator(LinearOperator):
         return dataclasses.replace(
             self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
+
+    def fused_cg_step_fn(self, sigma2=None):
+        """Row-partitioned one-launch CG iteration: each device fuses its row
+        band's updates + matmul + partial reductions, psum'd to O(t) — see
+        ``ops.sharded_fused_cg_step_prescaled``."""
+        from repro.kernels.kernel_matmul.ops import sharded_fused_cg_step_prescaled
+
+        s2 = jnp.float32(0.0) if sigma2 is None else jnp.asarray(sigma2)
+        if s2.ndim:
+            return None
+        Xs, outputscale = self.Xs, self.kernel.outputscale
+        kernel_type, compute_dtype = self.kernel_type, self.compute_dtype
+        mesh, axes = self.mesh, self.data_axes
+
+        def step(U, R, D, V, alpha, beta, gamma):
+            return sharded_fused_cg_step_prescaled(
+                Xs, U, R, D, V, alpha, beta, gamma, outputscale, s2, mesh, axes,
+                kernel_type=kernel_type, compute_dtype=compute_dtype,
+            )
+
+        return step
 
     def row(self, i):
         return self.kernel(self.X[i][None, :], self.X)[0]

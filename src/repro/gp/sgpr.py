@@ -50,12 +50,19 @@ class SGPR(WoodburyCachePredictor):
     # repro.core.precision.  None follows settings.precision; an explicit
     # value overrides it unconditionally.
     precision: str | None = None
+    # fused-CG knob (API uniformity with ExactGP): the low-rank-root
+    # operator has no fused kernel, so True merely asks — the engine falls
+    # back to the unfused loop (and SGPR's default precond_rank=1 would
+    # reject fusion anyway).  None follows ``settings.fuse_cg``.
+    fuse_cg: bool | None = None
 
     def __post_init__(self):
         if self.precision is not None:
             self.settings = dataclasses.replace(
                 self.settings, precision=self.precision
             )
+        if self.fuse_cg is not None:
+            self.settings = dataclasses.replace(self.settings, fuse_cg=self.fuse_cg)
 
     # -- GPModel protocol: inputs / parameterization --------------------------
     def prepare_inputs(self, X):

@@ -111,12 +111,18 @@ class SKI:
     # engages the mBCG residual-refresh machinery.  None follows
     # settings.precision; an explicit value overrides it unconditionally.
     precision: str | None = None
+    # fused-CG knob (API uniformity): the interpolated Toeplitz operator
+    # has no fused kernel — True falls back to the unfused loop.  None
+    # follows ``settings.fuse_cg``.
+    fuse_cg: bool | None = None
 
     def __post_init__(self):
         if self.precision is not None:
             self.settings = dataclasses.replace(
                 self.settings, precision=self.precision
             )
+        if self.fuse_cg is not None:
+            self.settings = dataclasses.replace(self.settings, fuse_cg=self.fuse_cg)
 
     def init_params(self, X, key=None):
         d = X.shape[1]

@@ -51,6 +51,38 @@ tiles + 256·512·4B for the kernel tile + M/out tiles ≈ 1.3 MB ≪ 16 MB VMEM
 at t=128, and all matmul dims are multiples of the 128-lane MXU.  The
 batched output block is (b, bn, t); ``bn`` is halved until it fits the
 VMEM budget for large b.
+
+Fused CG step (``fused_cg_step_pallas``): the whole mBCG iteration as ONE
+grid sweep of ONE pallas_call.  The unfused loop pays, per iteration, a
+kernel-matmul launch plus ~4 XLA passes over the (b, n, t) CG state
+(U += αD, R −= αV, dᵀV/rᵀz reductions, D = Z + βD) — each a full HBM
+round-trip of state the kernel just had in VMEM.  The fused kernel folds
+all of it into the matmul sweep:
+
+  * **prologue** (once per row block, at j == 0): the previous iteration's
+    pending rank-1 updates are applied in-VMEM — U += α∘D, R −= α∘V,
+    D = γ∘R + β∘D — and written through the U/R/D outputs.  γ ∈ {0, 1}
+    is the direction-restart switch: γ=1 is the CG update, (α=0, β=1, γ=0)
+    is the no-op prologue used right after an out-of-band f32 residual
+    refresh replaced the state.
+  * **matmul**: V_i += K_ij @ D_j with the *same-iteration* D recomputed
+    on the fly from the (R, V, D) column tiles — the column-side copy of
+    the prologue's elementwise update, recomputed per (i, j) tile so no
+    grid-order hazard exists between updating D and consuming it.
+  * **epilogue** (once per row block, at j == num_j−1, V_i now complete):
+    the per-column reductions dᵀV, rᵀr, rᵀV, vᵀV accumulate into a
+    VMEM-resident (4, t) block (constant output index map → the block
+    never leaves VMEM during the sweep).  D and V are never re-read from
+    HBM for the dot products; the rᵀr/rᵀV/vᵀV triplet is what lets the
+    solver form the next α AND β from O(t) scalar arithmetic only
+    (pipelined-CG recurrence, Ghysels & Vanroose 2014).
+
+The α/β/γ scalars stay in XLA (O(t) work); everything O(n·t) lives in the
+kernel.  Per iteration this is 1 launch instead of ≥ 2 (matmul + fused
+XLA vector updates), with the state read/written exactly once —
+``fused_step_tile_counts`` gives the measured tile-level accounting.
+``compute_dtype`` applies to the two MXU stages exactly as above; the CG
+state, its updates and the reduction accumulators are always f32.
 """
 
 from __future__ import annotations
@@ -214,22 +246,29 @@ def _round_up(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
-def _effective_blocks(rows: int, cols: int, t: int, batch: int | None, bn: int, bm: int):
+def _effective_blocks(
+    rows: int, cols: int, t: int, batch: int | None, bn: int, bm: int,
+    slabs: int = 1,
+):
     """The block sizes the kernel will actually run with: clamped to the
     (sublane-aligned) problem size, and — batched — halved until the
-    (b, bn, t) f32 output slab fits the VMEM budget."""
+    (b, bn, t) f32 output slab fits the VMEM budget.  ``slabs`` counts the
+    number of (b, bn, t) VMEM-resident state blocks the kernel holds (1 for
+    the plain matmul's output; 8 for the fused CG step's four state inputs
+    plus four state outputs)."""
     bn = min(bn, _round_up(rows, 8))
     bm = min(bm, _round_up(cols, 8))
     if batch is not None:
-        while batch * bn * t * 4 > _BATCH_OUT_VMEM_BYTES and bn > 8:
+        while slabs * batch * bn * t * 4 > _BATCH_OUT_VMEM_BYTES and bn > 8:
             bn = _round_up(bn // 2, 8)
-        if batch * bn * t * 4 > 4 * _BATCH_OUT_VMEM_BYTES:
+        if slabs * batch * bn * t * 4 > 4 * _BATCH_OUT_VMEM_BYTES:
             # even bn=8 can't fit the (b, bn, t) output slab in VMEM —
             # fail loudly instead of letting Mosaic die opaquely
             raise ValueError(
-                f"batched kernel matmul: batch={batch} × t={t} output slab "
-                f"exceeds the VMEM budget even at bn=8; split the batch into "
-                f"chunks (e.g. lax.map over ≤{4 * _BATCH_OUT_VMEM_BYTES // (8 * t * 4)}"
+                f"batched kernel matmul: batch={batch} × t={t} × {slabs} "
+                f"state slab(s) exceed the VMEM budget even at bn=8; split "
+                f"the batch into chunks (e.g. lax.map over "
+                f"≤{4 * _BATCH_OUT_VMEM_BYTES // (slabs * 8 * t * 4)}"
                 f"-element groups) or reduce t"
             )
     return bn, bm
@@ -319,3 +358,290 @@ def kernel_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((rows, t), jnp.float32),
         interpret=interpret,
     )(off, X1, X2, M, scal)
+
+
+# ---------------------------------------------------------------------------
+# Fused CG step: one pallas_call per mBCG iteration
+# ---------------------------------------------------------------------------
+
+# number of (b, bn, t) f32 state blocks the fused kernel keeps in VMEM at
+# once: U/R/D/V inputs + U/R/D/V outputs (the (b, 4, t) reduction
+# accumulator and the (bm, t) column tiles are small next to them)
+_FUSED_STATE_SLABS = 8
+
+
+def _fused_cg_step_kernel(
+    off_ref,  # (1,) int32   global row offset of the X1 shard
+    x1_ref,  # (bn, d)    row block of X/ℓ
+    x2_ref,  # (bm, d)    col block of X/ℓ
+    rcol_ref,  # (1, bm, t)  col block of the previous residual R
+    dcol_ref,  # (1, bm, t)  col block of the previous direction D
+    vcol_ref,  # (1, bm, t)  col block of the previous product V = K̂D
+    urow_ref,  # (batch, bn, t) row block of the previous solve U
+    rrow_ref,  # (batch, bn, t) row block of the previous residual R
+    drow_ref,  # (batch, bn, t) row block of the previous direction D
+    vrow_ref,  # (batch, bn, t) row block of the previous product V
+    scal_ref,  # (2,)       [outputscale, sigma2]
+    ab_ref,  # (1, 3, t)    [α; β; γ] per-column step scalars
+    uo_ref,  # (batch, bn, t) updated U
+    ro_ref,  # (batch, bn, t) updated R
+    do_ref,  # (batch, bn, t) updated D
+    vo_ref,  # (batch, bn, t) V = (K+σ²I) @ D_updated  (revisited over j, b)
+    red_ref,  # (batch, 4, t)  [dᵀV; rᵀr; rᵀV; vᵀV] accumulator (VMEM-resident)
+    *,
+    kernel_type: str,
+    bn: int,
+    bm: int,
+    n_rows: int,
+    n_cols: int,
+    num_j: int,
+    mxu_dtype,
+):
+    """One grid step of the fused CG iteration (see module docstring).
+
+    Grid (rows, cols, batch), batch innermost.  All state arithmetic is
+    f32 on the VPU; only the kernel-tile distances and the tile×D product
+    take ``mxu_dtype`` operands (f32 accumulation).  The column-side D is
+    recomputed from the (R, V, D) column tiles per (i, j) step — the
+    elementwise twin of the prologue update, so the matmul always consumes
+    this iteration's direction without any write-then-read hazard across
+    grid steps.
+    """
+    i, j, b = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    alpha = ab_ref[0, 0]  # (t,) previous step size (0 on the first step)
+    beta = ab_ref[0, 1]  # (t,) previous momentum
+    gamma = ab_ref[0, 2]  # (t,) direction-restart switch (1 = CG update)
+
+    # column-side state advance: D_new = γ∘(R − α∘V) + β∘D  (f32, VPU)
+    rcol = rcol_ref[0] - alpha[None, :] * vcol_ref[0]
+    dcol = gamma[None, :] * rcol + beta[None, :] * dcol_ref[0]
+    # NaN hygiene for partial edge blocks: rows of D beyond n_cols are
+    # unspecified-input arithmetic — zero them before the MXU sees them
+    col_ids = j * bm + jax.lax.broadcasted_iota(jnp.int32, dcol.shape, 0)
+    dcol = jnp.where(col_ids < n_cols, dcol, 0.0)
+
+    k_tile = _masked_kernel_tile(
+        x1_ref[...], x2_ref[...], scal_ref, off_ref[0], i, j,
+        kernel_type=kernel_type, bn=bn, bm=bm, n_cols=n_cols, mxu_dtype=mxu_dtype,
+    )
+    partial_out = jax.lax.dot_general(
+        k_tile.astype(mxu_dtype),
+        dcol.astype(mxu_dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    sl = pl.dslice(b, 1)
+
+    @pl.when(j == 0)
+    def _prologue():
+        # apply the pending rank-1 updates of the previous iteration to this
+        # row block, once per (i, b) — U/R/D leave through the outputs
+        u = urow_ref[sl][0]
+        r = rrow_ref[sl][0]
+        d = drow_ref[sl][0]
+        v = vrow_ref[sl][0]
+        rn = r - alpha[None, :] * v
+        uo_ref[sl] = (u + alpha[None, :] * d)[None]
+        ro_ref[sl] = rn[None]
+        do_ref[sl] = (gamma[None, :] * rn + beta[None, :] * d)[None]
+        vo_ref[sl] = partial_out[None]
+
+    @pl.when(j > 0)
+    def _acc():
+        vo_ref[sl] += partial_out[None]
+
+    @pl.when((i == 0) & (j == 0) & (b == 0))
+    def _init_reductions():
+        red_ref[...] = jnp.zeros_like(red_ref)
+
+    @pl.when(j == num_j - 1)
+    def _epilogue():
+        # V_i is complete for this (i, b): fold the row block's contribution
+        # to the four per-column reductions while everything is in VMEM.
+        # The updated R/D are recomputed from the (still-resident) input
+        # blocks — cheaper than carrying scratch across grid steps.
+        v_full = vo_ref[sl][0]
+        r = rrow_ref[sl][0]
+        d = drow_ref[sl][0]
+        v_prev = vrow_ref[sl][0]
+        rn = r - alpha[None, :] * v_prev
+        dn = gamma[None, :] * rn + beta[None, :] * d
+        valid = (
+            i * bn + jax.lax.broadcasted_iota(jnp.int32, v_full.shape, 0)
+        ) < n_rows
+        vm = jnp.where(valid, v_full, 0.0)
+        rm = jnp.where(valid, rn, 0.0)
+        dm = jnp.where(valid, dn, 0.0)
+        red = jnp.stack(
+            [
+                jnp.sum(dm * vm, axis=0),  # dᵀV   → α denominator
+                jnp.sum(rm * rm, axis=0),  # rᵀr   → rz (exact, measured)
+                jnp.sum(rm * vm, axis=0),  # rᵀV   → pipelined rz recurrence
+                jnp.sum(vm * vm, axis=0),  # vᵀV   → pipelined rz recurrence
+            ]
+        )
+        red_ref[sl] += red[None]
+
+
+def fused_cg_step_pallas(
+    X1: jax.Array,  # (rows, d) row shard, pre-divided by lengthscale
+    X2: jax.Array,  # (cols, d) full column inputs, pre-divided by lengthscale
+    U: jax.Array,  # (b, rows, t) CG state — this shard's rows
+    R: jax.Array,  # (b, rows, t)
+    D: jax.Array,  # (b, rows, t)
+    V: jax.Array,  # (b, rows, t)
+    R_cols: jax.Array,  # (b, cols, t) full-column view of R (same array
+    D_cols: jax.Array,  # (b, cols, t)  single-device; the all-gathered state
+    V_cols: jax.Array,  # (b, cols, t)  on the row-sharded path)
+    alpha: jax.Array,  # (b, t) previous step sizes
+    beta: jax.Array,  # (b, t) previous momenta
+    gamma: jax.Array,  # (b, t) direction-restart switch
+    outputscale: jax.Array,
+    sigma2: jax.Array,
+    row_offset: jax.Array | int = 0,
+    *,
+    kernel_type: str = "rbf",
+    bn: int = 256,
+    bm: int = 512,
+    interpret: bool = False,
+    compute_dtype: str = "float32",
+):
+    """One fused CG iteration of K̂ = K(X, X) + σ²I: applies the pending
+    (α, β, γ) state updates, computes V = K̂·D_new tile-by-tile, and
+    accumulates the per-column reductions — all in ONE pallas_call.
+
+    Returns ``(U, R, D, V, red)`` with ``red`` of shape (b, 4, t) holding
+    [dᵀV; rᵀr; rᵀV; vᵀV].  All outputs are f32; ``compute_dtype`` selects
+    the MXU operand dtype only (see module docstring).
+    """
+    rows, d = X1.shape
+    cols = X2.shape[0]
+    batch, _, t = U.shape
+    assert R_cols.shape[-2] == cols, (R_cols.shape, X2.shape)
+    mxu_dtype = as_jnp_dtype(compute_dtype)
+    bn, bm = _effective_blocks(rows, cols, t, batch, bn, bm, slabs=_FUSED_STATE_SLABS)
+    num_j = pl.cdiv(cols, bm)
+
+    scal = jnp.stack([outputscale.astype(jnp.float32), sigma2.astype(jnp.float32)])
+    off = jnp.asarray(row_offset, jnp.int32).reshape(1)
+    ab = jnp.stack([alpha, beta, gamma], axis=1).astype(jnp.float32)  # (b, 3, t)
+
+    grid = (pl.cdiv(rows, bn), pl.cdiv(cols, bm), batch)
+    state_spec = pl.BlockSpec((batch, bn, t), lambda i, j, b: (0, i, 0))
+    col_spec = pl.BlockSpec((1, bm, t), lambda i, j, b: (b, j, 0))
+    state_shape = jax.ShapeDtypeStruct((batch, rows, t), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(
+            _fused_cg_step_kernel,
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            n_rows=rows,
+            n_cols=cols,
+            num_j=num_j,
+            mxu_dtype=mxu_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, b: (0,)),
+            pl.BlockSpec((bn, d), lambda i, j, b: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j, b: (j, 0)),
+            col_spec,
+            col_spec,
+            col_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            pl.BlockSpec((2,), lambda i, j, b: (0,)),
+            pl.BlockSpec((1, 3, t), lambda i, j, b: (b, 0, 0)),
+        ],
+        out_specs=[
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            pl.BlockSpec((batch, 4, t), lambda i, j, b: (0, 0, 0)),
+        ],
+        out_shape=[
+            state_shape,
+            state_shape,
+            state_shape,
+            state_shape,
+            jax.ShapeDtypeStruct((batch, 4, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(off, X1, X2, R_cols, D_cols, V_cols, U, R, D, V, scal, ab)
+
+
+def fused_step_tile_counts(
+    rows: int, cols: int, batch: int, *, t: int = 128, bn: int = 256, bm: int = 512
+) -> dict:
+    """Measured tile-level HBM traffic of ONE fused CG iteration, mirrored
+    from the index maps of ``_fused_cg_step_kernel`` (the same way
+    ``tile_load_counts`` mirrors the plain matmul) — including the
+    fused-epilogue passes, which cost ZERO extra loads: the epilogue reads
+    the (batch, bn, t) row blocks that are already VMEM-resident for the
+    prologue, and the (4, t) accumulator has a constant index map so it
+    never round-trips HBM during the sweep.
+
+    Returns tile counts and modeled f32 HBM bytes per iteration for the
+    fused kernel vs the unfused path (pallas matmul + XLA state updates,
+    which re-reads/re-writes the (b, n, t) state ~4 more times per
+    iteration and launches ≥ 2 programs).
+
+    Regime note the model makes visible: the fused kernel reads THREE
+    column-state arrays per row-block sweep (it recomputes this
+    iteration's D from (R, V, D) on the fly) where the plain matmul reads
+    one, so fused traffic is (3·gi + 8)·n·t·4B vs the unfused
+    (gi + 13)·n·t·4B — the byte win holds for gi ≲ 2 row blocks, i.e.
+    exactly the per-device partition sizes of the sharded exact-GP regime
+    the fusion targets (n_loc ≲ 2·bn).  Above that the fused path still
+    wins on launches (1 vs ≥ 2 + the XLA pass dispatch latencies), just
+    not on raw bytes.
+    """
+    ebn, ebm = _effective_blocks(
+        rows, cols, t, batch, bn, bm, slabs=_FUSED_STATE_SLABS
+    )
+    gi, gj = pl.cdiv(rows, ebn), pl.cdiv(cols, ebm)
+    x_tile_loads = gi + gi * gj  # x1 once per i; x2 once per (i, j)
+    # column state tiles (R, V, D): block index (b, j) → fetched per (i, j, b)
+    col_state_tiles = 3 * gi * gj * batch
+    # row state slabs (U, R, D, V in): block index i only → fetched once per
+    # i, shared across the whole (j, b) sweep AND between prologue/epilogue
+    row_state_tiles = 4 * gi
+    # outputs: U/R/D/V written once per row block; the reduction accumulator
+    # writes back once at the end of the sweep
+    out_state_tiles = 4 * gi
+    d_bytes = 4  # f32 state
+    nt = rows * t * batch
+    fused_bytes = (
+        col_state_tiles * ebm * t * d_bytes
+        + row_state_tiles * batch * ebn * t * d_bytes
+        + out_state_tiles * batch * ebn * t * d_bytes
+        + 4 * batch * t * d_bytes
+    )
+    # unfused iteration: the pallas matmul reads the D column tiles (1 array
+    # instead of 3) and writes V; the XLA vector stage then pays full
+    # (b, n, t) passes for dᵀV (read D, V), U += αD (read U, D, write U),
+    # R −= αV (read R, V, write R), rᵀz (read R) and D = Z + βD (read R, D,
+    # write D): 9 reads + 3 writes of the state per iteration.
+    unfused_bytes = (
+        gi * gj * batch * ebm * t * d_bytes  # matmul D tiles
+        + nt * d_bytes  # matmul V write
+        + 12 * nt * d_bytes  # XLA update/reduction passes
+    )
+    return {
+        "grid": (gi, gj, batch),
+        "x_tile_loads": x_tile_loads,
+        "col_state_tile_loads": col_state_tiles,
+        "row_state_tile_loads": row_state_tiles,
+        "epilogue_extra_tile_loads": 0,  # reductions reuse resident blocks
+        "state_slab_stores": out_state_tiles,
+        "fused_hbm_bytes_per_iter": fused_bytes,
+        "unfused_hbm_bytes_per_iter": unfused_bytes,
+        "hbm_bytes_ratio": unfused_bytes / fused_bytes,
+        "launches_per_iter_fused": 1,
+        "launches_per_iter_unfused": 2,  # kernel matmul + fused XLA update
+    }

@@ -13,6 +13,13 @@ Three layers:
     only collective per matmul is ONE all-gather of the (n, t) RHS —
     O(n·t) communication against O(n²·(d+t)/D) compute, the multi-device
     extension of BBMM from Wang et al. 2019.
+  * :func:`fused_cg_step_prescaled` / :func:`sharded_fused_cg_step_prescaled`
+    — the whole mBCG iteration as ONE launch (state updates + K̂·D + the
+    per-column reductions; see ``kernel_matmul.fused_cg_step_pallas``).
+    These are the :data:`repro.core.mbcg.CGStepFn` implementations the
+    ``KernelOperator`` family advertises through ``fused_cg_step_fn``; the
+    sharded form all-gathers the (R, V, D) column state (f32 — CG state
+    never loses bits in flight) and ``psum``s the (4, t) reductions.
 
 Every entry point takes a ``compute_dtype`` ('float32' | 'bfloat16', with
 the 'highest'/'mixed' precision aliases accepted) that selects the MXU
@@ -32,7 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.precision import as_jnp_dtype, normalize_compute_dtype
-from .kernel_matmul import kernel_matmul_pallas
+from .kernel_matmul import fused_cg_step_pallas, kernel_matmul_pallas
 
 
 def _pad_to(x, mult, axis):
@@ -271,4 +278,264 @@ def sharded_kernel_matmul(
         bm=bm,
         interpret=interpret,
         compute_dtype=compute_dtype,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused CG step (one pallas_call per mBCG iteration)
+# ---------------------------------------------------------------------------
+
+
+def _flatten_state(arr, n, t):
+    """(..., n, t) → (b, n, t) with the leading dims flattened (b=1 if none)."""
+    lead = arr.shape[:-2]
+    return arr.reshape((-1, n, t)) if lead else arr.reshape((1, n, t)), lead
+
+
+@partial(
+    jax.jit,
+    static_argnames=("kernel_type", "bn", "bm", "interpret", "compute_dtype"),
+)
+def _fused_cg_step_padded(
+    Xs_rows,
+    Xs_cols,
+    U,
+    R,
+    D,
+    V,
+    R_cols,
+    D_cols,
+    V_cols,
+    alpha,
+    beta,
+    gamma,
+    outputscale,
+    sigma2,
+    row_offset=0,
+    *,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+    compute_dtype="float32",
+):
+    """Shared core of the fused CG step wrappers: flatten leading batch dims,
+    lane-pad the probe dim (compiled mode), run the fused kernel, restore
+    shapes.  Padded probe columns are all-zero state with α=β=γ=0, so they
+    contribute zero updates and zero reductions — stripped on return."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    compute_dtype = normalize_compute_dtype(compute_dtype)
+    rows = U.shape[-2]
+    cols = R_cols.shape[-2]
+    t0 = U.shape[-1]
+    U, lead = _flatten_state(U, rows, t0)
+    R, _ = _flatten_state(R, rows, t0)
+    D, _ = _flatten_state(D, rows, t0)
+    V, _ = _flatten_state(V, rows, t0)
+    R_cols, _ = _flatten_state(R_cols, cols, t0)
+    D_cols, _ = _flatten_state(D_cols, cols, t0)
+    V_cols, _ = _flatten_state(V_cols, cols, t0)
+    b = U.shape[0]
+    scalars = [
+        jnp.asarray(s, jnp.float32).reshape((b, t0) if lead else (1, t0))
+        for s in (alpha, beta, gamma)
+    ]
+    if not interpret:
+        U, R, D, V = (_pad_to(a, 128, 2) for a in (U, R, D, V))
+        R_cols, D_cols, V_cols = (_pad_to(a, 128, 2) for a in (R_cols, D_cols, V_cols))
+        scalars = [_pad_to(s, 128, 1) for s in scalars]
+    alpha, beta, gamma = scalars
+    Un, Rn, Dn, Vn, red = fused_cg_step_pallas(
+        Xs_rows,
+        Xs_cols,
+        U,
+        R,
+        D,
+        V,
+        R_cols,
+        D_cols,
+        V_cols,
+        alpha,
+        beta,
+        gamma,
+        jnp.asarray(outputscale),
+        jnp.asarray(sigma2),
+        row_offset,
+        kernel_type=kernel_type,
+        bn=bn,
+        bm=bm,
+        interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+    out_shape = lead + (rows, t0)
+    Un, Rn, Dn, Vn = (a[..., :t0].reshape(out_shape) for a in (Un, Rn, Dn, Vn))
+    red = red[..., :t0].reshape(lead + (4, t0)) if lead else red[0, :, :t0]
+    dv, rr, rv, vv = (red[..., k, :] for k in range(4))
+    return Un, Rn, Dn, Vn, (dv, rr, rv, vv)
+
+
+def fused_cg_step_prescaled(
+    Xs,
+    U,
+    R,
+    D,
+    V,
+    alpha,
+    beta,
+    gamma,
+    outputscale,
+    sigma2,
+    *,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+    compute_dtype="float32",
+):
+    """One fused CG iteration of K̂ = K(X, X) + σ²I for pre-scaled inputs —
+    the single-device :data:`repro.core.mbcg.CGStepFn`.
+
+    Applies the pending per-column (α, β, γ) updates to the (…, n, t) CG
+    state, computes V = K̂·D tile-by-tile and returns the four per-column
+    reductions [dᵀV, rᵀr, rᵀV, vᵀV] — ONE kernel launch, no XLA pass over
+    the O(n·t) state.  Leading batch dims run on the native batch grid."""
+    return _fused_cg_step_padded(
+        Xs,
+        Xs,
+        U,
+        R,
+        D,
+        V,
+        R,
+        D,
+        V,
+        alpha,
+        beta,
+        gamma,
+        outputscale,
+        sigma2,
+        kernel_type=kernel_type,
+        bn=bn,
+        bm=bm,
+        interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+
+
+def sharded_fused_cg_step_prescaled(
+    Xs,
+    U,
+    R,
+    D,
+    V,
+    alpha,
+    beta,
+    gamma,
+    outputscale,
+    sigma2,
+    mesh,
+    axes=("data",),
+    *,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+    compute_dtype="float32",
+):
+    """Row-partitioned fused CG iteration — the sharded CGStepFn.
+
+    Layout mirrors :func:`sharded_kernel_matmul_prescaled`: Xs replicated,
+    the (…, n, t) CG state row-sharded over ``axes``.  Each device applies
+    the pending updates to its own row band inside its fused kernel and
+    contributes its band's partial reductions, which are ``psum``'d — the
+    only O(t) collective.  The column-side (R, V, D) state is all-gathered
+    (three payloads instead of the plain matmul's one: the kernel
+    recomputes this iteration's D from them on the fly, which is what
+    keeps the whole iteration a single launch; the gather stays f32 so the
+    recursively-updated CG state never loses bits in flight, even when the
+    MXU stages run at ``compute_dtype='bfloat16'``)."""
+    from repro.distributed.sharding import (
+        compat_shard_map,
+        mesh_axis_sizes,
+        row_shard_spec,
+    )
+
+    compute_dtype = normalize_compute_dtype(compute_dtype)
+    n = Xs.shape[0]
+    sizes = mesh_axis_sizes(mesh)
+    shards = 1
+    for a in axes:
+        shards *= sizes[a]
+    if n % shards != 0:
+        raise ValueError(f"n={n} must divide evenly over {shards} shards")
+    row_axis = U.ndim - 2
+    rep = P(*([None] * (U.ndim - 1)))  # replicated (…, t) scalar spec
+
+    def body(Xs_full, U_loc, R_loc, D_loc, V_loc, al, be, ga, outputscale, sigma2):
+        R_full = jax.lax.all_gather(R_loc, axes, axis=row_axis, tiled=True)
+        D_full = jax.lax.all_gather(D_loc, axes, axis=row_axis, tiled=True)
+        V_full = jax.lax.all_gather(V_loc, axes, axis=row_axis, tiled=True)
+        idx = jax.lax.axis_index(axes)
+        n_loc = n // shards
+        X_loc = jax.lax.dynamic_slice_in_dim(Xs_full, idx * n_loc, n_loc, axis=0)
+        Un, Rn, Dn, Vn, red = _fused_cg_step_padded(
+            X_loc,
+            Xs_full,
+            U_loc,
+            R_loc,
+            D_loc,
+            V_loc,
+            R_full,
+            D_full,
+            V_full,
+            al,
+            be,
+            ga,
+            outputscale,
+            sigma2,
+            row_offset=idx * n_loc,
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            interpret=interpret,
+            compute_dtype=compute_dtype,
+        )
+        red = jax.lax.psum(red, axes)
+        return Un, Rn, Dn, Vn, red
+
+    state_spec = row_shard_spec(U.ndim, axes)
+    return compat_shard_map(
+        body,
+        mesh,
+        in_specs=(
+            P(None, None),
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            rep,
+            rep,
+            rep,
+            P(),
+            P(),
+        ),
+        out_specs=(
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            (rep, rep, rep, rep),
+        ),
+    )(
+        Xs,
+        U,
+        R,
+        D,
+        V,
+        jnp.asarray(alpha, jnp.float32),
+        jnp.asarray(beta, jnp.float32),
+        jnp.asarray(gamma, jnp.float32),
+        jnp.asarray(outputscale, jnp.float32),
+        jnp.asarray(sigma2, jnp.float32),
     )

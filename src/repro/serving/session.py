@@ -78,7 +78,11 @@ class PosteriorSession:
         (0 → streaming disabled, every observe rebuilds).  Woodbury
         updates are algebraically exact, so for SGPR/BLR this bounds only
         floating-point accumulation; for the Krylov caches it also bounds
-        basis growth (≤ max_cg_iters+1 columns per update).
+        basis growth (≤ max_cg_iters+1 columns per update) — and the
+        model's ``settings.max_basis_columns`` bounds it *in memory*
+        instead: streamed bases past that budget are Rayleigh–Ritz
+        compacted (conservative variances at fixed memory; see
+        ``repro.core.inference.extend_posterior_cache``).
       build: build the cache eagerly (default) or lazily on first query.
     """
 

@@ -200,3 +200,59 @@ class TestSKICache:
         assert np.array_equal(np.asarray(mean_c), np.asarray(mean_ref))
         assert bool(jnp.all(var_c > 0))
         assert bool(jnp.all(var_c >= var_ref - 1e-3))  # conservative (CG slack)
+
+
+class TestBasisCompaction:
+    """Krylov basis compaction (ISSUE 4 satellite): under a
+    ``max_basis_columns`` budget, streamed cache extensions Rayleigh–Ritz
+    truncate the recycled basis — fixed memory, still-conservative
+    variances."""
+
+    def _grown_cache(self, budget):
+        import dataclasses
+
+        n, k = 90, 12
+        x, y = toy(jax.random.PRNGKey(3), n + 3 * k)
+        K_full = jnp.exp(-((x[:, None, 0] - x[None, :, 0]) ** 2) / (2 * 0.3**2))
+        s = BBMMSettings(
+            num_probes=6, max_cg_iters=20, cg_tol=1e-6, precond_rank=0,
+            max_basis_columns=budget,
+        )
+
+        def op_of(m):
+            return AddedDiagOperator(DenseOperator(K_full[:m, :m]), 0.05)
+
+        cache = build_posterior_cache(op_of(n), y[:n], jax.random.PRNGKey(1), s)
+        for step in range(3):  # three streamed appends
+            m = n + (step + 1) * k
+            cache = inference_mod.extend_posterior_cache(op_of(m), y[:m], cache, s)
+        return cache, K_full, x, y, s
+
+    def test_budget_caps_basis_growth(self):
+        unbounded, *_ = self._grown_cache(0)
+        budgeted, *_ = self._grown_cache(80)
+        assert unbounded.basis.shape[1] > 80  # growth without the budget
+        assert budgeted.basis.shape[1] == 80  # hard cap with it
+
+    def test_variances_stay_conservative_at_fixed_budget(self):
+        budgeted, K_full, x, y, s = self._grown_cache(80)
+        m = budgeted.alpha.shape[0]
+        Khat = K_full[:m, :m] + 0.05 * jnp.eye(m)
+        Kxs = jnp.exp(
+            -((x[:m, 0][:, None] - jnp.linspace(-1, 1, 9)[None, :]) ** 2)
+            / (2 * 0.3**2)
+        )
+        exact_iq = jnp.sum(Kxs * jnp.linalg.solve(Khat, Kxs), axis=0)
+        iq = cached_inv_quad(budgeted, Kxs)
+        # conservative: the Galerkin inverse-quad never exceeds the exact one
+        # (variance = prior − iq never undershoots), at ANY budget
+        assert bool(jnp.all(iq <= exact_iq + 1e-4)), (iq, exact_iq)
+        # and the truncation keeps the dominant directions: still tight
+        unbounded, *_ = self._grown_cache(0)
+        iq_unb = cached_inv_quad(unbounded, Kxs)
+        np.testing.assert_allclose(iq, iq_unb, rtol=0.1, atol=5e-3)
+
+    def test_budget_mean_unaffected(self):
+        budgeted, K_full, x, y, _ = self._grown_cache(80)
+        unbounded, *_ = self._grown_cache(0)
+        np.testing.assert_allclose(budgeted.alpha, unbounded.alpha, rtol=1e-5, atol=1e-6)

@@ -25,14 +25,16 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated subset: solve_error,speed,mae,preconditioner,"
-        "complexity,serve,fused",
+        "complexity,serve,fused,multitask",
     )
     ap.add_argument(
         "--scenario",
         default=None,
         help="alias for --only (e.g. --scenario serve: PosteriorSession "
         "cached-QPS and append-vs-rebuild rows; --scenario fused: per-"
-        "iteration time, launch count and HBM bytes of the fused CG step)",
+        "iteration time, launch count and HBM bytes of the fused CG step; "
+        "--scenario multitask: Kronecker BBMM vs naive dense nT×nT rows "
+        "for T in {2, 4, 8})",
     )
     ap.add_argument(
         "--fast",
@@ -51,7 +53,16 @@ def main() -> None:
     args = ap.parse_args()
     only = args.only or args.scenario
 
-    from . import complexity, fused, mae, preconditioner, serve, solve_error, speed
+    from . import (
+        complexity,
+        fused,
+        mae,
+        multitask,
+        preconditioner,
+        serve,
+        solve_error,
+        speed,
+    )
 
     suites = {
         "solve_error": solve_error.run,  # paper Fig 1
@@ -61,6 +72,7 @@ def main() -> None:
         "mae": mae.run,  # paper Fig 3
         "serve": serve.run,  # PosteriorSession QPS + append-vs-rebuild
         "fused": fused.run,  # fused CG step: launches/iter + HBM bytes/iter
+        "multitask": multitask.run,  # Kronecker BBMM vs naive dense nT×nT
     }
     wanted = only.split(",") if only else list(suites)
 
@@ -71,7 +83,7 @@ def main() -> None:
         print(f"# --- {name} ---", flush=True)
         if name == "speed":
             speed_rows += suites[name](fast=args.fast, dtype=args.dtype)
-        elif name in ("serve", "fused"):
+        elif name in ("serve", "fused", "multitask"):
             speed_rows += suites[name](fast=args.fast)
         else:
             suites[name]()

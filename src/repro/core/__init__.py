@@ -17,6 +17,9 @@ from .linear_operator import (
     LowRankRootOperator,
     ToeplitzOperator,
     KroneckerOperator,
+    KroneckerKernelOperator,
+    KroneckerAddedDiagOperator,
+    HadamardKroneckerOperator,
     InterpolatedOperator,
     CallableOperator,
 )

@@ -18,6 +18,7 @@ for free from ``jax.vjp`` of ``matmul``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, Sequence
 
@@ -560,6 +561,233 @@ class KroneckerOperator(LinearOperator):
         return KroneckerOperator(
             tuple(f.with_compute_dtype(compute_dtype) for f in self.factors)
         )
+
+
+def _warn_unfused_kronecker():
+    warnings.warn(
+        "fuse_cg=True requested on a Kronecker-structured operator: fusing the "
+        "Kronecker CG step into one Pallas launch is a documented frontier "
+        "(ROADMAP), not implemented — falling back to the unfused mBCG loop. "
+        "The data-kernel matmul inside each iteration still runs the "
+        "prepared/sharded Pallas path.",
+        stacklevel=3,
+    )
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class KroneckerKernelOperator(LinearOperator):
+    """K_X ⊗ K_T — the multitask GP covariance over a complete task grid.
+
+    Row layout is *data-major*: global row ``i·T + τ`` is (data point i,
+    task τ), so ``(K_X ⊗ K_T)[iT+τ, jT+τ'] = K_X[i,j]·K_T[τ,τ']``.
+
+    ``matmul`` is ONE data-kernel call per application: the (n·T, t) RHS is
+    reshaped into an (n, T·t) block, pushed through ``data_op.matmul``
+    (whatever its implementation — dense, blocked, Pallas, row-sharded
+    Pallas; ``prepare``/``with_compute_dtype`` recurse, so lengthscale
+    pre-scaling, batching, edge masking and bf16 tiles are all inherited),
+    then contracted against the small dense (T, T) task kernel:
+    O(t·(n²T + nT²)) instead of the naive O(t·n²T²).
+
+    The task kernel stays an explicit f32 matrix (T is small — it is the
+    learned B·Bᵀ + diag(v) of :class:`repro.gp.multitask.MultitaskGP`).
+    """
+
+    data_op: LinearOperator  # (n, n) — any data-kernel operator
+    task: jax.Array  # (T, T) dense symmetric PSD task kernel
+
+    @property
+    def shape(self):
+        nT = self.data_op.shape[0] * self.task.shape[0]
+        return (nT, nT)
+
+    @property
+    def num_tasks(self) -> int:
+        return self.task.shape[0]
+
+    @property
+    def dtype(self):
+        return self.data_op.dtype
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        T = self.task.shape[0]
+        n = self.data_op.shape[0]
+        t = M.shape[-1]
+        batch = M.shape[:-2]
+        block = M.reshape(*batch, n, T * t)  # row iT+τ → (i, τ·t + col)
+        Y = self.data_op.matmul(block).reshape(*batch, n, T, t)
+        out = jnp.einsum("st,...utc->...usc", self.task, Y)
+        out = out.reshape(*batch, n * T, t)
+        return out[..., 0] if squeeze else out
+
+    def diagonal(self):
+        return jnp.outer(self.data_op.diagonal(), jnp.diagonal(self.task)).reshape(-1)
+
+    def row(self, i):
+        T = self.task.shape[0]
+        return jnp.outer(self.data_op.row(i // T), self.task[i % T]).reshape(-1)
+
+    def prepare(self):
+        return KroneckerKernelOperator(self.data_op.prepare(), self.task)
+
+    def with_compute_dtype(self, compute_dtype):
+        # the O(n²·Tt) data matmul takes the reduced policy; the tiny (T, T)
+        # task contraction stays f32
+        return KroneckerKernelOperator(
+            self.data_op.with_compute_dtype(compute_dtype), self.task
+        )
+
+    def fused_cg_step_fn(self, sigma2=None):
+        """Not fusable yet: the Kronecker step needs a task contraction
+        between the prologue and the tile matmul — a documented frontier.
+        Warns (loud) and returns None (graceful unfused fallback)."""
+        _warn_unfused_kronecker()
+        return None
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class HadamardKroneckerOperator(LinearOperator):
+    """Hadamard multitask covariance for heterogeneous panels.
+
+    Each of the m training rows is one (data point, task) observation with
+    its own ``task_ids[i] ∈ [0, T)``:
+
+        K[i, j] = K_X[i, j] · K_T[task_ids[i], task_ids[j]]
+
+    — the Hadamard (elementwise) product of the data kernel with the
+    gathered task kernel.  ``matmul`` keeps the one-data-matmul structure
+    of the Kronecker case: the RHS is scattered into per-task slots
+    (one-hot on the task id), the (m, T·t) block makes ONE
+    ``data_op.matmul`` call, and the task kernel rows gathered by task id
+    contract the result — O(t·(m²T + mT²)).  On a complete grid (every
+    point observed for every task, data-major order) this operator equals
+    :class:`KroneckerKernelOperator` entrywise.
+    """
+
+    data_op: LinearOperator  # (m, m) over the per-row data coordinates
+    task: jax.Array  # (T, T)
+    task_ids: jax.Array  # (m,) int32 task of each observation row
+
+    @property
+    def shape(self):
+        m = self.data_op.shape[0]
+        return (m, m)
+
+    @property
+    def num_tasks(self) -> int:
+        return self.task.shape[0]
+
+    @property
+    def dtype(self):
+        return self.data_op.dtype
+
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        T = self.task.shape[0]
+        m = self.data_op.shape[0]
+        t = M.shape[-1]
+        batch = M.shape[:-2]
+        onehot = jax.nn.one_hot(self.task_ids, T, dtype=M.dtype)  # (m, T)
+        expanded = (onehot[:, :, None] * M[..., :, None, :]).reshape(
+            *batch, m, T * t
+        )
+        Y = self.data_op.matmul(expanded).reshape(*batch, m, T, t)
+        rows = self.task[self.task_ids]  # (m, T) gathered task-kernel rows
+        out = jnp.sum(rows[:, :, None] * Y, axis=-2)
+        return out[..., 0] if squeeze else out
+
+    def diagonal(self):
+        return self.data_op.diagonal() * jnp.diagonal(self.task)[self.task_ids]
+
+    def row(self, i):
+        return self.data_op.row(i) * self.task[self.task_ids[i]][self.task_ids]
+
+    def prepare(self):
+        return HadamardKroneckerOperator(
+            self.data_op.prepare(), self.task, self.task_ids
+        )
+
+    def with_compute_dtype(self, compute_dtype):
+        return HadamardKroneckerOperator(
+            self.data_op.with_compute_dtype(compute_dtype), self.task, self.task_ids
+        )
+
+    def fused_cg_step_fn(self, sigma2=None):
+        _warn_unfused_kronecker()
+        return None
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class KroneckerAddedDiagOperator(LinearOperator):
+    """K̂ = K_multitask + Σ_noise with per-task noise σ²_τ.
+
+    The multitask analogue of :class:`AddedDiagOperator`: in the
+    data-major Kronecker layout the noise is I_n ⊗ diag(σ²) (row i·T+τ
+    gets σ²_τ); for a Hadamard base the per-row noise is the task-id
+    gather σ²_{task_ids[i]}.  ``task_ids=None`` selects the tiled
+    Kronecker layout.  ``diagonal()`` is exact (base diagonal + per-row
+    noise), which is what keeps cached Rayleigh–Ritz variances
+    conservative; ``with_compute_dtype`` recurses into the base while the
+    noise stays f32.
+    """
+
+    base: LinearOperator  # Kronecker or Hadamard multitask kernel
+    task_noise: jax.Array  # (T,) per-task σ²ₜ (scalar = shared)
+    task_ids: jax.Array | None = None  # (m,) int32, None → tiled grid layout
+
+    @property
+    def shape(self):
+        return self.base.shape
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+    def _row_noise(self):
+        noise = jnp.asarray(self.task_noise)
+        m = self.base.shape[0]
+        if noise.ndim == 0:
+            return jnp.full((m,), noise)
+        if self.task_ids is None:
+            return jnp.tile(noise, m // noise.shape[0])
+        return noise[self.task_ids]
+
+    def matmul(self, M):
+        noise = self._row_noise()
+        if M.ndim == 1:
+            return self.base.matmul(M) + noise * M
+        return self.base.matmul(M) + noise[:, None] * M
+
+    def diagonal(self):
+        return self.base.diagonal() + self._row_noise()
+
+    def row(self, i):
+        return self.base.row(i).at[i].add(self._row_noise()[i])
+
+    def prepare(self):
+        return KroneckerAddedDiagOperator(
+            self.base.prepare(), self.task_noise, self.task_ids
+        )
+
+    def with_compute_dtype(self, compute_dtype):
+        # noise stays f32 — only the multitask kernel matmul reduces
+        return KroneckerAddedDiagOperator(
+            self.base.with_compute_dtype(compute_dtype),
+            self.task_noise,
+            self.task_ids,
+        )
+
+    def fused_cg_step_fn(self, sigma2=None):
+        _warn_unfused_kronecker()
+        return None
 
 
 @_register

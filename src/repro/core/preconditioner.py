@@ -182,6 +182,15 @@ def build_preconditioner(
     """
     if rank <= 0:
         return IdentityPreconditioner()
+    from .linear_operator import KroneckerAddedDiagOperator
+
+    if isinstance(op, KroneckerAddedDiagOperator):
+        raise NotImplementedError(
+            "task-kernel preconditioning for Kronecker multitask operators is "
+            "an open frontier (ROADMAP) — the Woodbury solve/logdet assume a "
+            "scalar σ², not per-task noise. Run multitask solves with "
+            "precond_rank=0 (MultitaskGP's default settings do)."
+        )
     if not isinstance(op, AddedDiagOperator):
         raise TypeError(
             "Preconditioning requires K̂ = K + σ²I (AddedDiagOperator); got "

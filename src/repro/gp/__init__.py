@@ -7,7 +7,14 @@ driver; the streaming-capable ones additionally implement
 seam :class:`repro.serving.PosteriorSession` serves them through.
 """
 
-from .kernels import RBFKernel, MaternKernel, DeepKernel, KernelOperator, sq_dist
+from .kernels import (
+    RBFKernel,
+    MaternKernel,
+    DeepKernel,
+    KernelOperator,
+    CrossKernelOperator,
+    sq_dist,
+)
 from .model import (
     GPModel,
     SupportsStreaming,
@@ -28,3 +35,9 @@ from .sgpr import SGPR
 from .ski import SKI, Grid
 from .blr import BayesianLinearRegression
 from .dkl import DKLExactGP, mlp_init, mlp_apply
+from .multitask import (
+    MultitaskGP,
+    MultitaskData,
+    to_long_format,
+    split_long_format,
+)

@@ -387,14 +387,40 @@ class PreparedShardedPallasKernelOperator(LinearOperator):
 @_register
 @dataclasses.dataclass(frozen=True)
 class CrossKernelOperator:
-    """k(X*, X) rectangular block for predictions (not square — helper)."""
+    """k(X1, X2) rectangular block for predictions (not square — helper).
+
+    ``compute_dtype`` routes the test-vs-train cross matmul through the
+    same precision policy as the training operators (bf16 operands, f32
+    accumulation under ``"bfloat16"``/``"mixed"``) — so a model trained at
+    ``precision="mixed"`` predicts through a consistent reduced-precision
+    contraction instead of silently upcasting at serving time."""
 
     kernel: object
     X1: jax.Array
     X2: jax.Array
+    compute_dtype: str = static_field(default="float32")
+
+    @property
+    def shape(self):
+        return (self.X1.shape[0], self.X2.shape[0])
+
+    def to_dense(self):
+        return self.kernel(self.X1, self.X2)
+
+    def contract(self, K, M):
+        """K @ M under this operator's precision policy, for a precomputed
+        cross block K (e.g. ``to_dense()`` or its transpose) — lets serving
+        paths evaluate the kernel block ONCE and reuse it for both the
+        policy-consistent mean contraction and the variance expansion."""
+        return _mixed_matmul(K, M) if is_reduced(self.compute_dtype) else K @ M
 
     def matmul(self, M):
-        return self.kernel(self.X1, self.X2) @ M
+        return self.contract(self.kernel(self.X1, self.X2), M)
 
     def rmatmul(self, M):
-        return self.kernel(self.X2, self.X1) @ M
+        return self.contract(self.kernel(self.X2, self.X1), M)
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self, compute_dtype=normalize_compute_dtype(compute_dtype)
+        )

@@ -34,7 +34,9 @@ here:
     basis recycling (``extend_posterior_cache``).  ExactGP uses it on raw
     inputs; DKL reduces to it on featurized inputs — the deep-kernel
     feature map lives inside the kernel, so the cache algebra is
-    identical.
+    identical; MultitaskGP inherits its cache/update over the (n·T, n·T)
+    Kronecker system and overrides only the cross-covariance-dependent
+    prediction methods.
   * :class:`WoodburyCachePredictor` — the closed-form low-rank cache for
     models whose kernel IS a low-rank root (SGPR, BLR): all serving state
     lives in the m-dimensional root coordinates (G = RᵀR, b = Rᵀy), so a
@@ -54,10 +56,10 @@ from repro.core import (
     BBMMSettings,
     build_posterior_cache,
     cached_inv_quad,
-    cached_mean,
     extend_posterior_cache,
     solve as bbmm_solve,
 )
+from repro.core.precision import precision_compute_dtype
 
 #: The structural surface every GP model exposes (checked, without
 #: isinstance, by tests/test_serving.py::TestProtocolConformance).
@@ -144,15 +146,28 @@ class KrylovCachePredictor:
             variance_cache=variance_cache,
         )
 
+    def _cross(self, params, data, Xstar):
+        """The test-vs-train cross block as a :class:`CrossKernelOperator`
+        carrying the model's precision policy — its ``contract`` runs the
+        serving-side mean matmul at the same compute dtype as training
+        (bitwise-identical plain matmul under "highest")."""
+        from .kernels import CrossKernelOperator
+
+        return CrossKernelOperator(
+            self.kernel(params), data, Xstar,
+            compute_dtype=precision_compute_dtype(self.settings.precision),
+        )
+
     def predict_cached(self, params, data, cache, Xstar, *, full_cov=False):
         """Serve mean + variance from a PosteriorCache — zero CG iterations.
 
-        Mean: k*ᵀα, O(n·s).  Variance: Rayleigh–Ritz k*ᵀK̂⁻¹k* from the
-        cached Krylov basis, O(n·m) — conservative (never below the exact
-        posterior variance)."""
+        Mean: k*ᵀα, O(n·s), contracted under the model's precision policy.
+        Variance: Rayleigh–Ritz k*ᵀK̂⁻¹k* from the cached Krylov basis,
+        O(n·m) — conservative (never below the exact posterior variance)."""
         kern = self.kernel(params)
-        Kxs = kern(data, Xstar)  # (n, s)
-        mean = cached_mean(cache, Kxs)
+        cross = self._cross(params, data, Xstar)
+        Kxs = cross.to_dense()  # (n, s) — ONE kernel evaluation per query
+        mean = cross.contract(Kxs.T, cache.alpha)
         if full_cov:
             if cache.basis is None:
                 raise ValueError(
@@ -175,8 +190,9 @@ class KrylovCachePredictor:
         cache = self.posterior_cache(params, data, y, key=key, variance_cache=False)
         op = self.operator(params, data)
         kern = self.kernel(params)
-        Kxs = kern(data, Xstar)  # (n, s)
-        mean = cached_mean(cache, Kxs)
+        cross = self._cross(params, data, Xstar)
+        Kxs = cross.to_dense()  # (n, s)
+        mean = cross.contract(Kxs.T, cache.alpha)
         # variance: exact solves, reusing the cache's preconditioner factors
         solves = bbmm_solve(op, Kxs, self.settings, precond=cache.precond)
         if full_cov:

@@ -1,0 +1,401 @@
+"""Multitask GP regression: Kronecker-structured BBMM for multi-output data.
+
+The paper's §5 promise — "complex GP models simply require a routine for
+efficient matrix-matrix multiplication with the kernel" — applied to
+correlated outputs.  The multitask covariance over T tasks is
+
+    K = K_X ⊗ K_T + Σ_noise,        K_T = B·Bᵀ + diag(v)  (learned, T × T)
+
+with K_X any data kernel in the zoo (RBF / Matérn / deep via ``kernel_fn``)
+in any matmul mode (``dense`` / ``blocked`` / ``pallas`` /
+``pallas_sharded``), and Σ_noise per-task (σ²_τ on every row of task τ).
+One Kronecker MVM costs O(t·(n²T + nT²)) — the O(n²) data-kernel work is a
+SINGLE call into the prepared (batched / sharded / mixed-precision) BBMM
+hot path with T·t stacked columns, so every lever built for single-output
+models (lengthscale pre-scaling, edge masking, row sharding, bf16 tiles)
+is inherited by the multitask solve at zero marginal cost per task.  The
+naive dense multitask MVM is O(t·n²T²); ``benchmarks/multitask.py``
+quantifies the gap.
+
+Data layout — the **long format** — makes the whole serving stack work
+unmodified: every observation is one row ``(x₁ … x_d, task_id)`` of an
+(m, d+1) input array with a scalar target, exactly what ``fit_gp``,
+``PosteriorSession`` (including streaming ``observe`` of new (x, task, y)
+rows) and ``benchmarks/run.py`` already speak.  ``prepare_inputs``
+classifies the panel:
+
+  * a **complete grid** (every data point observed for all T tasks,
+    data-major order) → :class:`repro.core.KroneckerKernelOperator` over
+    the n distinct data locations — the O(t·(n²T + nT²)) path;
+  * a **heterogeneous panel** (each point observed for one task) →
+    :class:`repro.core.HadamardKroneckerOperator`, the task-id-gathered
+    Hadamard variant with the same one-data-matmul structure.
+
+Both agree entrywise where both apply, so a streamed append that breaks
+grid completeness degrades to the Hadamard operator without invalidating
+the recycled Krylov cache (the old principal block of K̂ is unchanged).
+
+``fuse_cg=True`` degrades loudly-but-gracefully: the Kronecker operators
+advertise no fused CG step (``fused_cg_step_fn`` warns and returns None),
+so mBCG runs its unfused loop — fusing the task contraction into the
+Pallas sweep is a documented ROADMAP frontier, as is task-kernel
+preconditioning (multitask solves run with ``precond_rank=0``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    BBMMSettings,
+    HadamardKroneckerOperator,
+    KroneckerAddedDiagOperator,
+    KroneckerKernelOperator,
+    cached_inv_quad,
+    marginal_log_likelihood,
+    solve as bbmm_solve,
+)
+from .exact import KERNELS, _inv_softplus, _softplus
+from .kernels import KernelOperator
+from .model import KrylovCachePredictor
+from .training import fit_gp
+
+
+class MultitaskData(NamedTuple):
+    """``prepare_inputs`` output: the hyperparameter-free panel geometry.
+
+    ``task_ids=None`` marks a complete data-major grid (Kronecker
+    structure, ``X`` holds the n distinct data locations); otherwise ``X``
+    holds per-row coordinates and ``task_ids`` the per-row task —
+    the Hadamard structure.
+    """
+
+    X: jax.Array  # (n, d) distinct locations | (m, d) per-row coordinates
+    task_ids: jax.Array | None  # None (grid) | (m,) int32
+    num_tasks: int
+
+
+def to_long_format(X, Y=None, *, task_ids=None, num_tasks=None):
+    """Encode multitask observations as long-format rows.
+
+    Two call shapes:
+
+      * complete grid — ``to_long_format(X, Y)`` with X (n, d) and Y
+        (n, T): every location crossed with tasks 0..T-1 (data-major),
+        returns ``(X_long (n·T, d+1), y_long (n·T,))``;
+      * heterogeneous panel — ``to_long_format(X, task_ids=ids,
+        num_tasks=T)`` with X (m, d) and per-row task ids, returns
+        ``X_long (m, d+1)`` (targets stay the caller's flat (m,) array).
+    """
+    X = jnp.atleast_2d(jnp.asarray(X))
+    if task_ids is not None:
+        ids_np = np.asarray(task_ids)
+        if num_tasks is not None and ids_np.size and (
+            ids_np.min() < 0 or ids_np.max() >= num_tasks
+        ):
+            raise ValueError(
+                f"task ids must lie in [0, {num_tasks}); got range "
+                f"[{ids_np.min()}, {ids_np.max()}]"
+            )
+        ids = jnp.asarray(task_ids, jnp.float32)[:, None]
+        return jnp.concatenate([X, ids], axis=-1)
+    Y = jnp.asarray(Y)
+    n, T = Y.shape
+    coords = jnp.repeat(X, T, axis=0)  # (n·T, d), data-major
+    tasks = jnp.tile(jnp.arange(T, dtype=jnp.float32), n)[:, None]
+    return jnp.concatenate([coords, tasks], axis=-1), Y.reshape(-1)
+
+
+def split_long_format(X_long):
+    """(coords, task_ids) from long-format rows — the inverse gather of
+    :func:`to_long_format` (round-trips exactly: task ids are stored as
+    float but re-read via round)."""
+    X_long = jnp.atleast_2d(jnp.asarray(X_long))
+    coords = X_long[:, :-1]
+    task_ids = jnp.round(X_long[:, -1]).astype(jnp.int32)
+    return coords, task_ids
+
+
+def _detect_grid(coords: np.ndarray, tasks: np.ndarray, T: int) -> bool:
+    """True iff the panel is a complete data-major grid: m = n·T rows,
+    tasks cycling 0..T-1, the T rows of each block sharing one location."""
+    m = coords.shape[0]
+    if m == 0 or m % T != 0:
+        return False
+    if not np.array_equal(tasks, np.tile(np.arange(T), m // T)):
+        return False
+    blocks = coords.reshape(m // T, T, -1)
+    return bool(np.all(blocks == blocks[:, :1]))
+
+
+@dataclasses.dataclass
+class MultitaskGP(KrylovCachePredictor):
+    """Multitask GP with covariance K_X ⊗ K_T + Σ_noise (GPModel protocol).
+
+    Implements the full protocol — trains via the shared ``fit_gp``
+    driver, serves (query + streaming observe) through an unmodified
+    :class:`repro.serving.PosteriorSession` — on long-format inputs
+    (m, d+1) whose last column is the task id.
+
+    Learned parameters: data-kernel hyperparameters (lengthscale /
+    outputscale, shared across tasks), the low-rank-plus-diagonal task
+    kernel K_T = B·Bᵀ + diag(softplus(v)) with B of shape
+    (num_tasks, task_rank), and per-task noises σ²_τ.  At init K_T ≈ I
+    (independent tasks) with a small random B so correlation gradients
+    are nonzero.
+
+    ``structure`` selects the operator: ``"auto"`` (default) uses the
+    Kronecker operator when the panel is a complete grid and the Hadamard
+    task-id gather otherwise; ``"kronecker"`` asserts grid completeness;
+    ``"hadamard"`` forces the gather (useful to A/B the two on a grid).
+
+    ``kernel_fn(params) -> kernel`` overrides the data-kernel constructor
+    (e.g. a :class:`repro.gp.kernels.DeepKernel` closing over
+    ``params["net"]``; pair it with ``extra_params_init`` to add the
+    network leaves to ``init_params``).  Deep kernels run in dense /
+    blocked modes (the Pallas prepare path needs a stationary kernel's
+    lengthscale).
+
+    Preconditioning and the fused CG step are documented frontiers for
+    Kronecker operators: settings must keep ``precond_rank=0`` (the
+    default factory does; a nonzero rank raises at construction), and
+    ``fuse_cg=True`` warns then falls back to the unfused loop.
+    """
+
+    num_tasks: int = 2
+    task_rank: int = 1
+    kernel_type: str = "rbf"
+    mode: str = "dense"  # dense | blocked | pallas | pallas_sharded
+    block_size: int = 512
+    structure: str = "auto"  # auto | kronecker | hadamard
+    settings: BBMMSettings = dataclasses.field(
+        default_factory=lambda: BBMMSettings(precond_rank=0)
+    )
+    precision: str | None = None  # None follows settings; explicit wins
+    fuse_cg: bool | None = None  # None follows settings; True warns+falls back
+    kernel_fn: Callable | None = None  # params -> data kernel (deep kernels)
+    extra_params_init: Callable | None = None  # key -> extra param leaves
+
+    def __post_init__(self):
+        if self.precision is not None:
+            self.settings = dataclasses.replace(
+                self.settings, precision=self.precision
+            )
+        if self.fuse_cg is not None:
+            self.settings = dataclasses.replace(self.settings, fuse_cg=self.fuse_cg)
+        if self.settings.precond_rank > 0:
+            raise ValueError(
+                "task-kernel preconditioning for Kronecker multitask "
+                "operators is an open frontier — construct MultitaskGP with "
+                "settings.precond_rank=0 "
+                f"(got {self.settings.precond_rank})"
+            )
+        if self.structure not in ("auto", "kronecker", "hadamard"):
+            raise ValueError(f"unknown structure {self.structure!r}")
+
+    # -- GPModel protocol: inputs / parameterization -------------------------
+    def prepare_inputs(self, X) -> MultitaskData:
+        """Classify the long-format panel (complete grid vs heterogeneous)
+        and strip it to hyperparameter-free geometry.  Host-side (runs once
+        per fit/serve state, never inside the solve)."""
+        coords, task_ids = split_long_format(X)
+        tasks_np = np.asarray(task_ids)
+        if tasks_np.size and (tasks_np.min() < 0 or tasks_np.max() >= self.num_tasks):
+            raise ValueError(
+                f"task ids must lie in [0, {self.num_tasks}); got range "
+                f"[{tasks_np.min()}, {tasks_np.max()}]"
+            )
+        grid = self.structure != "hadamard" and _detect_grid(
+            np.asarray(coords), tasks_np, self.num_tasks
+        )
+        if self.structure == "kronecker" and not grid:
+            raise ValueError(
+                "structure='kronecker' requires a complete data-major grid "
+                "(every location observed for tasks 0..T-1, in order); use "
+                "structure='auto' or 'hadamard' for heterogeneous panels"
+            )
+        if grid:
+            return MultitaskData(
+                X=coords[:: self.num_tasks], task_ids=None, num_tasks=self.num_tasks
+            )
+        return MultitaskData(X=coords, task_ids=task_ids, num_tasks=self.num_tasks)
+
+    def init_params(self, X, ard: bool = False, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        d = X if isinstance(X, int) else X.shape[-1] - 1  # last col = task id
+        ell0 = jnp.zeros((d,) if ard else ()) + _inv_softplus(jnp.float32(0.5))
+        k_root, k_extra = jax.random.split(key)
+        params = {
+            "raw_lengthscale": ell0,
+            "raw_outputscale": _inv_softplus(jnp.float32(1.0)),
+            # small random B: K_T ≈ I at init (independent tasks) but with
+            # nonzero ∂(BBᵀ)/∂B so task correlations can be learned (B = 0
+            # is a stationary point of the low-rank term)
+            "raw_task_root": 0.1
+            * jax.random.normal(k_root, (self.num_tasks, self.task_rank)),
+            "raw_task_diag": jnp.full(
+                (self.num_tasks,), _inv_softplus(jnp.float32(1.0))
+            ),
+            "raw_noise": jnp.full((self.num_tasks,), _inv_softplus(jnp.float32(0.1))),
+        }
+        if self.extra_params_init is not None:
+            params.update(self.extra_params_init(k_extra))
+        return params
+
+    def kernel(self, params):
+        """The data kernel K_X (shared across tasks)."""
+        if self.kernel_fn is not None:
+            return self.kernel_fn(params)
+        ctor = KERNELS[self.kernel_type]
+        return ctor(
+            lengthscale=_softplus(params["raw_lengthscale"]),
+            outputscale=_softplus(params["raw_outputscale"]),
+        )
+
+    def task_covariance(self, params):
+        """K_T = B·Bᵀ + diag(softplus(v)) — low-rank-plus-diagonal (T, T)."""
+        B = params["raw_task_root"]
+        return B @ B.T + jnp.diag(_softplus(params["raw_task_diag"]))
+
+    def noise(self, params):
+        """Per-task noise vector σ²_τ of shape (T,)."""
+        return _softplus(params["raw_noise"])
+
+    def operator(self, params, data: MultitaskData) -> KroneckerAddedDiagOperator:
+        """The blackbox K̂ = K_X ⊗ K_T + Σ_noise the engine solves against."""
+        data_op = KernelOperator(
+            kernel=self.kernel(params),
+            X=data.X,
+            mode=self.mode,
+            block_size=self.block_size,
+        )
+        KT = self.task_covariance(params)
+        if data.task_ids is None:
+            base = KroneckerKernelOperator(data_op, KT)
+        else:
+            base = HadamardKroneckerOperator(data_op, KT, data.task_ids)
+        return KroneckerAddedDiagOperator(base, self.noise(params), data.task_ids)
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params, data, y, key):
+        """−MLL of the flat (m,) targets through the Kronecker operator —
+        solve, SLQ log-det and the stochastic gradient trace terms all ride
+        the SAME single-BBMM-call engine as every other model."""
+        return -marginal_log_likelihood(
+            self.operator(params, data), y, key, self.settings
+        )
+
+    def fit(self, X, y, *, steps=100, lr=0.1, key=None, verbose=False):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return fit_gp(self, X, y, steps=steps, lr=lr, key=key, verbose=verbose)
+
+    # posterior_cache / update_cache: inherited from KrylovCachePredictor —
+    # they operate on (operator, y, settings) only, so the multitask cache
+    # IS the exact-GP Krylov cache over the (m, m) Kronecker system, and
+    # PosteriorSession.observe streams new (x, task, y) rows through
+    # extend_posterior_cache's warm-started CG + basis recycling unchanged.
+
+    # -- prediction -----------------------------------------------------------
+    def _row_tasks(self, data: MultitaskData):
+        """(m,) task id of every training row (tiled for the grid case)."""
+        if data.task_ids is not None:
+            return data.task_ids
+        n = data.X.shape[0]
+        return jnp.tile(jnp.arange(data.num_tasks, dtype=jnp.int32), n)
+
+    def _query_parts(self, Xstar):
+        """Split + validate long-format query rows (host-side range check
+        when the ids are concrete; traced queries skip it — JAX gather
+        clamping would otherwise silently serve the wrong task)."""
+        coords, qt = split_long_format(Xstar)
+        if not isinstance(qt, jax.core.Tracer):
+            t = np.asarray(qt)
+            if t.size and (t.min() < 0 or t.max() >= self.num_tasks):
+                raise ValueError(
+                    f"query task ids must lie in [0, {self.num_tasks}); got "
+                    f"range [{t.min()}, {t.max()}]"
+                )
+        return coords, qt
+
+    def _cross_cov(self, data: MultitaskData, KT, Kx, qt):
+        """k((X_train, τ_train), (X*, τ*)) of shape (m_train, s) from the
+        shared data cross block Kx = K_X(X_train, X*):
+        K_X(xᵢ, x*_q) · K_T[τᵢ, τ*_q]."""
+        if data.task_ids is None:
+            task_part = KT[:, qt]  # (T, s)
+            n, s = Kx.shape
+            return (Kx[:, None, :] * task_part[None, :, :]).reshape(-1, s)
+        return Kx * KT[data.task_ids][:, qt]
+
+    def _cross(self, params, data: MultitaskData, coords):
+        """The data-kernel cross block K_X(X_train, X*) under the model's
+        precision policy — the shared :class:`KrylovCachePredictor` helper
+        on the panel's data coordinates."""
+        return super()._cross(params, data.X, coords)
+
+    def _cached_mean(self, data: MultitaskData, cross, KT, Kx, alpha, qt):
+        """Posterior mean k*ᵀα through ONE test-vs-train cross matmul.
+
+        The per-training-row task weighting is folded into α first
+        (W[i, τ] = Σ_{rows of point i} K_T[τ_row, τ]·α_row), so the heavy
+        O(s·n·T) contraction is a single ``cross.contract`` over the
+        shared Kx block — honoring the precision policy, keeping
+        mixed-precision serving consistent with training."""
+        if data.task_ids is None:
+            W = alpha.reshape(-1, data.num_tasks) @ KT  # (n, T)
+        else:
+            W = alpha[:, None] * KT[data.task_ids]  # (m, T)
+        out = cross.contract(Kx.T, W)  # (s, T)
+        return jnp.take_along_axis(out, qt[:, None], axis=1)[:, 0]
+
+    def predict_cached(self, params, data, cache, Xstar, *, full_cov=False):
+        """Serve mean + variance from the Krylov cache — zero CG iterations.
+
+        Variance is the conservative Rayleigh–Ritz bound (never below the
+        exact posterior variance) plus the query row's task noise.  The
+        data cross block K_X(X_train, X*) is evaluated ONCE and shared by
+        the mean contraction and the variance expansion."""
+        coords, qt = self._query_parts(Xstar)
+        kern = self.kernel(params)
+        KT = self.task_covariance(params)
+        cross = self._cross(params, data, coords)
+        Kx = cross.to_dense()  # the one kernel evaluation per query
+        mean = self._cached_mean(data, cross, KT, Kx, cache.alpha, qt)
+        Kxs = self._cross_cov(data, KT, Kx, qt)
+        if full_cov:
+            if cache.basis is None:
+                raise ValueError(
+                    "cache was built with variance_cache=False; rebuild with "
+                    "variance_cache=True for covariance queries"
+                )
+            v = cache.basis.T @ Kxs
+            w = jax.scipy.linalg.cho_solve((cache.gram_chol, True), v)
+            Kss = kern(coords, coords) * KT[qt][:, qt]
+            return mean, Kss - v.T @ w
+        var = kern.diag(coords) * jnp.diagonal(KT)[qt] - cached_inv_quad(cache, Kxs)
+        return mean, jnp.clip(var, 1e-8) + self.noise(params)[qt]
+
+    def predict(self, params, data, y, Xstar, *, full_cov=False, key=None):
+        """Posterior mean and per-task predictive variance at long-format
+        query rows (x*, τ*) — exact mBCG solves for the variance, the same
+        cached-mean program as ``predict_cached`` for the mean."""
+        coords, qt = self._query_parts(Xstar)
+        cache = self.posterior_cache(params, data, y, key=key, variance_cache=False)
+        op = self.operator(params, data)
+        kern = self.kernel(params)
+        KT = self.task_covariance(params)
+        cross = self._cross(params, data, coords)
+        Kx = cross.to_dense()
+        mean = self._cached_mean(data, cross, KT, Kx, cache.alpha, qt)
+        Kxs = self._cross_cov(data, KT, Kx, qt)
+        solves = bbmm_solve(op, Kxs, self.settings, precond=cache.precond)
+        if full_cov:
+            Kss = kern(coords, coords) * KT[qt][:, qt]
+            return mean, Kss - Kxs.T @ solves
+        var = kern.diag(coords) * jnp.diagonal(KT)[qt] - jnp.sum(Kxs * solves, axis=0)
+        return mean, jnp.clip(var, 1e-8) + self.noise(params)[qt]

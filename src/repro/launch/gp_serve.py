@@ -9,15 +9,29 @@ answering batched mean/variance queries entirely from the posterior cache
 (zero CG iterations per request), periodically interrupted by new
 observations that are folded in *incrementally* — an exact rank-k
 Woodbury refresh for SGPR/BLR (no CG at all), warm-started CG with
-Krylov-basis recycling for ExactGP/DKL, full rebuild for SKI — under the
-session's ``max_staleness`` policy.  Reports cached QPS (query points per
-second) and the append-vs-rebuild latency split.
+Krylov-basis recycling for ExactGP/DKL/MultitaskGP, full rebuild for SKI —
+under the session's ``max_staleness`` policy.  Reports cached QPS (query
+points per second) and the append-vs-rebuild latency split.
+
+``--threads N`` switches to the **thread-pool request driver**: N worker
+threads issue query batches concurrently while the main thread streams
+observations and kicks double-buffered refreshes
+(``session.rebuild_async``) onto a dedicated refresher worker — vN keeps
+serving under the concurrent load while vN+1 builds, and buffers that a
+mid-build mutation made stale are discarded instead of swapped (counted
+in the report).
+
+``--model multitask`` serves a :class:`repro.gp.MultitaskGP` over
+long-format (x, task) rows — queries carry a task column and streamed
+observations append complete task blocks (the Kronecker-preserving case).
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
@@ -29,11 +43,21 @@ from repro.gp import (
     BayesianLinearRegression,
     DKLExactGP,
     ExactGP,
+    MultitaskGP,
+    to_long_format,
 )
 from repro.serving import PosteriorSession
 
+MODELS = ("exact", "sgpr", "ski", "dkl", "blr", "multitask")
 
-def build_model(name: str, *, max_cg_iters: int = 25, precision: str | None = None):
+
+def build_model(
+    name: str,
+    *,
+    max_cg_iters: int = 25,
+    precision: str | None = None,
+    num_tasks: int = 2,
+):
     settings = BBMMSettings(num_probes=8, max_cg_iters=max_cg_iters)
     if name == "exact":
         return ExactGP(settings=settings, precision=precision)
@@ -45,14 +69,55 @@ def build_model(name: str, *, max_cg_iters: int = 25, precision: str | None = No
         return DKLExactGP(hidden=(16, 2), settings=settings, precision=precision)
     if name == "blr":
         return BayesianLinearRegression(precision=precision)
-    raise ValueError(f"unknown model {name!r} (exact|sgpr|ski|dkl|blr)")
+    if name == "multitask":
+        # task-kernel preconditioning is a documented frontier: rank 0
+        return MultitaskGP(
+            num_tasks=num_tasks,
+            settings=BBMMSettings(
+                num_probes=8, max_cg_iters=max_cg_iters, precond_rank=0
+            ),
+            precision=precision,
+        )
+    raise ValueError(f"unknown model {name!r} ({'|'.join(MODELS)})")
 
 
-def _toy(key, n, d):
+def _task_targets(coords, T, key):
+    """Per-task targets: one shared latent signal, task-specific scale."""
+    latent = jnp.sin(3 * coords[:, 0]) * jnp.cos(2 * coords[:, -1])
+    scales = 1.0 + 0.3 * jnp.arange(T)
+    return latent[:, None] * scales[None, :] + 0.05 * jax.random.normal(
+        key, (coords.shape[0], T)
+    )
+
+
+def _toy(key, n, d, num_tasks=0):
+    """(X, y) training data — long-format rows when ``num_tasks`` > 0."""
     kx, ky = jax.random.split(key)
-    X = jax.random.uniform(kx, (n, d)) * 2 - 1
-    y = jnp.sin(3 * X[:, 0]) * jnp.cos(2 * X[:, -1]) + 0.05 * jax.random.normal(ky, (n,))
-    return X, y
+    coords = jax.random.uniform(kx, (n, d)) * 2 - 1
+    if num_tasks:
+        return to_long_format(coords, _task_targets(coords, num_tasks, ky))
+    y = jnp.sin(3 * coords[:, 0]) * jnp.cos(2 * coords[:, -1])
+    return coords, y + 0.05 * jax.random.normal(ky, (n,))
+
+
+def _query_batch(key, batch, d, num_tasks=0):
+    kq, kt = jax.random.split(key)
+    coords = jax.random.uniform(kq, (batch, d)) * 2 - 1
+    if num_tasks:
+        tasks = jax.random.randint(kt, (batch,), 0, num_tasks).astype(jnp.float32)
+        return jnp.concatenate([coords, tasks[:, None]], axis=-1)
+    return coords
+
+
+def _observation(key, k, d, num_tasks=0):
+    """k new observations — a complete task block per point for multitask
+    (the Kronecker-structure-preserving append)."""
+    kx, ky = jax.random.split(key)
+    coords = jax.random.uniform(kx, (k, d)) * 2 - 1
+    if num_tasks:
+        return to_long_format(coords, _task_targets(coords, num_tasks, ky))
+    yn = jnp.sin(3 * coords[:, 0]) * jnp.cos(2 * coords[:, -1])
+    return coords, yn + 0.05 * jax.random.normal(ky, (k,))
 
 
 def run_serve(
@@ -68,14 +133,18 @@ def run_serve(
     fit_steps: int = 0,
     max_cg_iters: int = 25,
     precision: str | None = None,
+    num_tasks: int = 2,
     seed: int = 0,
     verbose: bool = True,
 ) -> dict:
     """Drive the request loop; return the metric row (also printed)."""
     key = jax.random.PRNGKey(seed)
     kd, kq, ko = jax.random.split(key, 3)
-    X, y = _toy(kd, n, d)
-    gp = build_model(model, max_cg_iters=max_cg_iters, precision=precision)
+    T = num_tasks if model == "multitask" else 0
+    X, y = _toy(kd, n, d, T)
+    gp = build_model(
+        model, max_cg_iters=max_cg_iters, precision=precision, num_tasks=num_tasks
+    )
     if fit_steps > 0:
         params, _ = gp.fit(X, y, steps=fit_steps)
     else:
@@ -87,23 +156,19 @@ def run_serve(
     t_build = time.perf_counter() - t0
 
     # warm the query path (compile) before timing
-    Xw = jax.random.uniform(jax.random.fold_in(kq, requests + 1), (batch, d)) * 2 - 1
+    Xw = _query_batch(jax.random.fold_in(kq, requests + 1), batch, d, T)
     jax.block_until_ready(session.query(Xw)[0])
 
     q_time = 0.0
     appends, rebuilds = [], []
     for r in range(requests):
-        Xq = jax.random.uniform(jax.random.fold_in(kq, r), (batch, d)) * 2 - 1
+        Xq = _query_batch(jax.random.fold_in(kq, r), batch, d, T)
         t0 = time.perf_counter()
         mean, var = session.query(Xq)
         jax.block_until_ready(mean)
         q_time += time.perf_counter() - t0
         if observe_every and (r + 1) % observe_every == 0:
-            kx, ky2 = jax.random.split(jax.random.fold_in(ko, r))
-            Xn = jax.random.uniform(kx, (observe_batch, d)) * 2 - 1
-            yn = jnp.sin(3 * Xn[:, 0]) * jnp.cos(2 * Xn[:, -1]) + 0.05 * jax.random.normal(
-                ky2, (observe_batch,)
-            )
+            Xn, yn = _observation(jax.random.fold_in(ko, r), observe_batch, d, T)
             t0 = time.perf_counter()
             path = session.observe(Xn, yn)
             # block on the UPDATED CACHE, not just the concatenated data —
@@ -154,10 +219,113 @@ def run_serve(
     return metrics
 
 
+def run_serve_threaded(
+    *,
+    model: str = "sgpr",
+    n: int = 1000,
+    d: int = 2,
+    requests: int = 40,
+    batch: int = 128,
+    observe_every: int = 8,
+    observe_batch: int = 1,
+    max_staleness: int = 8,
+    fit_steps: int = 0,
+    max_cg_iters: int = 25,
+    precision: str | None = None,
+    num_tasks: int = 2,
+    threads: int = 4,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Concurrent request driver over the double-buffered session.
+
+    ``threads`` query workers hammer ``session.query`` while the main
+    thread streams observations and schedules ``rebuild_async`` refreshes
+    on a dedicated worker — serving never blocks on a rebuild: queries in
+    flight keep reading vN until the vN+1 buffer swaps in atomically (or
+    is discarded because another observation landed mid-build).
+    """
+    key = jax.random.PRNGKey(seed)
+    kd, kq, ko = jax.random.split(key, 3)
+    T = num_tasks if model == "multitask" else 0
+    X, y = _toy(kd, n, d, T)
+    gp = build_model(
+        model, max_cg_iters=max_cg_iters, precision=precision, num_tasks=num_tasks
+    )
+    if fit_steps > 0:
+        params, _ = gp.fit(X, y, steps=fit_steps)
+    else:
+        params = gp.init_params(X)
+    session = PosteriorSession(gp, params, X, y, max_staleness=max_staleness)
+
+    # warm the query path before opening the floodgates
+    jax.block_until_ready(session.query(_query_batch(kq, batch, d, T))[0])
+
+    latencies = []
+    lat_lock = threading.Lock()
+
+    def one_query(r):
+        Xq = _query_batch(jax.random.fold_in(kq, r), batch, d, T)
+        t0 = time.perf_counter()
+        mean, _ = session.query(Xq)
+        jax.block_until_ready(mean)
+        dt = time.perf_counter() - t0
+        with lat_lock:
+            latencies.append(dt)
+
+    refresh_futures = []
+    t_start = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=threads) as pool, ThreadPoolExecutor(
+        max_workers=1
+    ) as refresher:
+        query_futures = []
+        for r in range(requests):
+            query_futures.append(pool.submit(one_query, r))
+            if observe_every and (r + 1) % observe_every == 0:
+                Xn, yn = _observation(jax.random.fold_in(ko, r), observe_batch, d, T)
+                path = session.observe(Xn, yn)
+                # double-buffered refresh off the request path — but only
+                # after an incremental append: when observe already fell
+                # back to a full rebuild, the cache IS fresh and another
+                # build would be pure duplicate work
+                if path == "append":
+                    refresh_futures.append(session.rebuild_async(refresher))
+        for f in query_futures:
+            f.result()
+    wall = time.perf_counter() - t_start
+    swaps = [f.result() for f in refresh_futures]
+    swapped = sum(1 for s in swaps if s is not None)
+    discarded = len(swaps) - swapped
+
+    qps = requests * batch / wall
+    metrics = {
+        "model": f"serve_threaded_{model}",
+        "n": n,
+        "batch": batch,
+        "requests": requests,
+        "threads": threads,
+        "concurrent_qps": qps,
+        "query_ms_p50": sorted(latencies)[len(latencies) // 2] * 1e3,
+        "async_refreshes_swapped": swapped,
+        "async_refreshes_discarded": discarded,
+        "final_n": session.n,
+        "cache_version": session.cache_info.version,
+        "cache_staleness": session.cache_info.staleness,
+    }
+    if verbose:
+        print(
+            f"[{model} x{threads} threads] n={n}→{session.n} | "
+            f"{requests} x {batch}-pt queries: {qps:,.0f} pts/s concurrent "
+            f"(p50 {metrics['query_ms_p50']:.1f} ms) | double-buffered "
+            f"refreshes: {swapped} swapped, {discarded} discarded | "
+            f"cache v{metrics['cache_version']}"
+        )
+    return metrics
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--model", default="sgpr",
-                    choices=["exact", "sgpr", "ski", "dkl", "blr"])
+    ap.add_argument("--model", default="sgpr", choices=list(MODELS))
     ap.add_argument("--n", type=int, default=1000)
     ap.add_argument("--d", type=int, default=2)
     ap.add_argument("--requests", type=int, default=20)
@@ -170,14 +338,28 @@ def main(argv=None):
                     help="Adam steps before serving (0 = serve at init params)")
     ap.add_argument("--max-cg-iters", type=int, default=25)
     ap.add_argument("--precision", default=None, choices=[None, "highest", "mixed"])
+    ap.add_argument("--num-tasks", type=int, default=2,
+                    help="T for --model multitask (ignored otherwise)")
+    ap.add_argument("--threads", type=int, default=0,
+                    help="run the concurrent thread-pool driver with this "
+                    "many query workers (0 = sequential driver)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.threads > 0:
+        return run_serve_threaded(
+            model=args.model, n=args.n, d=args.d, requests=args.requests,
+            batch=args.batch, observe_every=args.observe_every,
+            observe_batch=args.observe_batch, max_staleness=args.max_staleness,
+            fit_steps=args.fit_steps, max_cg_iters=args.max_cg_iters,
+            precision=args.precision, num_tasks=args.num_tasks,
+            threads=args.threads, seed=args.seed,
+        )
     return run_serve(
         model=args.model, n=args.n, d=args.d, requests=args.requests,
         batch=args.batch, observe_every=args.observe_every,
         observe_batch=args.observe_batch, max_staleness=args.max_staleness,
         fit_steps=args.fit_steps, max_cg_iters=args.max_cg_iters,
-        precision=args.precision, seed=args.seed,
+        precision=args.precision, num_tasks=args.num_tasks, seed=args.seed,
     )
 
 

@@ -23,7 +23,13 @@ version/fingerprint discipline:
     refresher polls ``stale()`` (or just ``staleness > 0``) and calls
     ``rebuild()`` off the request path; the cache+info swap is atomic
     under the session lock, so concurrent ``query`` calls always see a
-    consistent (cache, fingerprint) pair.
+    consistent (cache, fingerprint) pair;
+  * ``rebuild_async(executor)`` is the **double-buffered** variant: vN
+    keeps serving while vN+1 builds on a worker, and the finished buffer
+    swaps in only on fingerprint match (a mutation that landed mid-build
+    invalidates the buffer, which is discarded) — the thread-pool request
+    driver in ``repro.launch.gp_serve`` exercises it under concurrent
+    query traffic.
 
 Queries (``query``) are served entirely from the cache — zero CG
 iterations for every model (guarded by tests/test_serving.py).
@@ -96,6 +102,14 @@ class PosteriorSession:
         self.model = model
         self.max_staleness = int(max_staleness)
         self._lock = threading.RLock()
+        # single-flight gate for lazy rebuilds: N query workers hitting a
+        # stale cache run ONE build (the rest wait for the swap), not N
+        self._rebuild_gate = threading.Lock()
+        # the last internally-consistent (params, data, cache) triple —
+        # what queries serve while an incremental append is in flight
+        # (state fingerprint already moved, refreshed cache not swapped yet)
+        self._serving = None
+        self._appends_in_flight = 0
         self._params = params
         self._X = jnp.atleast_2d(jnp.asarray(X))
         self._y = jnp.atleast_1d(jnp.asarray(y))
@@ -151,22 +165,40 @@ class PosteriorSession:
         with self._lock:
             return self._cache is None or self._info.fingerprint != self._state_fp
 
+    def _build_and_swap(self, params, data, y, fp) -> CacheInfo | None:
+        """Build a cache for the snapshotted state and swap it in atomically
+        — but only while the fingerprint still matches (or nothing is live
+        yet): a mutation that landed mid-build must not be clobbered by the
+        now-stale buffer.  Returns the swapped CacheInfo, or None when the
+        buffer was discarded."""
+        cache = self.model.posterior_cache(params, data, y)
+        with self._lock:
+            if self._state_fp != fp and self._cache is not None:
+                return None  # state moved on mid-build: discard buffer
+            self._version += 1
+            self._cache = cache
+            self._serving = (params, data, cache)
+            self._info = CacheInfo(
+                version=self._version, fingerprint=fp,
+                n=int(y.shape[0]), staleness=0,
+            )
+            return self._info
+
     def rebuild(self) -> CacheInfo:
         """Full posterior-cache build from the current (params, X, y).
 
         This is the async-refresh hook: it can run on a background worker
         (it only *reads* serving state until the final atomic swap), while
-        queries keep being served from the previous cache."""
+        queries keep being served from the previous cache.  Like
+        ``rebuild_async``, the swap is fingerprint-gated: if a mutation
+        landed mid-build, the stale buffer is discarded (the live — newer —
+        cache and its info are returned instead of being clobbered)."""
         with self._lock:
             params, data, y, fp = self._params, self._data, self._y, self._state_fp
-        cache = self.model.posterior_cache(params, data, y)
+        info = self._build_and_swap(params, data, y, fp)
+        if info is not None:
+            return info
         with self._lock:
-            self._version += 1
-            self._cache = cache
-            self._info = CacheInfo(
-                version=self._version, fingerprint=fp,
-                n=int(y.shape[0]), staleness=0,
-            )
             return self._info
 
     def refresh_if_stale(self) -> bool:
@@ -177,6 +209,33 @@ class PosteriorSession:
         if needs:
             self.rebuild()
         return needs
+
+    def rebuild_async(self, executor=None):
+        """Double-buffered refresh: build vN+1 on a worker while vN serves.
+
+        Snapshots the serving state under the lock, builds the next cache
+        entirely OFF the request path (queries keep hitting the previous
+        cache — ``query`` never blocks on the build), then swaps it in
+        atomically **only if the state fingerprint still matches** the
+        snapshot.  If a mutation (``observe`` / ``update_params``) landed
+        while the build was in flight, the now-stale buffer is discarded
+        (returns None) instead of clobbering the newer state — the caller
+        just schedules another refresh.
+
+        ``executor``: a ``concurrent.futures.Executor`` to run the build
+        on (returns a Future resolving to the swapped :class:`CacheInfo`
+        or None); None runs the build inline (returns the result
+        directly) — handy for tests and single-threaded drivers.
+        """
+        with self._lock:
+            params, data, y, fp = self._params, self._data, self._y, self._state_fp
+
+        def _build():
+            return self._build_and_swap(params, data, y, fp)
+
+        if executor is None:
+            return _build()
+        return executor.submit(_build)
 
     # -- mutations ----------------------------------------------------------
     def update_params(self, params) -> None:
@@ -194,6 +253,16 @@ class PosteriorSession:
         exact rank-k Woodbury refresh or Krylov-recycled warm-started CG)
         or ``"rebuild"`` (full build: non-streaming model, no valid cache,
         or the ``max_staleness`` budget was exhausted).
+
+        The appended state is derived and **validated before it is
+        installed** (``prepare_inputs`` on the concatenated panel runs
+        first — a rejected append, e.g. an out-of-range multitask task id,
+        raises and leaves the session exactly as it was), and the
+        incremental ``update_cache`` solve runs **off the session lock**,
+        so concurrent ``query`` workers keep serving the previous cache
+        during the append; the refreshed cache swaps in fingerprint-gated,
+        like ``rebuild_async`` (a mutation racing in mid-update leaves the
+        session stale rather than clobbered — the next query rebuilds).
         """
         X_new = jnp.atleast_2d(jnp.asarray(X_new))
         y_new = jnp.atleast_1d(jnp.asarray(y_new))
@@ -202,35 +271,74 @@ class PosteriorSession:
                 f"X_new rows ({X_new.shape[0]}) != y_new length ({y_new.shape[0]})"
             )
         with self._lock:
+            X_full = jnp.concatenate([self._X, X_new], axis=0)
+            y_full = jnp.concatenate([self._y, y_new], axis=0)
+            # derive/validate BEFORE mutating: if the model rejects the
+            # appended panel, the session state is untouched
+            data = self.model.prepare_inputs(X_full)
             can_stream = (
                 self.streaming
                 and self._cache is not None
                 and self._info.fingerprint == self._state_fp
                 and self._info.staleness < self.max_staleness
             )
-            self._X = jnp.concatenate([self._X, X_new], axis=0)
-            self._y = jnp.concatenate([self._y, y_new], axis=0)
-            self._data = self.model.prepare_inputs(self._X)
-            self._state_fp = fingerprint((self._params, self._X, self._y))
+            params, cache = self._params, self._cache
+            staleness = self._info.staleness if self._info is not None else 0
+            self._X, self._y, self._data = X_full, y_full, data
+            fp = fingerprint((params, X_full, y_full))
+            self._state_fp = fp
             if can_stream:
-                self._cache = self.model.update_cache(
-                    self._params, self._data, self._y, self._cache, X_new, y_new
-                )
-                self._version += 1
-                self._info = CacheInfo(
-                    version=self._version, fingerprint=self._state_fp,
-                    n=self.n, staleness=self._info.staleness + 1,
-                )
-                return "append"
-        self.rebuild()
-        return "rebuild"
+                v0 = self._version
+                self._appends_in_flight += 1
+        if not can_stream:
+            self.rebuild()
+            return "rebuild"
+        try:
+            new_cache = self.model.update_cache(
+                params, data, y_full, cache, X_new, y_new
+            )
+            with self._lock:
+                # discard if another mutation landed (fingerprint) or any
+                # other build already swapped a cache in (version) — never
+                # clobber a fresher full build with this incremental one
+                if self._state_fp == fp and self._version == v0:
+                    self._version += 1
+                    self._cache = new_cache
+                    self._serving = (params, data, new_cache)
+                    self._info = CacheInfo(
+                        version=self._version, fingerprint=fp,
+                        n=int(y_full.shape[0]), staleness=staleness + 1,
+                    )
+        finally:
+            with self._lock:
+                self._appends_in_flight -= 1
+        return "append"
 
     # -- queries ------------------------------------------------------------
     def query(self, Xstar, **kwargs):
         """Posterior (mean, variance) at Xstar, served from the cache —
-        zero CG iterations.  Rebuilds first if the cache is stale."""
-        if self.stale():
-            self.rebuild()
-        with self._lock:
-            params, data, cache = self._params, self._data, self._cache
+        zero CG iterations.  Rebuilds first if the cache is stale —
+        single-flight under concurrency: when many query workers see the
+        same stale cache, one runs the build and the rest wait for the
+        swap instead of launching duplicates (async refreshers avoid even
+        the wait via ``rebuild_async``).  The (params, data, cache)
+        snapshot is taken only when cache and state fingerprints agree
+        under the lock, so a mutation racing in between observe's state
+        update and its rebuild can never pair new data with an old cache;
+        while an incremental append is in flight, queries serve the
+        previous consistent (params, data, cache) triple instead."""
+        while True:
+            with self._lock:
+                if self._cache is not None and self._info.fingerprint == self._state_fp:
+                    params, data, cache = self._params, self._data, self._cache
+                    break
+                # an incremental append is computing its refreshed cache
+                # off-lock: serve the PREVIOUS consistent triple instead of
+                # stalling on — or duplicating — the in-progress update
+                if self._appends_in_flight > 0 and self._serving is not None:
+                    params, data, cache = self._serving
+                    break
+            with self._rebuild_gate:
+                if self.stale():  # may have been rebuilt while we waited
+                    self.rebuild()
         return self.model.predict_cached(params, data, cache, jnp.asarray(Xstar), **kwargs)

@@ -1,0 +1,547 @@
+"""Multitask GP subsystem (ISSUE 5): Kronecker-structured BBMM.
+
+Covers the acceptance criteria:
+  * Kronecker / Hadamard operator matmul, diagonal and row parity against
+    the materialized dense (nT × nT) matrix;
+  * loss-gradient parity against a dense Cholesky reference at small n·T;
+  * per-task-noise solves, the Hadamard gather round-trip, pallas-vs-dense
+    mode parity;
+  * MultitaskGP protocol conformance + training through the shared
+    ``fit_gp`` driver + posterior mean/variance parity (≤ 1e-4) against
+    the dense reference in both dense and pallas modes;
+  * ``PosteriorSession`` observe/query round-trip (streaming appends,
+    including the grid→Hadamard degrade) and the loud-but-graceful
+    ``fuse_cg`` fallback.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BBMMSettings,
+    DenseOperator,
+    HadamardKroneckerOperator,
+    KroneckerAddedDiagOperator,
+    KroneckerKernelOperator,
+    build_preconditioner,
+    solve as bbmm_solve,
+)
+from repro.gp import (
+    CrossKernelOperator,
+    DeepKernel,
+    KernelOperator,
+    MultitaskGP,
+    RBFKernel,
+    fit_gp,
+    missing_protocol_methods,
+    split_long_format,
+    supports_streaming,
+    to_long_format,
+)
+from repro.serving import PosteriorSession
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.multitask
+
+SET = BBMMSettings(num_probes=4, max_cg_iters=80, cg_tol=1e-7, precond_rank=0)
+
+
+def grid_problem(key, n=10, T=3, d=2):
+    kx, ky = jax.random.split(key)
+    X = jax.random.uniform(kx, (n, d))
+    latent = jnp.sin(3.0 * X[:, :1])
+    Y = latent * (1.0 + 0.3 * jnp.arange(T)) + 0.1 * jax.random.normal(ky, (n, T))
+    return to_long_format(X, Y)
+
+
+def task_matrix(key, T):
+    B = 0.5 * jax.random.normal(key, (T, 2))
+    return B @ B.T + jnp.diag(0.5 + jnp.arange(T, dtype=jnp.float32) * 0.1)
+
+
+def kron_reference(kern, X, KT, noise=None):
+    """Materialized dense multitask covariance (data-major layout)."""
+    K = jnp.kron(kern(X, X), KT)
+    if noise is not None:
+        K = K + jnp.diag(jnp.tile(noise, X.shape[0]))
+    return K
+
+
+class TestKroneckerOperator:
+    def setup_method(self):
+        key = jax.random.PRNGKey(0)
+        self.n, self.T = 9, 3
+        self.X = jax.random.uniform(jax.random.fold_in(key, 1), (self.n, 2))
+        self.kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.3))
+        self.KT = task_matrix(jax.random.fold_in(key, 2), self.T)
+        self.op = KroneckerKernelOperator(
+            KernelOperator(kernel=self.kern, X=self.X, mode="dense"), self.KT
+        )
+        self.dense = kron_reference(self.kern, self.X, self.KT)
+
+    def test_matmul_matches_dense(self):
+        M = jax.random.normal(jax.random.PRNGKey(3), (self.n * self.T, 5))
+        np.testing.assert_allclose(
+            self.op.matmul(M), self.dense @ M, rtol=1e-4, atol=1e-4
+        )
+        # vector RHS
+        np.testing.assert_allclose(
+            self.op.matmul(M[:, 0]), self.dense @ M[:, 0], rtol=1e-4, atol=1e-4
+        )
+
+    def test_batched_matmul(self):
+        M = jax.random.normal(jax.random.PRNGKey(4), (2, self.n * self.T, 4))
+        np.testing.assert_allclose(
+            self.op.matmul(M), self.dense @ M, rtol=1e-4, atol=1e-4
+        )
+
+    def test_diagonal_and_rows(self):
+        np.testing.assert_allclose(
+            self.op.diagonal(), jnp.diagonal(self.dense), rtol=1e-5, atol=1e-6
+        )
+        for i in [0, 7, self.n * self.T - 1]:
+            np.testing.assert_allclose(
+                self.op.row(i), self.dense[i], rtol=1e-4, atol=1e-6
+            )
+
+    def test_per_task_noise_wrapper(self):
+        noise = jnp.array([0.1, 0.5, 1.0])
+        hat = KroneckerAddedDiagOperator(self.op, noise)
+        ref = kron_reference(self.kern, self.X, self.KT, noise)
+        M = jax.random.normal(jax.random.PRNGKey(5), (self.n * self.T, 3))
+        np.testing.assert_allclose(hat.matmul(M), ref @ M, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            hat.diagonal(), jnp.diagonal(ref), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(hat.row(4), ref[4], rtol=1e-4, atol=1e-6)
+
+    def test_per_task_noise_solve_matches_dense(self):
+        """Engine solves through distinct per-task noises match linalg."""
+        noise = jnp.array([0.05, 0.4, 1.5])
+        hat = KroneckerAddedDiagOperator(self.op, noise)
+        ref = kron_reference(self.kern, self.X, self.KT, noise)
+        B = jax.random.normal(jax.random.PRNGKey(6), (self.n * self.T, 4))
+        sol = bbmm_solve(hat, B, SET)
+        np.testing.assert_allclose(
+            sol, jnp.linalg.solve(ref, B), rtol=1e-3, atol=1e-4
+        )
+
+    def test_precond_rank_raises_loudly(self):
+        hat = KroneckerAddedDiagOperator(self.op, jnp.array([0.1, 0.1, 0.1]))
+        with pytest.raises(NotImplementedError, match="frontier"):
+            build_preconditioner(hat, rank=5)
+
+    def test_fused_cg_warns_and_falls_back(self):
+        hat = KroneckerAddedDiagOperator(self.op, jnp.array([0.1, 0.1, 0.1]))
+        with pytest.warns(UserWarning, match="frontier"):
+            assert hat.fused_cg_step_fn() is None
+
+
+class TestHadamardOperator:
+    def test_gather_round_trip_on_complete_grid(self):
+        """Hadamard with tiled task ids on a complete grid IS the
+        Kronecker operator entrywise, and the long-format encode/decode
+        round-trips the panel exactly."""
+        key = jax.random.PRNGKey(1)
+        n, T = 8, 3
+        X = jax.random.uniform(key, (n, 2))
+        Y = jax.random.normal(jax.random.fold_in(key, 1), (n, T))
+        Xl, yl = to_long_format(X, Y)
+        coords, ids = split_long_format(Xl)
+        np.testing.assert_array_equal(np.asarray(ids), np.tile(np.arange(T), n))
+        np.testing.assert_allclose(coords, jnp.repeat(X, T, axis=0), atol=0)
+        np.testing.assert_allclose(yl, Y.reshape(-1), atol=0)
+
+        kern = RBFKernel(lengthscale=jnp.float32(0.4), outputscale=jnp.float32(1.0))
+        KT = task_matrix(jax.random.fold_in(key, 2), T)
+        kron = KroneckerKernelOperator(
+            KernelOperator(kernel=kern, X=X, mode="dense"), KT
+        )
+        had = HadamardKroneckerOperator(
+            KernelOperator(kernel=kern, X=coords, mode="dense"), KT, ids
+        )
+        np.testing.assert_allclose(
+            had.to_dense(), kron.to_dense(), rtol=1e-4, atol=1e-5
+        )
+
+    def test_heterogeneous_panel_matches_dense(self):
+        """Shuffled single-task-per-point panel: matmul/diag/row vs the
+        explicit K_X ∘ gathered-K_T matrix."""
+        key = jax.random.PRNGKey(2)
+        m, T = 17, 4
+        coords = jax.random.uniform(key, (m, 2))
+        ids = jax.random.randint(jax.random.fold_in(key, 1), (m,), 0, T)
+        kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(0.8))
+        KT = task_matrix(jax.random.fold_in(key, 2), T)
+        op = HadamardKroneckerOperator(
+            KernelOperator(kernel=kern, X=coords, mode="dense"), KT, ids
+        )
+        dense = kern(coords, coords) * KT[ids][:, ids]
+        M = jax.random.normal(jax.random.fold_in(key, 3), (m, 5))
+        np.testing.assert_allclose(op.matmul(M), dense @ M, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(
+            op.diagonal(), jnp.diagonal(dense), rtol=1e-5, atol=1e-6
+        )
+        np.testing.assert_allclose(op.row(5), dense[5], rtol=1e-4, atol=1e-6)
+        # per-row (task-gathered) noise
+        noise = 0.1 + 0.2 * jnp.arange(T, dtype=jnp.float32)
+        hat = KroneckerAddedDiagOperator(op, noise, ids)
+        np.testing.assert_allclose(
+            hat.diagonal(), jnp.diagonal(dense) + noise[ids], rtol=1e-5, atol=1e-6
+        )
+
+
+class TestModeParity:
+    def test_pallas_matches_dense_operator(self):
+        """mode='pallas' routes the Kronecker data matmul through the fused
+        Pallas kernel (interpret on CPU) — parity with dense, prepared and
+        unprepared."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(3), n=11, T=3)
+        gp_d = MultitaskGP(num_tasks=3, settings=SET)
+        gp_p = MultitaskGP(num_tasks=3, mode="pallas", settings=SET)
+        params = gp_d.init_params(Xl)
+        data = gp_d.prepare_inputs(Xl)
+        M = jax.random.normal(jax.random.PRNGKey(4), (33, 5))
+        ref = gp_d.operator(params, data).matmul(M)
+        op_p = gp_p.operator(params, data)
+        np.testing.assert_allclose(op_p.matmul(M), ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            op_p.prepare().matmul(M), ref, rtol=1e-4, atol=1e-4
+        )
+
+    @pytest.mark.mixed_precision
+    def test_mixed_precision_recurses_into_data_kernel(self):
+        """with_compute_dtype reaches the data-kernel matmul (bf16 tiles)
+        while the task contraction and noise stay f32 — the result is
+        bf16-close to the f32 operator."""
+        Xl, _ = grid_problem(jax.random.PRNGKey(5), n=16, T=2)
+        gp = MultitaskGP(num_tasks=2, settings=SET)
+        params = gp.init_params(Xl)
+        data = gp.prepare_inputs(Xl)
+        op = gp.operator(params, data)
+        M = jax.random.normal(jax.random.PRNGKey(6), (32, 4))
+        o32 = op.matmul(M)
+        o16 = op.with_compute_dtype("mixed").matmul(M)
+        rel = float(jnp.linalg.norm(o16 - o32) / jnp.linalg.norm(o32))
+        assert 0 < rel < 0.02, rel  # changed (policy applied) but bf16-close
+
+
+class TestCrossKernelPrecision:
+    def test_cross_matmul_honors_compute_dtype(self):
+        """The test-vs-train cross matmul follows the precision policy:
+        bf16 operands + f32 accumulation under 'mixed', bitwise-f32
+        otherwise (the ISSUE 5 small fix)."""
+        key = jax.random.PRNGKey(7)
+        kern = RBFKernel(lengthscale=jnp.float32(0.5), outputscale=jnp.float32(1.0))
+        X1 = jax.random.uniform(key, (12, 3))
+        X2 = jax.random.uniform(jax.random.fold_in(key, 1), (20, 3))
+        M = jax.random.normal(jax.random.fold_in(key, 2), (20, 4))
+        cross = CrossKernelOperator(kern, X1, X2)
+        K = kern(X1, X2)
+        np.testing.assert_array_equal(np.asarray(cross.matmul(M)), np.asarray(K @ M))
+        mixed = cross.with_compute_dtype("mixed")
+        expected = jnp.matmul(
+            K.astype(jnp.bfloat16), M.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(mixed.matmul(M)), np.asarray(expected)
+        )
+        # rmatmul too (the transposed serving-side contraction)
+        Mr = jax.random.normal(jax.random.fold_in(key, 3), (12, 2))
+        assert mixed.rmatmul(Mr).shape == (20, 2)
+        assert mixed.shape == (12, 20)
+
+
+class TestMultitaskGPModel:
+    def test_protocol_conformance_and_streaming(self):
+        gp = MultitaskGP(num_tasks=3)
+        assert missing_protocol_methods(gp) == []
+        assert supports_streaming(gp)
+
+    def test_loss_gradient_matches_cholesky_reference(self):
+        """BBMM multitask MLL gradient (stochastic trace through the
+        Kronecker operator) ≈ dense Cholesky autodiff gradient, averaged
+        over probe draws — every learned leaf: data-kernel hypers, task
+        root B, task diagonal v, per-task noises."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(8), n=10, T=3)
+        gp = MultitaskGP(
+            num_tasks=3, task_rank=2,
+            settings=BBMMSettings(
+                num_probes=16, max_cg_iters=80, cg_tol=1e-7, precond_rank=0
+            ),
+        )
+        data = gp.prepare_inputs(Xl)
+        params = gp.init_params(Xl)
+        m = yl.shape[0]
+
+        def exact_loss(p):
+            K = gp.operator(p, data).matmul(jnp.eye(m))
+            L = jnp.linalg.cholesky(K)
+            alpha = jax.scipy.linalg.cho_solve((L, True), yl)
+            return 0.5 * (
+                yl @ alpha
+                + 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
+                + m * jnp.log(2.0 * jnp.pi)
+            )
+
+        g_exact = jax.grad(exact_loss)(params)
+        grads = [
+            jax.grad(gp.loss)(params, data, yl, jax.random.PRNGKey(100 + i))
+            for i in range(16)
+        ]
+        g_avg = jax.tree.map(lambda *g: np.mean(np.stack(g), axis=0), *grads)
+        for name in params:
+            ge = np.asarray(g_exact[name])
+            ga = np.asarray(g_avg[name])
+            denom = max(float(np.max(np.abs(ge))), 1.0)
+            assert np.max(np.abs(ga - ge)) / denom < 0.1, (
+                name, ga, ge,
+            )
+
+    def test_fit_through_shared_driver(self):
+        """model.fit ≡ fit_gp bitwise and the loss goes down."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(9), n=16, T=2)
+        gp = MultitaskGP(
+            num_tasks=2,
+            settings=BBMMSettings(num_probes=4, max_cg_iters=40, precond_rank=0),
+        )
+        p1, h1 = gp.fit(Xl, yl, steps=12, lr=0.1)
+        p2, h2 = fit_gp(gp, Xl, yl, steps=12, lr=0.1, key=jax.random.PRNGKey(0))
+        assert h1 == h2
+        for l1, l2 in zip(
+            jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)
+        ):
+            assert np.array_equal(np.asarray(l1), np.asarray(l2))
+        assert np.isfinite(h1).all()
+        assert h1[-1] < h1[0]
+
+    @pytest.mark.parametrize("mode", ["dense", "pallas"])
+    def test_posterior_parity_vs_dense_reference(self, mode):
+        """Acceptance: posterior mean/variance within 1e-4 of the
+        materialized (nT × nT) Cholesky reference — dense AND pallas."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(10), n=12, T=3)
+        gp = MultitaskGP(num_tasks=3, mode=mode, settings=SET)
+        params = gp.init_params(Xl)
+        data = gp.prepare_inputs(Xl)
+
+        kern = gp.kernel(params)
+        KT = gp.task_covariance(params)
+        noise = gp.noise(params)
+        Khat = kron_reference(kern, data.X, KT, noise)
+
+        kq = jax.random.PRNGKey(11)
+        coords = jax.random.uniform(kq, (7, 2))
+        qt = jnp.array([0, 1, 2, 0, 1, 2, 0])
+        Xq = jnp.concatenate([coords, qt[:, None].astype(jnp.float32)], axis=-1)
+
+        Kx = kern(data.X, coords)
+        Kxs = (Kx[:, None, :] * KT[:, qt][None]).reshape(Khat.shape[0], -1)
+        sol_y = jnp.linalg.solve(Khat, yl)
+        mean_ref = Kxs.T @ sol_y
+        var_ref = (
+            kern.diag(coords) * jnp.diagonal(KT)[qt]
+            - jnp.sum(Kxs * jnp.linalg.solve(Khat, Kxs), axis=0)
+            + noise[qt]
+        )
+        mean, var = gp.predict(params, data, yl, Xq)
+        np.testing.assert_allclose(mean, mean_ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(var, var_ref, rtol=1e-4, atol=1e-4)
+
+    def test_cached_mean_bitwise_and_variance_conservative(self):
+        """predict_cached serves the identical mean program (bitwise) and
+        a conservative variance (≥ exact, exact diagonal + Galerkin)."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(12), n=12, T=2)
+        gp = MultitaskGP(num_tasks=2, settings=SET)
+        params = gp.init_params(Xl)
+        data = gp.prepare_inputs(Xl)
+        Xq = grid_problem(jax.random.PRNGKey(13), n=5, T=2)[0]
+        cache = gp.posterior_cache(params, data, yl)
+        mean_c, var_c = gp.predict_cached(params, data, cache, Xq)
+        mean_p, var_p = gp.predict(params, data, yl, Xq)
+        assert np.array_equal(np.asarray(mean_c), np.asarray(mean_p))
+        assert bool(jnp.all(var_c >= var_p - 1e-5))
+
+    def test_hadamard_panel_training_and_prediction(self):
+        """Heterogeneous panel end to end: loss/grad finite, prediction
+        matches the dense reference."""
+        key = jax.random.PRNGKey(14)
+        m, T = 24, 3
+        coords = jax.random.uniform(key, (m, 2))
+        ids = jax.random.randint(jax.random.fold_in(key, 1), (m,), 0, T)
+        Xl = to_long_format(coords, task_ids=ids, num_tasks=T)
+        yl = jnp.sin(3 * coords[:, 0]) * (1 + 0.2 * ids)
+        gp = MultitaskGP(num_tasks=T, settings=SET)
+        data = gp.prepare_inputs(Xl)
+        assert data.task_ids is not None  # heterogeneous → Hadamard
+        params = gp.init_params(Xl)
+
+        kern = gp.kernel(params)
+        KT = gp.task_covariance(params)
+        noise = gp.noise(params)
+        Khat = kern(coords, coords) * KT[ids][:, ids] + jnp.diag(noise[ids])
+        Xq = Xl[:5]
+        mean, var = gp.predict(params, data, yl, Xq)
+        Kxs = kern(coords, coords[:5]) * KT[ids][:, ids[:5]]
+        mean_ref = Kxs.T @ jnp.linalg.solve(Khat, yl)
+        np.testing.assert_allclose(mean, mean_ref, rtol=1e-4, atol=1e-4)
+
+    def test_deep_kernel_via_kernel_fn(self):
+        """kernel_fn plugs a DeepKernel as K_X (dense mode)."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(15), n=10, T=2)
+
+        def feature_fn(net, Z):
+            return jnp.tanh(Z @ net["W"])
+
+        def kernel_fn(params):
+            base = RBFKernel(
+                lengthscale=jnp.exp(params["log_ell"]),
+                outputscale=jnp.float32(1.0),
+            )
+            return DeepKernel(base=base, net_params=params["net"], feature_fn=feature_fn)
+
+        def extra_init(key):
+            return {
+                "net": {"W": 0.5 * jax.random.normal(key, (2, 3))},
+                "log_ell": jnp.float32(0.0),
+            }
+
+        gp = MultitaskGP(
+            num_tasks=2, settings=SET, kernel_fn=kernel_fn,
+            extra_params_init=extra_init,
+        )
+        params = gp.init_params(Xl)
+        data = gp.prepare_inputs(Xl)
+        loss, g = jax.value_and_grad(gp.loss)(
+            params, data, yl, jax.random.PRNGKey(0)
+        )
+        assert np.isfinite(float(loss))
+        gW = g["net"]["W"]
+        assert bool(jnp.all(jnp.isfinite(gW))) and float(jnp.max(jnp.abs(gW))) > 0
+
+    def test_structure_knobs(self):
+        Xl, _ = grid_problem(jax.random.PRNGKey(16), n=6, T=2)
+        kron = MultitaskGP(num_tasks=2, structure="kronecker")
+        assert kron.prepare_inputs(Xl).task_ids is None
+        forced = MultitaskGP(num_tasks=2, structure="hadamard")
+        assert forced.prepare_inputs(Xl).task_ids is not None
+        with pytest.raises(ValueError, match="complete data-major grid"):
+            kron.prepare_inputs(Xl[:-1])  # incomplete block
+        with pytest.raises(ValueError, match="precond_rank"):
+            MultitaskGP(num_tasks=2, settings=BBMMSettings(precond_rank=5))
+        with pytest.raises(ValueError, match="task ids"):
+            MultitaskGP(num_tasks=2).prepare_inputs(
+                jnp.array([[0.1, 0.2, 5.0]])  # task id out of range
+            )
+
+    def test_query_task_ids_validated(self):
+        """Out-of-range QUERY task ids raise instead of silently clamping
+        (JAX gather semantics would serve the wrong task)."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(24), n=6, T=2)
+        gp = MultitaskGP(num_tasks=2, settings=SET)
+        params = gp.init_params(Xl)
+        data = gp.prepare_inputs(Xl)
+        cache = gp.posterior_cache(params, data, yl)
+        bad = jnp.array([[0.1, 0.2, 7.0]])  # task 7 of 2
+        with pytest.raises(ValueError, match="query task ids"):
+            gp.predict(params, data, yl, bad)
+        with pytest.raises(ValueError, match="query task ids"):
+            gp.predict_cached(params, data, cache, bad)
+
+    def test_fuse_cg_loud_graceful_end_to_end(self):
+        """fuse_cg=True on a Kronecker operator warns, then the engine
+        transparently runs the unfused loop to the same answer."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(17), n=8, T=2)
+        gp = MultitaskGP(num_tasks=2, settings=SET)
+        gp_f = MultitaskGP(num_tasks=2, settings=SET, fuse_cg=True)
+        params = gp.init_params(Xl)
+        data = gp.prepare_inputs(Xl)
+        ref = gp.loss(params, data, yl, jax.random.PRNGKey(0))
+        with pytest.warns(UserWarning, match="frontier"):
+            val = gp_f.loss(params, data, yl, jax.random.PRNGKey(0))
+        np.testing.assert_allclose(float(val), float(ref), rtol=1e-5)
+
+
+class TestMultitaskServing:
+    def test_session_observe_query_round_trip(self):
+        """PosteriorSession serves MultitaskGP unmodified: streamed
+        observes (a complete task block, then a single (x, task) row that
+        degrades the panel to Hadamard) keep queries within CG tolerance
+        of a fresh rebuild, with conservative variances."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(18), n=12, T=2)
+        gp = MultitaskGP(
+            num_tasks=2,
+            settings=BBMMSettings(
+                num_probes=4, max_cg_iters=60, cg_tol=1e-6, precond_rank=0
+            ),
+        )
+        params = gp.init_params(Xl)
+        session = PosteriorSession(gp, params, Xl, yl, max_staleness=8)
+        v0 = session.cache_info.version
+
+        Xq, _ = grid_problem(jax.random.PRNGKey(19), n=6, T=2)
+
+        # complete task block → panel stays a Kronecker grid
+        Xb, yb = to_long_format(
+            jax.random.uniform(jax.random.PRNGKey(20), (1, 2)),
+            jnp.array([[0.3, -0.2]]),
+        )
+        assert session.observe(Xb, yb) == "append"
+        assert gp.prepare_inputs(session.X).task_ids is None
+
+        # single (x, task) row → degrades to the Hadamard gather
+        xo = jnp.concatenate(
+            [jax.random.uniform(jax.random.PRNGKey(21), (1, 2)),
+             jnp.array([[1.0]])], axis=-1,
+        )
+        assert session.observe(xo, jnp.array([0.5])) == "append"
+        assert gp.prepare_inputs(session.X).task_ids is not None
+        assert session.cache_info.version == v0 + 2
+        assert session.cache_info.staleness == 2
+
+        mean_s, var_s = session.query(Xq)
+        fresh = PosteriorSession(gp, params, session.X, session.y)
+        mean_f, var_f = fresh.query(Xq)
+        np.testing.assert_allclose(mean_s, mean_f, rtol=1e-3, atol=1e-4)
+        assert bool(jnp.all(var_s >= var_f - 1e-4))  # recycled basis: conservative
+
+    def test_rejected_observe_leaves_session_intact(self):
+        """A bad append (out-of-range task id) raises WITHOUT poisoning
+        the session: state unchanged, later valid observes still work."""
+        Xl, yl = grid_problem(jax.random.PRNGKey(25), n=8, T=2)
+        gp = MultitaskGP(
+            num_tasks=2,
+            settings=BBMMSettings(num_probes=4, max_cg_iters=40, precond_rank=0),
+        )
+        session = PosteriorSession(gp, gp.init_params(Xl), Xl, yl)
+        n0, v0 = session.n, session.cache_info.version
+        bad = jnp.array([[0.1, 0.2, 5.0]])  # task 5 of 2
+        with pytest.raises(ValueError, match="task ids"):
+            session.observe(bad, jnp.array([0.0]))
+        assert session.n == n0  # nothing appended
+        assert not session.stale()
+        assert session.observe(
+            jnp.array([[0.3, 0.4, 1.0]]), jnp.array([0.2])
+        ) == "append"
+        assert session.n == n0 + 1
+        assert session.cache_info.version == v0 + 1
+
+    def test_session_rejects_param_staleness(self):
+        Xl, yl = grid_problem(jax.random.PRNGKey(22), n=8, T=2)
+        gp = MultitaskGP(
+            num_tasks=2,
+            settings=BBMMSettings(num_probes=4, max_cg_iters=40, precond_rank=0),
+        )
+        params = gp.init_params(Xl)
+        session = PosteriorSession(gp, params, Xl, yl)
+        assert not session.stale()
+        new_params = jax.tree.map(lambda a: a + 0.05, params)
+        session.update_params(new_params)
+        assert session.stale()
+        session.query(grid_problem(jax.random.PRNGKey(23), n=3, T=2)[0])
+        assert not session.stale()  # lazily rebuilt on query

@@ -1,0 +1,83 @@
+"""Solve-health scenario: what robustness costs when nothing is wrong,
+and what serving looks like when everything is (the robustness ISSUE's
+acceptance rows).
+
+Two row families, written into BENCH_speed.json:
+
+  * **health_overhead** — the same eager CONVERGED solve timed with the
+    classification live vs monkeypatched to a no-op.  Classification runs
+    device-side reductions and moves only scalars to host, so the
+    acceptance target is overhead ~= 0 relative to the solve itself;
+  * **serve_chaos** — p50/p99 query latency and error rate of the
+    threaded ``--chaos`` drill (NaN injection -> ladder escalation ->
+    outage -> breaker -> recovery), next to a fault-free threaded run of
+    the same shape.  The drill's own gates (zero unhandled exceptions,
+    >=1 escalation, >=1 degraded query) ride along in the row.
+"""
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.inference as inference_mod
+from repro.core import AddedDiagOperator, BBMMSettings, DenseOperator, solve
+from repro.launch.gp_serve import run_serve_chaos, run_serve_threaded
+
+from .common import emit, save_artifact, timeit
+
+
+def _system(key, n):
+    Q = jax.random.normal(key, (n, n)) / jnp.sqrt(n)
+    return Q @ Q.T, jax.random.normal(jax.random.fold_in(key, 1), (n,))
+
+
+def _overhead_row(n, settings):
+    A, b = _system(jax.random.PRNGKey(0), n)
+    op = AddedDiagOperator(DenseOperator(A), jnp.float32(0.1))
+    t_checked = timeit(lambda: solve(op, b, settings), iters=5)
+    orig = inference_mod.classify_mbcg
+    inference_mod.classify_mbcg = lambda *a, **k: None  # health off
+    try:
+        t_bare = timeit(lambda: solve(op, b, settings), iters=5)
+    finally:
+        inference_mod.classify_mbcg = orig
+    overhead = t_checked - t_bare
+    frac = overhead / t_bare if t_bare > 0 else 0.0
+    emit(f"health_overhead_n{n}", overhead,
+         f"checked {t_checked*1e3:.2f}ms bare {t_bare*1e3:.2f}ms "
+         f"({frac*100:+.1f}%)")
+    return {
+        "model": "health_overhead",
+        "n": n,
+        "solve_checked_s": t_checked,
+        "solve_bare_s": t_bare,
+        "health_overhead_s": overhead,
+        "health_overhead_frac": frac,
+    }
+
+
+def run(fast=False):
+    rows = []
+    settings = BBMMSettings(num_probes=8, max_cg_iters=40, cg_tol=1e-4)
+    for n in ((256,) if fast else (256, 1024)):
+        rows.append(_overhead_row(n, settings))
+
+    # fault-free threaded baseline at the drill's shape, then the drill
+    n, batch, rpp = (48, 8, 3) if fast else (128, 32, 6)
+    clean = run_serve_threaded(
+        model="exact", n=n, batch=batch, requests=4 * rpp, threads=2,
+        observe_every=0, max_cg_iters=25, verbose=False,
+    )
+    emit("serve_clean_p50", clean["query_ms_p50"] / 1e3,
+         f"qps {clean['concurrent_qps']:.0f}")
+    chaos = run_serve_chaos(
+        n=n, batch=batch, requests_per_phase=rpp, threads=2,
+        max_cg_iters=25, breaker_reset_s=0.2, verbose=False,
+    )
+    emit("serve_chaos_p50", chaos["query_ms_p50"] / 1e3,
+         f"p99 {chaos['query_ms_p99']:.1f}ms err {chaos['error_rate']:.3f} "
+         f"esc {chaos['precision_escalations']} "
+         f"degraded {chaos['degraded_queries']} "
+         f"{'OK' if chaos['chaos_ok'] else 'FAILED'}")
+    rows.append({**chaos, "clean_query_ms_p50": clean["query_ms_p50"]})
+    save_artifact("health", rows)
+    return rows

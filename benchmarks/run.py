@@ -25,7 +25,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated subset: solve_error,speed,mae,preconditioner,"
-        "complexity,serve,fused,multitask",
+        "complexity,serve,fused,multitask,health",
     )
     ap.add_argument(
         "--scenario",
@@ -56,6 +56,7 @@ def main() -> None:
     from . import (
         complexity,
         fused,
+        health,
         mae,
         multitask,
         preconditioner,
@@ -73,6 +74,7 @@ def main() -> None:
         "serve": serve.run,  # PosteriorSession QPS + append-vs-rebuild
         "fused": fused.run,  # fused CG step: launches/iter + HBM bytes/iter
         "multitask": multitask.run,  # Kronecker BBMM vs naive dense nT×nT
+        "health": health.run,  # health-check overhead (~0) + chaos-drill p50/p99
     }
     wanted = only.split(",") if only else list(suites)
 
@@ -83,7 +85,7 @@ def main() -> None:
         print(f"# --- {name} ---", flush=True)
         if name == "speed":
             speed_rows += suites[name](fast=args.fast, dtype=args.dtype)
-        elif name in ("serve", "fused", "multitask"):
+        elif name in ("serve", "fused", "multitask", "health"):
             speed_rows += suites[name](fast=args.fast)
         else:
             suites[name]()

@@ -22,6 +22,17 @@ from .linear_operator import (
     HadamardKroneckerOperator,
     InterpolatedOperator,
     CallableOperator,
+    FaultSchedule,
+    FaultInjectingOperator,
+)
+from .health import (
+    SolveReport,
+    RungRecord,
+    SolveFailure,
+    SolveHealthWarning,
+    classify_mbcg,
+    collect,
+    record,
 )
 from .mbcg import mbcg, tridiag_matrices, xla_cg_step, CGStepFn, MBCGResult
 from .precision import (

@@ -1,0 +1,245 @@
+"""Solve-health taxonomy: machine-checkable verdicts for every mBCG solve.
+
+BBMM's one-solve-feeds-everything design (PAPER.md) means a single silently
+bad solve poisons the loss, the posterior cache, and every query served from
+it.  This module turns the raw :class:`~repro.core.mbcg.MBCGResult` telemetry
+(``residual_norm`` vs the tolerance actually in force, iteration counts,
+refresh / rescue / curvature-guard counters) into a small closed taxonomy:
+
+    CONVERGED   residual at or under tolerance, nothing pathological
+    MAX_ITERS   ran out of budget while still making progress
+    STALLED     curvature guard tripped (d'Kd <= 0 or non-finite) — reduced
+                precision or a non-PSD operator broke the CG invariants
+    RESCUED     non-finite rescue fired mid-solve; result may still converge
+                but the solve path was contaminated at least once
+    NON_FINITE  the returned solution or residual itself is NaN/Inf
+    DIVERGED    finite but the relative residual grew past the divergence
+                gate — worse than the starting point, actively wrong
+
+Classification is host-side only: :func:`classify_mbcg` returns ``None``
+when handed tracers (inside ``jit``), so engine code can call it
+unconditionally without perturbing compiled paths.
+
+Reports flow to interested callers (the serving session, tests) through a
+thread-local sink — :func:`collect` / :func:`record` — so the five GP models
+keep their signatures while the session still sees every verdict.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --- taxonomy -------------------------------------------------------------
+
+CONVERGED = "CONVERGED"
+MAX_ITERS = "MAX_ITERS"
+STALLED = "STALLED"
+RESCUED = "RESCUED"
+NON_FINITE = "NON_FINITE"
+DIVERGED = "DIVERGED"
+
+STATUSES = (CONVERGED, MAX_ITERS, STALLED, RESCUED, NON_FINITE, DIVERGED)
+
+#: statuses that count as healthy for the degradation ladder.  RESCUED means
+#: the rescue machinery caught a transient non-finite and the final residual
+#: still certifies the answer, so it is unhealthy only when it *also* failed
+#: to converge — that combination classifies as RESCUED (res > tol) and is
+#: not in this set.
+HEALTHY = (CONVERGED,)
+
+#: relative-residual threshold past which a finite solve is DIVERGED rather
+#: than merely MAX_ITERS: the iterate is worse than the zero initial guess.
+DIVERGENCE_GATE = 1.0
+
+
+@dataclass(frozen=True)
+class RungRecord:
+    """One rung of the degradation ladder, as actually executed."""
+
+    rung: str  # e.g. "initial", "precision_f32", "unfused", ...
+    status: Optional[str]  # taxonomy status, or None if the rung errored
+    residual_norm: Optional[float] = None
+    num_iters: Optional[int] = None
+    error: Optional[str] = None  # repr of the exception if the rung raised
+
+
+@dataclass(frozen=True)
+class SolveReport:
+    """Health verdict for one engine solve (possibly after degradation)."""
+
+    status: str
+    residual_norm: float
+    tol: float
+    num_iters: int
+    max_iters: int
+    num_refreshes: int = 0
+    num_rescues: int = 0
+    num_curvature_skips: int = 0
+    context: str = "solve"  # "solve" | "engine_state" | "cache" | ...
+    rungs: Tuple[RungRecord, ...] = ()
+
+    @property
+    def healthy(self) -> bool:
+        return self.status in HEALTHY
+
+    @property
+    def degraded(self) -> bool:
+        """True when the answer came from any rung past the initial solve."""
+        return len(self.rungs) > 1
+
+    def describe(self) -> str:
+        path = " -> ".join(f"{r.rung}:{r.status or 'error'}" for r in self.rungs)
+        return (
+            f"{self.context}: {self.status} "
+            f"(res {self.residual_norm:.3e} vs tol {self.tol:.3e}, "
+            f"{self.num_iters}/{self.max_iters} iters, "
+            f"refreshes={self.num_refreshes} rescues={self.num_rescues} "
+            f"curvature_skips={self.num_curvature_skips})"
+            + (f" via [{path}]" if path else "")
+        )
+
+
+class SolveFailure(RuntimeError):
+    """Raised when a solve is unhealthy and no ladder rung could heal it."""
+
+    def __init__(self, message: str, report: Optional[SolveReport] = None):
+        super().__init__(message)
+        self.report = report
+
+
+class SolveHealthWarning(UserWarning):
+    """Emitted for unhealthy-but-served and degraded-but-healed solves."""
+
+
+# --- classification -------------------------------------------------------
+
+
+def _host_max(x) -> Optional[float]:
+    """max(x) as a host float; None if x is a tracer (inside jit/grad).
+
+    The reduction runs on device so only ONE scalar crosses to host — the
+    hot clean path never pays an array transfer for its health check.
+    """
+    if isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return float(jax.device_get(jnp.max(jnp.asarray(x))))
+    except (TypeError, jax.errors.TracerArrayConversionError):
+        return None
+
+
+def _host_int(x, default: int = 0) -> Optional[int]:
+    if x is None:
+        return default
+    f = _host_max(x)
+    return None if f is None else int(f)
+
+
+def classify_mbcg(
+    result,
+    tol,
+    *,
+    max_iters: int,
+    context: str = "solve",
+    solution=None,
+) -> Optional[SolveReport]:
+    """Derive a SolveReport from an MBCGResult; None under tracing.
+
+    ``tol`` is the tolerance actually in force for this solve (callers that
+    rescale — e.g. warm-started cache extension — pass their effective
+    value).  Multi-column results classify by their WORST column (max
+    residual / max iters) — one poisoned probe column poisons everything
+    downstream, so per-column optimism would be dishonest.  ``solution``
+    optionally overrides ``result.solves`` for the finiteness check.
+    """
+    res = _host_max(result.residual_norm)
+    if res is None:
+        return None  # tracing: classification is a no-op inside jit
+    tol_f = _host_max(tol)
+    if tol_f is None:
+        return None
+    iters = _host_int(result.num_iters)
+    refreshes = _host_int(getattr(result, "num_refreshes", 0))
+    rescues = _host_int(getattr(result, "num_rescues", 0))
+    curv = _host_int(getattr(result, "num_curvature_skips", 0))
+    if None in (iters, refreshes, rescues, curv):
+        return None
+
+    sol = result.solves if solution is None else solution
+    sol_finite = bool(jax.device_get(jnp.all(jnp.isfinite(sol))))
+
+    if not math.isfinite(res) or not sol_finite:
+        status = NON_FINITE
+    elif res <= tol_f:
+        status = CONVERGED
+    elif res > DIVERGENCE_GATE:
+        status = DIVERGED
+    elif rescues > 0:
+        status = RESCUED
+    elif curv > 0:
+        status = STALLED
+    else:
+        status = MAX_ITERS
+
+    report = SolveReport(
+        status=status,
+        residual_norm=res,
+        tol=tol_f,
+        num_iters=iters,
+        max_iters=int(max_iters),
+        num_refreshes=refreshes,
+        num_rescues=rescues,
+        num_curvature_skips=curv,
+        context=context,
+    )
+    return replace(
+        report,
+        rungs=(
+            RungRecord(
+                rung="initial",
+                status=status,
+                residual_norm=res,
+                num_iters=iters,
+            ),
+        ),
+    )
+
+
+# --- thread-local report sink --------------------------------------------
+
+_sink = threading.local()
+
+
+@contextmanager
+def collect(into: Optional[list] = None):
+    """Collect every SolveReport record()ed on this thread into a list.
+
+    Nested collectors stack: record() appends to the innermost active list
+    only (the outer collector resumes when the inner exits).
+    """
+    reports: list = [] if into is None else into
+    stack = getattr(_sink, "stack", None)
+    if stack is None:
+        stack = _sink.stack = []
+    stack.append(reports)
+    try:
+        yield reports
+    finally:
+        stack.pop()
+
+
+def record(report: Optional[SolveReport]) -> Optional[SolveReport]:
+    """Deliver a report to the innermost collect() on this thread, if any."""
+    if report is None:
+        return None
+    stack = getattr(_sink, "stack", None)
+    if stack:
+        stack[-1].append(report)
+    return report

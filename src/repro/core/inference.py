@@ -36,6 +36,8 @@ O(n·m) — no CG — see the ``gp`` model classes.
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from functools import partial
 from typing import Any, NamedTuple
 
@@ -43,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import health
+from .health import RungRecord, SolveFailure, SolveHealthWarning, classify_mbcg
 from .linear_operator import LinearOperator
 from .mbcg import mbcg, tridiag_matrices
 from .precision import precision_compute_dtype, validate_precision
@@ -90,6 +94,24 @@ class BBMMSettings:
     # raises in mbcg rather than silently falling back — set precond_rank=0.
     # Composes with precision="mixed": the fused launches run bf16 MXU
     # stages, the periodic residual refresh stays an f32 matmul.
+    on_failure: str = "warn"  # solve-health policy for the host-level
+    # engine entry points (solve / engine_state / build_posterior_cache /
+    # extend_posterior_cache) when repro.core.health classifies the mBCG
+    # result as unhealthy (anything but CONVERGED):
+    #   "raise"   → SolveFailure immediately (fail-stop pipelines)
+    #   "warn"    → SolveHealthWarning, return the solve as-is (default —
+    #               matches the pre-health behavior, but now observable)
+    #   "degrade" → walk the deterministic degradation ladder
+    #               (precision_f32 → unfused → extend_budget → small-n
+    #               dense_cholesky), returning the first healthy rung with
+    #               every attempt recorded in SolveReport.rungs; raise
+    #               SolveFailure only when the ladder is exhausted.
+    # Inside jit/grad traces classification is a structural no-op (tracers
+    # carry no values), so the differentiable MLL path is never perturbed;
+    # its health is checked whenever it runs eagerly.
+    dense_fallback_max_n: int = 2048  # terminal dense-Cholesky rung of the
+    # degradation ladder engages only when the system is at most this large
+    # (O(n³)/O(n²) cost — a last resort, not a performance path)
     max_basis_columns: int = 0  # serving-memory budget for the Krylov
     # variance cache under streaming appends (extend_posterior_cache): once
     # the recycled basis would exceed this many columns it is compacted by
@@ -97,6 +119,13 @@ class BBMMSettings:
     # small Gram basisᵀK̂basis (still a subspace ⇒ served variances stay
     # conservative; only tightness degrades).  0 = unbounded (the
     # max_staleness rebuild policy is then the only growth bound).
+
+    def __post_init__(self):
+        if self.on_failure not in ("raise", "degrade", "warn"):
+            raise ValueError(
+                f"on_failure must be 'raise', 'degrade' or 'warn', got "
+                f"{self.on_failure!r}"
+            )
 
 
 def _fused_step_of(op: LinearOperator, settings: BBMMSettings):
@@ -151,6 +180,182 @@ def _precond_solve_arg(precond):
     identity (mbcg's native no-preconditioner path — and the form the fused
     CG step composes with), the Woodbury solve otherwise."""
     return None if isinstance(precond, IdentityPreconditioner) else precond.solve
+
+
+# --- degradation ladder ----------------------------------------------------
+
+
+def _escalation_ladder(settings: BBMMSettings):
+    """The deterministic rung sequence for ``on_failure='degrade'``.
+
+    Escalation is CUMULATIVE — each rung keeps every earlier replacement —
+    and ordered cheapest-first by what each failure mode usually needs:
+
+      1. ``precision_f32``  — mixed → highest (bf16 stall / drift is the
+         most common unhealthy verdict at scale);
+      2. ``unfused``        — drop the fused CG kernel (isolates kernel bugs
+         from the algorithm; also what re-enables preconditioning);
+      3. ``extend_budget``  — double ``max_cg_iters`` and install the
+         pivoted-Cholesky preconditioner if it was off (MAX_ITERS on a
+         genuinely hard system);
+      4. (terminal, built by the caller) small-n dense Cholesky.
+
+    Rungs that do not change anything (already f32, already unfused) are
+    skipped, so each returned rung is a genuinely new configuration.
+    """
+    rungs = []
+    s = settings
+    if s.precision != "highest":
+        s = dataclasses.replace(s, precision="highest")
+        rungs.append(("precision_f32", s))
+    if s.fuse_cg:
+        s = dataclasses.replace(s, fuse_cg=False)
+        rungs.append(("unfused", s))
+    s = dataclasses.replace(
+        s,
+        max_cg_iters=2 * s.max_cg_iters,
+        precond_rank=s.precond_rank if s.precond_rank > 0 else 5,
+        fuse_cg=False,  # a non-identity preconditioner cannot fuse
+    )
+    rungs.append(("extend_budget", s))
+    return rungs
+
+
+def _apply_policy(report, settings: BBMMSettings, context: str):
+    """Check-only health enforcement (no ladder): record + warn/raise.
+
+    Used where a retry is impossible or belongs to the caller — the
+    differentiable MLL path (``inv_quad_logdet``; retries there would
+    desynchronize the custom-VJP residuals, and training owns its own
+    recovery policy in ``fit_gp``).  Tracer-safe: ``report`` is None inside
+    jit/grad and the whole call is a no-op.
+    """
+    if report is None:
+        return None
+    report = dataclasses.replace(report, context=context)
+    health.record(report)
+    if not report.healthy and settings.on_failure == "raise":
+        raise SolveFailure(report.describe(), report)
+    if not report.healthy:
+        warnings.warn(
+            f"unhealthy solve served as-is ({report.describe()}); set "
+            "BBMMSettings(on_failure='degrade') for automatic recovery",
+            SolveHealthWarning,
+            stacklevel=3,
+        )
+    return report
+
+
+def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
+    """Execute ``run(settings) -> (value, report|None)`` under the
+    ``on_failure`` policy, walking the degradation ladder when asked.
+
+    Every rung attempt — healed, still-unhealthy, or errored (e.g. a
+    preconditioner the operator cannot build) — lands in
+    ``SolveReport.rungs``, so degradation is observable, never silent.
+    ``dense_fn() -> (value, RungRecord)`` is the terminal rung, engaged
+    only for ``n <= settings.dense_fallback_max_n``.
+    """
+    value, report = run(settings)
+    if report is None:
+        return value  # tracing: health is checked when the caller is eager
+    report = dataclasses.replace(report, context=context)
+    if report.healthy or settings.on_failure != "degrade":
+        _apply_policy(report, settings, context)
+        return value
+
+    rungs = list(report.rungs)
+    for name, s in _escalation_ladder(settings):
+        try:
+            value2, rep2 = run(s)
+        except Exception as e:  # rung structurally unavailable → next rung
+            rungs.append(RungRecord(rung=name, status=None, error=repr(e)))
+            continue
+        if rep2 is None:  # defensive: a traced rerun cannot be classified
+            rungs.append(RungRecord(rung=name, status=None, error="untraced"))
+            continue
+        rungs.append(
+            RungRecord(
+                rung=name,
+                status=rep2.status,
+                residual_norm=rep2.residual_norm,
+                num_iters=rep2.num_iters,
+            )
+        )
+        if rep2.healthy:
+            final = dataclasses.replace(
+                rep2, context=context, rungs=tuple(rungs)
+            )
+            health.record(final)
+            warnings.warn(
+                f"solve degraded but healed: {final.describe()}",
+                SolveHealthWarning,
+                stacklevel=3,
+            )
+            return value2
+        report = dataclasses.replace(rep2, context=context)
+
+    if dense_fn is not None and n <= settings.dense_fallback_max_n:
+        try:
+            value3, rec = dense_fn()
+        except Exception as e:
+            rungs.append(
+                RungRecord(rung="dense_cholesky", status=None, error=repr(e))
+            )
+        else:
+            rungs.append(rec)
+            if rec.status == health.CONVERGED:
+                final = dataclasses.replace(
+                    report,
+                    status=health.CONVERGED,
+                    residual_norm=rec.residual_norm
+                    if rec.residual_norm is not None
+                    else 0.0,
+                    num_iters=0,
+                    context=context,
+                    rungs=tuple(rungs),
+                )
+                health.record(final)
+                warnings.warn(
+                    f"solve degraded to dense Cholesky: {final.describe()}",
+                    SolveHealthWarning,
+                    stacklevel=3,
+                )
+                return value3
+
+    final = dataclasses.replace(report, rungs=tuple(rungs))
+    health.record(final)
+    raise SolveFailure(f"degradation ladder exhausted: {final.describe()}", final)
+
+
+def _dense_chol(op: LinearOperator, n: int):
+    """Materialize + factor the operator for the terminal ladder rung.
+
+    Raises SolveFailure when the factorization itself is unhealthy (a
+    genuinely non-PSD system has no healthy answer on any rung)."""
+    Kd = op.prepare().to_dense().astype(jnp.float32)
+    L = jnp.linalg.cholesky(Kd)
+    if not bool(jax.device_get(jnp.all(jnp.isfinite(L)))):
+        raise SolveFailure(
+            f"dense Cholesky fallback failed: operator (n={n}) is not "
+            "positive definite"
+        )
+    return Kd, L
+
+
+def _dense_rung_record(Kd, rhs, X):
+    res = float(
+        jax.device_get(
+            jnp.max(
+                jnp.linalg.norm(rhs - Kd @ X, axis=-2)
+                / jnp.maximum(jnp.linalg.norm(rhs, axis=-2), 1e-30)
+            )
+        )
+    )
+    status = health.CONVERGED if math.isfinite(res) else health.NON_FINITE
+    return RungRecord(
+        rung="dense_cholesky", status=status, residual_norm=res, num_iters=0
+    )
 
 
 class InferenceState(NamedTuple):
@@ -248,10 +453,13 @@ def _run_engine(
     return precond, Z, res, probe_solves, logdet
 
 
-def _engine_forward(op: LinearOperator, y: jax.Array, key, settings: BBMMSettings):
+def _engine_forward_report(
+    op: LinearOperator, y: jax.Array, key, settings: BBMMSettings
+):
+    """Engine forward pass + its health verdict (None under tracing)."""
     precond, Z, res, probe_solves, logdet = _run_engine(op, y, key, settings)
     u = res.solves[..., 0]
-    return InferenceState(
+    state = InferenceState(
         solve_y=u,
         inv_quad=jnp.sum(y * u, axis=-1),
         logdet=logdet,
@@ -261,6 +469,26 @@ def _engine_forward(op: LinearOperator, y: jax.Array, key, settings: BBMMSetting
         cg_iters=res.num_iters,
         residual=res.residual_norm,
     )
+    report = classify_mbcg(
+        res, settings.cg_tol, max_iters=settings.max_cg_iters
+    )
+    return state, report
+
+
+def _engine_forward(
+    op: LinearOperator,
+    y: jax.Array,
+    key,
+    settings: BBMMSettings,
+    *,
+    context: str = "mll",
+):
+    state, report = _engine_forward_report(op, y, key, settings)
+    # check-only here: this is the differentiable-MLL seam, where a retry
+    # would desynchronize the custom-VJP residuals — training's recovery
+    # policy lives in fit_gp, serving's in the session layer
+    _apply_policy(report, settings, context)
+    return state
 
 
 def inv_quad_logdet(
@@ -316,8 +544,41 @@ def engine_state(
     key: jax.Array,
     settings: BBMMSettings = BBMMSettings(),
 ) -> InferenceState:
-    """Non-differentiable full engine state (prediction paths, diagnostics)."""
-    return _engine_forward(op, y, key, settings)
+    """Non-differentiable full engine state (prediction paths, diagnostics).
+
+    Health-checked per ``settings.on_failure`` — under ``"degrade"`` an
+    unhealthy run walks the escalation ladder down to a small-n dense
+    Cholesky before giving up."""
+    n = y.shape[-1]
+
+    def run(s):
+        return _engine_forward_report(op, y, key, s)
+
+    def dense():
+        Kd, L = _dense_chol(op, n)
+        t = settings.num_probes
+        Z = IdentityPreconditioner().sample_probes(key, t, n).astype(y.dtype)
+        Z = jnp.broadcast_to(Z, (*y.shape[:-1], n, t))
+        rhs = jnp.concatenate([y[..., None], Z], axis=-1)
+        X = jnp.linalg.solve(Kd, rhs)
+        u = X[..., 0]
+        logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(L, axis1=-2, axis2=-1)), axis=-1)
+        state = InferenceState(
+            solve_y=u,
+            inv_quad=jnp.sum(y * u, axis=-1),
+            logdet=logdet,
+            probe_solves=X[..., 1:],
+            probes=Z,
+            precond_probes=Z,
+            cg_iters=jnp.zeros(y.shape[:-1] + (t + 1,), jnp.int32),
+            residual=jnp.linalg.norm(rhs - Kd @ X, axis=-2)
+            / jnp.maximum(jnp.linalg.norm(rhs, axis=-2), 1e-30),
+        )
+        return state, _dense_rung_record(Kd, rhs, X)
+
+    return _run_with_ladder(
+        run, settings, context="engine_state", n=n, dense_fn=dense
+    )
 
 
 def build_posterior_cache(
@@ -349,35 +610,79 @@ def build_posterior_cache(
     if y.ndim != 1:
         raise ValueError("posterior cache supports a single problem (y of shape (n,))")
     n = y.shape[0]
-    precond, Z, res, probe_solves, logdet = _run_engine(
-        op, y, key, settings, return_basis=variance_cache, with_logdet=variance_cache
+
+    def run(s):
+        precond, Z, res, probe_solves, logdet = _run_engine(
+            op, y, key, s, return_basis=variance_cache, with_logdet=variance_cache
+        )
+        alpha = res.solves[:, 0]
+        inv_quad = jnp.dot(y, alpha)
+
+        basis = gram_chol = None
+        if variance_cache:
+            # Krylov cache subspace: all solves + all recovered Lanczos
+            # directions.
+            span = jnp.concatenate([res.solves, res.basis.reshape(n, -1)], axis=-1)
+            basis, _ = jnp.linalg.qr(span.astype(jnp.float32))  # (n, m)
+            KQ = op.prepare().matmul(basis)  # ONE extra blackbox matmul
+            gram = basis.T @ KQ
+            gram = 0.5 * (gram + gram.T)
+            m = gram.shape[0]
+            jitter = 1e-6 * jnp.trace(gram) / m
+            gram_chol = jnp.linalg.cholesky(
+                gram + jitter * jnp.eye(m, dtype=gram.dtype)
+            )
+
+        cache = PosteriorCache(
+            alpha=alpha,
+            basis=basis,
+            gram_chol=gram_chol,
+            probes=Z,
+            probe_solves=probe_solves,
+            precond=precond,
+            inv_quad=inv_quad,
+            logdet=logdet,
+            cg_iters=res.num_iters,
+        )
+        report = classify_mbcg(res, s.cg_tol, max_iters=s.max_cg_iters)
+        return cache, report
+
+    def dense():
+        cache, rec = _dense_cache(
+            op, y, key, settings, variance_cache=variance_cache
+        )
+        return cache, rec
+
+    return _run_with_ladder(
+        run, settings, context="cache_build", n=n, dense_fn=dense
     )
-    alpha = res.solves[:, 0]
-    inv_quad = jnp.dot(y, alpha)
 
-    basis = gram_chol = None
-    if variance_cache:
-        # Krylov cache subspace: all solves + all recovered Lanczos directions.
-        span = jnp.concatenate([res.solves, res.basis.reshape(n, -1)], axis=-1)
-        basis, _ = jnp.linalg.qr(span.astype(jnp.float32))  # (n, m)
-        KQ = op.prepare().matmul(basis)  # ONE extra blackbox matmul
-        gram = basis.T @ KQ
-        gram = 0.5 * (gram + gram.T)
-        m = gram.shape[0]
-        jitter = 1e-6 * jnp.trace(gram) / m
-        gram_chol = jnp.linalg.cholesky(gram + jitter * jnp.eye(m, dtype=gram.dtype))
 
-    return PosteriorCache(
+def _dense_cache(op, y, key, settings, *, variance_cache):
+    """Terminal ladder rung for the posterior cache: exact dense state.
+
+    ``basis=eye(n)`` with ``gram_chol=chol(K̂)`` makes ``cached_inv_quad``
+    compute the EXACT k*ᵀK̂⁻¹k* — the served variance contract (conservative,
+    never undershooting) holds trivially."""
+    n = y.shape[-1]
+    Kd, L = _dense_chol(op, n)
+    t = settings.num_probes
+    Z = IdentityPreconditioner().sample_probes(key, t, n).astype(y.dtype)
+    rhs = jnp.concatenate([y[:, None], Z], axis=-1)
+    X = jnp.linalg.solve(Kd, rhs)
+    alpha = X[:, 0]
+    cache = PosteriorCache(
         alpha=alpha,
-        basis=basis,
-        gram_chol=gram_chol,
+        basis=jnp.eye(n, dtype=jnp.float32) if variance_cache else None,
+        gram_chol=L if variance_cache else None,
         probes=Z,
-        probe_solves=probe_solves,
-        precond=precond,
-        inv_quad=inv_quad,
-        logdet=logdet,
-        cg_iters=res.num_iters,
+        probe_solves=X[:, 1:],
+        precond=IdentityPreconditioner(),
+        inv_quad=jnp.dot(y, alpha),
+        logdet=2.0 * jnp.sum(jnp.log(jnp.diag(L))),
+        cg_iters=jnp.zeros(t + 1, jnp.int32),
     )
+    return cache, _dense_rung_record(Kd, rhs, X)
 
 
 def _compact_basis(basis: jax.Array, gram: jax.Array, max_m: int):
@@ -448,6 +753,38 @@ def extend_posterior_cache(
         )
     variance_cache = cache.basis is not None
 
+    def run(s):
+        return _extend_cache_once(op, y, cache, s, k=k, variance_cache=variance_cache)
+
+    def dense():
+        dcache, rec = _dense_cache(
+            op, y, jax.random.PRNGKey(0), settings, variance_cache=variance_cache
+        )
+        pad_rows = ((0, k), (0, 0))
+        # keep the recycled probe diagnostics (stale but shape-stable, like
+        # the normal extend path) rather than the fresh dense draws
+        dcache = dcache._replace(
+            probes=jnp.pad(cache.probes, pad_rows),
+            probe_solves=jnp.pad(cache.probe_solves, pad_rows),
+            cg_iters=jnp.zeros(1, jnp.int32),
+        )
+        return dcache, rec
+
+    return _run_with_ladder(
+        run, settings, context="cache_extend", n=n, dense_fn=dense
+    )
+
+
+def _extend_cache_once(
+    op: LinearOperator,
+    y: jax.Array,
+    cache: PosteriorCache,
+    settings: BBMMSettings,
+    *,
+    k: int,
+    variance_cache: bool,
+) -> tuple:
+    n = y.shape[0]
     precond = build_preconditioner(
         op, settings.precond_rank, jitter=settings.precond_jitter
     )
@@ -522,7 +859,7 @@ def extend_posterior_cache(
             )
 
     pad_rows = ((0, k), (0, 0))
-    return PosteriorCache(
+    new_cache = PosteriorCache(
         alpha=alpha,
         basis=basis,
         gram_chol=gram_chol,
@@ -533,6 +870,13 @@ def extend_posterior_cache(
         logdet=jnp.float32(jnp.nan),
         cg_iters=res.num_iters,
     )
+    # classify against the tolerance actually in force (tol_eff), and on the
+    # FULL warm-started iterate — the delta-solve alone can be finite while
+    # u0 + delta is what callers consume
+    report = classify_mbcg(
+        res, tol_eff, max_iters=settings.max_cg_iters, solution=alpha
+    )
+    return new_cache, report
 
 
 def cached_mean(cache: PosteriorCache, Kxs: jax.Array) -> jax.Array:
@@ -573,19 +917,36 @@ def solve(op, B, settings: BBMMSettings = BBMMSettings(), *, precond=None):
     """Plain preconditioned solve K̂⁻¹B (prediction-time helper).
 
     ``precond``: a prebuilt preconditioner (e.g. ``PosteriorCache.precond``)
-    to reuse instead of rebuilding the pivoted-Cholesky factors."""
-    if precond is None:
-        precond = build_preconditioner(
-            op, settings.precond_rank, jitter=settings.precond_jitter
+    to reuse instead of rebuilding the pivoted-Cholesky factors.  Health-
+    checked per ``settings.on_failure``; ladder rungs rebuild the
+    preconditioner for their own settings."""
+    B = jnp.asarray(B)
+    n = B.shape[-2] if B.ndim > 1 else B.shape[-1]
+
+    def run(s):
+        p = precond
+        if p is None or s is not settings:
+            p = build_preconditioner(
+                op, s.precond_rank, jitter=s.precond_jitter
+            )
+        matmul, refresh_kwargs, fused_step = _solver_matmuls(op, s)
+        res = mbcg(
+            matmul,
+            B,
+            precond_solve=_precond_solve_arg(p),
+            max_iters=s.max_cg_iters,
+            tol=s.cg_tol,
+            fused_step=fused_step,
+            **refresh_kwargs,
         )
-    matmul, refresh_kwargs, fused_step = _solver_matmuls(op, settings)
-    res = mbcg(
-        matmul,
-        B,
-        precond_solve=_precond_solve_arg(precond),
-        max_iters=settings.max_cg_iters,
-        tol=settings.cg_tol,
-        fused_step=fused_step,
-        **refresh_kwargs,
-    )
-    return res.solves
+        report = classify_mbcg(res, s.cg_tol, max_iters=s.max_cg_iters)
+        return res.solves, report
+
+    def dense():
+        Kd, L = _dense_chol(op, n)
+        rhs = B[..., None] if B.ndim == 1 else B
+        X = jnp.linalg.solve(Kd, rhs)
+        out = X[..., 0] if B.ndim == 1 else X
+        return out, _dense_rung_record(Kd, rhs, X)
+
+    return _run_with_ladder(run, settings, context="solve", n=n, dense_fn=dense)

@@ -324,6 +324,15 @@ class AddedDiagOperator(LinearOperator):
         r = self.base.row(i)
         return r.at[i].add(self.sigma2)
 
+    def to_dense(self):
+        # structural materialization (base dense + σ²I) rather than the
+        # matmul-against-identity default: the degradation ladder's terminal
+        # dense-Cholesky rung must stay independent of the blackbox matmul
+        # it is recovering from
+        dense = self.base.to_dense()
+        eye = jnp.eye(dense.shape[-1], dtype=dense.dtype)
+        return dense + self._s2(2) * eye
+
     def prepare(self):
         return AddedDiagOperator(self.base.prepare(), self.sigma2)
 
@@ -860,3 +869,192 @@ class CallableOperator(LinearOperator):
         if self.diag_fn is None:
             return super().diagonal()
         return self.diag_fn(self.params)
+
+
+# --- fault injection (robustness harness) ----------------------------------
+
+
+class FaultSchedule:
+    """Seeded, deterministic host-side fault plan for
+    :class:`FaultInjectingOperator`.
+
+    One schedule is shared by every prepared / dtype-switched copy of its
+    operator (it rides in a static pytree field), so the call counter tracks
+    ACTUAL matmul executions — including the ones inside a ``lax.scan`` CG
+    loop, where the traced-once matmul still executes once per iteration
+    and its ``pure_callback`` ticks the counter each time.
+
+    Attributes are plain and mutable on purpose: a chaos driver toggles
+    ``nan_rate`` / ``total_outage`` mid-run against already-jitted solves
+    (the callback reads the live object, not a trace-time snapshot).
+
+      * ``nan_calls`` / ``inf_calls`` — exact call indices to corrupt
+        (deterministic single-fault experiments);
+      * ``nan_rate`` — per-call corruption probability from the seeded rng
+        (deterministic given the seed and call order);
+      * ``latency_s`` — host sleep per matmul call (operational latency);
+      * ``total_outage`` — corrupt EVERY call, including ``to_dense`` (takes
+        out the terminal dense ladder rung too: the unhealable fault that
+        must trip the serving circuit breaker);
+      * ``reduced_only`` — corrupt only reduced-precision (bf16) matmul
+        instances, leaving f32 clean — makes the ``precision_f32`` ladder
+        rung deterministically heal.
+
+    ``injected`` records ``(call_index, code)`` for every corruption
+    actually delivered — the assertion surface for tests.
+    """
+
+    NAN = 1.0
+    INF = 2.0
+
+    def __init__(
+        self,
+        seed: int = 0,
+        *,
+        nan_calls: Sequence[int] = (),
+        inf_calls: Sequence[int] = (),
+        nan_rate: float = 0.0,
+        latency_s: float = 0.0,
+        total_outage: bool = False,
+        reduced_only: bool = False,
+    ):
+        import random
+        import threading
+
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.nan_calls = frozenset(nan_calls)
+        self.inf_calls = frozenset(inf_calls)
+        self.nan_rate = float(nan_rate)
+        self.latency_s = float(latency_s)
+        self.total_outage = bool(total_outage)
+        self.reduced_only = bool(reduced_only)
+        self.calls = 0
+        self.injected: list = []
+
+    def next_code(self, reduced: bool) -> float:
+        """Tick the call counter and decide this call's fate (host side)."""
+        import time
+
+        with self._lock:
+            idx = self.calls
+            self.calls += 1
+            if self.latency_s:
+                time.sleep(self.latency_s)
+            code = 0.0
+            if self.total_outage:
+                code = self.NAN
+            elif self.reduced_only and not reduced:
+                code = 0.0
+            elif idx in self.nan_calls:
+                code = self.NAN
+            elif idx in self.inf_calls:
+                code = self.INF
+            elif self.nan_rate and self._rng.random() < self.nan_rate:
+                code = self.NAN
+            if code:
+                self.injected.append((idx, code))
+            return code
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class FaultInjectingOperator(LinearOperator):
+    """Wrap any operator with seeded, deterministic fault injection.
+
+    Three fault families, matching what long-running mixed-precision CG
+    actually meets in production:
+
+      * **non-finite matmul outputs** — the schedule corrupts row 0 of the
+        matmul result with NaN/Inf on chosen (or seeded-random) calls, via a
+        ``jax.pure_callback`` so the decision is made per EXECUTION even
+        inside a jitted ``lax.scan`` CG loop;
+      * **non-PSD perturbation** — ``negative_diag`` subtracts c·I in-band,
+        shifting eigenvalues down (a pathological-hyperparameter stand-in);
+      * **latency / outage** — host sleeps and the total-outage mode that
+        corrupts everything including ``to_dense``.
+
+    ``diagonal`` / ``row`` delegate CLEAN (so pivoted-Cholesky
+    preconditioner construction is not the thing under test), and the
+    wrapper does not advertise a fused CG step — under ``fuse_cg`` the
+    engine transparently falls back to the unfused loop, where the
+    injection seam lives.
+
+    Wrap INSIDE the noise wrapper — ``AddedDiagOperator(FaultInjecting…(K),
+    σ²)`` — so ``build_preconditioner``'s structural dispatch still sees the
+    ``AddedDiagOperator`` it requires.
+    """
+
+    base: LinearOperator
+    schedule: FaultSchedule = static_field(default_factory=FaultSchedule)
+    negative_diag: float = static_field(default=0.0)
+    reduced: bool = static_field(default=False)
+
+    @property
+    def shape(self):
+        return self.base.shape
+
+    @property
+    def dtype(self):
+        return self.base.dtype
+
+    def matmul(self, M):
+        out = self.base.matmul(M)
+        if self.negative_diag:
+            out = out - jnp.asarray(self.negative_diag, out.dtype) * M
+        sched = self.schedule
+        if sched is None:
+            return out
+        reduced = self.reduced
+
+        def _decide(_probe):
+            return np.float32(sched.next_code(reduced))
+
+        # the probe argument creates a data dependence on THIS iteration's
+        # output, so XLA cannot hoist/CSE the (pure) callback out of the CG
+        # scan — the schedule must tick once per actual matmul execution
+        probe = jnp.real(out.ravel()[0]).astype(jnp.float32)
+        code = jax.pure_callback(
+            _decide, jax.ShapeDtypeStruct((), jnp.float32), probe
+        )
+        bad = jnp.where(
+            code == FaultSchedule.NAN,
+            jnp.nan,
+            jnp.where(code == FaultSchedule.INF, jnp.inf, 0.0),
+        ).astype(out.dtype)
+        if out.ndim == 1:
+            return out.at[0].add(bad)
+        return out.at[..., 0, :].add(bad)
+
+    def diagonal(self):
+        d = self.base.diagonal()
+        if self.negative_diag:
+            d = d - jnp.asarray(self.negative_diag, d.dtype)
+        return d
+
+    def row(self, i):
+        r = self.base.row(i)
+        if self.negative_diag:
+            r = r.at[i].add(-jnp.asarray(self.negative_diag, r.dtype))
+        return r
+
+    def to_dense(self):
+        dense = self.base.to_dense()
+        if self.negative_diag:
+            n = dense.shape[-1]
+            dense = dense - self.negative_diag * jnp.eye(n, dtype=dense.dtype)
+        if self.schedule is not None and self.schedule.total_outage:
+            # the outage takes the dense fallback path down too — this is
+            # the unhealable fault class (→ serving circuit breaker)
+            dense = jnp.full_like(dense, jnp.nan)
+        return dense
+
+    def prepare(self):
+        return dataclasses.replace(self, base=self.base.prepare())
+
+    def with_compute_dtype(self, compute_dtype):
+        return dataclasses.replace(
+            self,
+            base=self.base.with_compute_dtype(compute_dtype),
+            reduced=self.reduced or is_reduced(compute_dtype),
+        )

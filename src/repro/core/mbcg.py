@@ -132,6 +132,13 @@ class MBCGResult(NamedTuple):
     num_refreshes: jax.Array | None = None  # scalar int32: in-loop f32
     # residual refreshes actually taken (None when refresh_every == 0) —
     # the FLOP-accounting diagnostic for the adaptive refresh policy.
+    num_rescues: jax.Array | None = None  # scalar int32: column-steps where
+    # the non-finite rescue pulled the trajectory back to the best snapshot
+    # (None when refresh_every == 0).  >0 means the solve path was
+    # contaminated at least once — repro.core.health classifies it RESCUED.
+    num_curvature_skips: jax.Array | None = None  # scalar int32:
+    # column-steps where the curvature guard saw dᵀK̂d ≤ 0 (or non-finite)
+    # and zeroed α (None when refresh_every == 0) — the STALLED signal.
 
 
 # Adaptive refresh: stretch the period only while the recursive residual is
@@ -241,14 +248,17 @@ def _fused_loop(
 
     def fused_refresh(carry, it):
         (U, R, D, V, alpha, beta, gamma,
-         U_best, R_best, best_res, period, since, nref) = carry
+         U_best, R_best, best_res, period, since, nref, ncurv, nresc) = carry
         U, Rk, D, V, (dv, rr, rv, vv) = fused_step(U, R, D, V, alpha, beta, gamma)
         rz = jnp.maximum(rr, 0.0)
         res = jnp.sqrt(rz) / b_norm
         # masking re-derived from the measured ‖r‖ every launch (columns may
         # REactivate after a refresh exposed a lying recursive residual)
         active = jnp.minimum(res, best_res) > tol
-        # curvature guard: reduced-precision noise can round dᵀK̂d ≤ 0
+        # curvature guard: reduced-precision noise can round dᵀK̂d ≤ 0.
+        # ~(dv > 0) rather than (dv <= 0): a NaN dv fails both comparisons
+        # and must count as a guard trip, not slip through uncounted.
+        ncurv = ncurv + jnp.sum(active & ~(dv > 0)).astype(jnp.int32)
         alpha = jnp.where((dv > 0) & active, _safe_div(rz, dv), 0.0)
         do_refresh = since + 1 >= period
 
@@ -256,14 +266,18 @@ def _fused_loop(
             rz_next = jnp.maximum(rz - 2.0 * alpha * rv + alpha * alpha * vv, 0.0)
             beta_n = jnp.where(active, _safe_div(rz_next, rz), 0.0)
             return (U, Rk, D, alpha, beta_n, jnp.ones_like(beta_n), beta_n,
-                    U_best, R_best, best_res, jnp.float32(0.0))
+                    U_best, R_best, best_res, jnp.float32(0.0), jnp.int32(0))
 
         def _refresh(U, Rk, D, V):
             # flush the pending update in f32 XLA (refresh steps only), then
             # the same guards as step_refresh: NaN hygiene, best-iterate
-            # snapshot, non-finite rescue, drift-gated momentum keep/restart
-            Uf = U + alpha[..., None, :] * D
-            Rrec = Rk - alpha[..., None, :] * V
+            # snapshot, non-finite rescue, drift-gated momentum keep/restart.
+            # The α ≠ 0 guards matter under transient non-finite faults:
+            # a poisoned D/V must not leak NaN into a frozen column through
+            # 0·NaN (which is NaN, not 0).
+            a = alpha[..., None, :]
+            Uf = jnp.where(a != 0, U + a * D, U)
+            Rrec = jnp.where(a != 0, Rk - a * V, Rk)
             Rf = Bc - refresh_matmul(Uf).astype(compute_dtype)
             res_f = jnp.linalg.norm(Rf, axis=-2) / b_norm
             res_f = jnp.where(jnp.isfinite(res_f), res_f, jnp.inf)
@@ -279,19 +293,23 @@ def _fused_loop(
                 jnp.linalg.norm(Rf, axis=-2), 1e-30
             )
             beta_f = jnp.where(drift < REFRESH_MOMENTUM_GATE, _safe_div(rzf, rz), 0.0)
-            Df = Rf + beta_f[..., None, :] * D  # Zf = Rf (identity precond)
+            bD = beta_f[..., None, :]
+            # β = 0 is a direction RESTART: take Rf itself, never 0·D — a
+            # non-finite D would otherwise poison the restarted direction
+            Df = jnp.where(bD > 0, Rf + bD * D, Rf)  # Zf = Rf (identity precond)
             zero = jnp.zeros_like(alpha)
             # the state is now fully updated: the next launch must run a
             # no-op prologue, encoded as (α=0, β=1, γ=0) → D_new = D
             return (Uc, Rf, Df, zero, jnp.ones_like(zero), zero, beta_f,
-                    Ub, Rb, rb, jnp.max(drift))
+                    Ub, Rb, rb, jnp.max(drift), jnp.sum(pull).astype(jnp.int32))
 
         (U, Rn, Dn, alpha_n, beta_n, gamma_n, beta_emit,
-         U_best, R_best, best_res, drift_max) = jax.lax.cond(
+         U_best, R_best, best_res, drift_max, resc_inc) = jax.lax.cond(
             do_refresh, _refresh, _advance, U, Rk, D, V
         )
         since = jnp.where(do_refresh, 0, since + 1)
         nref = nref + do_refresh.astype(jnp.int32)
+        nresc = nresc + resc_inc
         if refresh_adaptive:
             cap = refresh_max_period if refresh_max_period > 0 else max_iters
             stretched = jnp.minimum(period * 2, cap)
@@ -305,24 +323,27 @@ def _fused_loop(
                 jnp.where(active[..., None, :], Rk * _safe_rsqrt(rz)[..., None, :], 0.0),
             )
         return (U, Rn, Dn, V, alpha_n, beta_n, gamma_n,
-                U_best, R_best, best_res, period, since, nref), out
+                U_best, R_best, best_res, period, since, nref, ncurv, nresc), out
 
     if refresh_every:
         res0 = jnp.linalg.norm(Bc, axis=-2) / b_norm
         carry0 = core0 + (U0, Bc, res0,
-                          jnp.int32(refresh_every), jnp.int32(0), jnp.int32(0))
+                          jnp.int32(refresh_every), jnp.int32(0), jnp.int32(0),
+                          jnp.int32(0), jnp.int32(0))
         final, outs = jax.lax.scan(fused_refresh, carry0, jnp.arange(max_iters))
         U, _, D, V, alpha_c = final[0], final[1], final[2], final[3], final[4]
         # flush the pending update (no-op when the last step refreshed), then
         # one last f32 refresh so post-final-cycle progress counts
-        U = U + alpha_c[..., None, :] * D
+        a = alpha_c[..., None, :]
+        U = jnp.where(a != 0, U + a * D, U)
         U_best, best_res = final[7], final[9]
         res_t = jnp.linalg.norm(
             Bc - refresh_matmul(U).astype(compute_dtype), axis=-2
         ) / b_norm
         res_t = jnp.where(jnp.isfinite(res_t), res_t, jnp.inf)
         U = jnp.where((res_t < best_res)[..., None, :], U, U_best)
-        return U, outs, jnp.minimum(res_t, best_res), final[12]
+        return (U, outs, jnp.minimum(res_t, best_res),
+                final[12], final[14], final[13])
 
     active0 = jnp.ones_like(zt, dtype=bool)
     carry0 = core0 + (active0,)
@@ -332,7 +353,7 @@ def _fused_loop(
     U = U + a * D
     R = R - a * V
     res_final = jnp.linalg.norm(R, axis=-2) / b_norm
-    return U, outs, res_final, None
+    return U, outs, res_final, None, None, None
 
 
 def _safe_div(num, den):
@@ -435,7 +456,7 @@ def mbcg(
     b_norm = jnp.where(b_norm == 0, 1.0, b_norm)
 
     if fused_step is not None:
-        U, outs, res_final, num_refreshes = _fused_loop(
+        U, outs, res_final, num_refreshes, num_rescues, num_curvature_skips = _fused_loop(
             fused_step,
             Bc,
             b_norm,
@@ -466,6 +487,8 @@ def mbcg(
             residual_norm=res_final,
             basis=basis,
             num_refreshes=num_refreshes,
+            num_rescues=num_rescues,
+            num_curvature_skips=num_curvature_skips,
         )
 
     U0 = jnp.zeros_like(Bc)
@@ -501,16 +524,22 @@ def mbcg(
 
     def step_refresh(carry, it):
         (U, R, Z, D, rz, active, U_best, R_best, best_res,
-         period, since, nref) = carry
+         period, since, nref, ncurv, nresc) = carry
         V = matmul(D).astype(compute_dtype)
         dv = jnp.sum(D * V, axis=-2)
         alpha = _safe_div(rz, dv)
         # curvature guard: reduced-precision noise can round dᵀK̂d ≤ 0 —
-        # skip the (garbage) step; the direction restarts at the refresh
+        # skip the (garbage) step; the direction restarts at the refresh.
+        # Counted via ~(dv > 0), not (dv <= 0): NaN dv fails both
+        # comparisons and must register as a guard trip.
+        ncurv = ncurv + jnp.sum(active & ~(dv > 0)).astype(jnp.int32)
         alpha = jnp.where(dv > 0, alpha, 0.0)
         alpha = jnp.where(active, alpha, 0.0)
-        U = U + alpha[..., None, :] * D
-        Rrec = R - alpha[..., None, :] * V
+        # α ≠ 0 guards: a transiently non-finite D/V must not leak NaN into
+        # a frozen or curvature-skipped column through 0·NaN
+        a = alpha[..., None, :]
+        U = jnp.where(a != 0, U + a * D, U)
+        Rrec = jnp.where(a != 0, R - a * V, R)
         do_refresh = since + 1 >= period
 
         def _advance(U, Rrec, D):
@@ -519,7 +548,8 @@ def mbcg(
             beta = jnp.where(active, _safe_div(rz_new, rz), 0.0)
             Dn = jnp.where(active[..., None, :], Znew + beta[..., None, :] * D, D)
             return (U, Rrec, Znew, Dn, jnp.where(active, rz_new, rz),
-                    U_best, R_best, best_res, beta, jnp.float32(0.0))
+                    U_best, R_best, best_res, beta, jnp.float32(0.0),
+                    jnp.int32(0))
 
         # f32 residual refresh: replace the recursive residual with the true
         # b − K̂u, re-derive the masks from it (columns may REactivate), and
@@ -558,14 +588,20 @@ def mbcg(
                 jnp.linalg.norm(Rf, axis=-2), 1e-30
             )
             beta_f = jnp.where(drift < REFRESH_MOMENTUM_GATE, _safe_div(rzf, rz), 0.0)
-            Df = Zf + beta_f[..., None, :] * D
-            return (Uc, Rf, Zf, Df, rzf, Ub, Rb, rb, beta_f, jnp.max(drift))
+            bD = beta_f[..., None, :]
+            # β = 0 is a direction RESTART: take Zf itself, never 0·D — a
+            # non-finite D would otherwise poison the restarted direction
+            Df = jnp.where(bD > 0, Zf + bD * D, Zf)
+            return (Uc, Rf, Zf, Df, rzf, Ub, Rb, rb, beta_f, jnp.max(drift),
+                    jnp.sum(pull).astype(jnp.int32))
 
-        (U, Rn, Zn, Dn, rz_c, U_best, R_best, best_res, beta, drift_max) = (
+        (U, Rn, Zn, Dn, rz_c, U_best, R_best, best_res, beta, drift_max,
+         resc_inc) = (
             jax.lax.cond(do_refresh, _refresh, _advance, U, Rrec, D)
         )
         since = jnp.where(do_refresh, 0, since + 1)
         nref = nref + do_refresh.astype(jnp.int32)
+        nresc = nresc + resc_inc
         if refresh_adaptive:
             # geometric stretch while the recursion tracks the truth; snap
             # back to the base period the moment the drift gate is violated
@@ -582,20 +618,21 @@ def mbcg(
         # a column whose best refreshed iterate already meets tol freezes
         next_active = jnp.minimum(res, best_res) > tol
         return (U, Rn, Zn, Dn, rz_c, next_active, U_best, R_best, best_res,
-                period, since, nref), out
+                period, since, nref, ncurv, nresc), out
 
     carry0 = (U0, R0, Z0, D0, rz0, active0)
     step = step_plain
     if refresh_every:
         res0 = jnp.linalg.norm(R0, axis=-2) / b_norm
         carry0 = carry0 + (U0, R0, res0,
-                           jnp.int32(refresh_every), jnp.int32(0), jnp.int32(0))
+                           jnp.int32(refresh_every), jnp.int32(0), jnp.int32(0),
+                           jnp.int32(0), jnp.int32(0))
         step = step_refresh
     final_carry, outs = jax.lax.scan(step, carry0, jnp.arange(max_iters))
     U, R = final_carry[0], final_carry[1]
     alphas, betas, actives = outs[:3]
 
-    num_refreshes = None
+    num_refreshes = num_rescues = num_curvature_skips = None
     if refresh_every:
         # one last f32 refresh so post-final-cycle progress counts, then the
         # best refreshed iterate per column is the returned solve — with its
@@ -608,6 +645,8 @@ def mbcg(
         U = jnp.where((res_t < best_res)[..., None, :], U, U_best)
         res_final = jnp.minimum(res_t, best_res)
         num_refreshes = final_carry[11]
+        num_curvature_skips = final_carry[12]
+        num_rescues = final_carry[13]
     else:
         res_final = jnp.linalg.norm(R, axis=-2) / b_norm
     num_iters = jnp.sum(actives, axis=0)  # (..., t)
@@ -629,6 +668,8 @@ def mbcg(
         residual_norm=res_final,
         basis=basis,
         num_refreshes=num_refreshes,
+        num_rescues=num_rescues,
+        num_curvature_skips=num_curvature_skips,
     )
 
 

@@ -17,15 +17,63 @@ construction.
 ``grad_mask`` covers the one structured-training variant in the zoo
 (SGPR's ``learn_inducing=False`` freezes the inducing locations) without
 forking the loop.
+
+Robustness (the training leg of the solve-health layer):
+
+  * non-finite ``X``/``y`` are rejected up front with an actionable error —
+    one NaN row would otherwise poison every step silently;
+  * the known jax-0.4.37 Pallas interpret-mode jvp gap (``pallas_call``'s
+    jvp rule dies on a bare ``assert env.grid_context is not None`` under
+    ``jax.value_and_grad``) is detected on the first step and the model is
+    LOUDLY degraded to ``mode="dense"`` training — one warning naming the
+    bug and the override — instead of surfacing an opaque AssertionError
+    from deep inside jax;
+  * every step's loss is checked for finiteness on the host, under the
+    model's ``settings.on_failure`` policy: ``raise`` fails the fit,
+    ``degrade`` retries the SAME step from the pre-step parameters at
+    ``precision="highest"`` (once; the poisoned update is discarded), and
+    ``warn`` records the non-finite loss and skips the poisoned update so
+    the parameters never absorb NaN gradients.
 """
 
 from __future__ import annotations
 
+import dataclasses
+import math
+import warnings
 from typing import Callable
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.health import SolveFailure, SolveHealthWarning
 from repro.optim import adam
+
+#: substrings identifying the jax 0.4.37 interpret-mode pallas jvp failure
+#: (jax/_src/pallas/core.py `assert env.grid_context is not None`, reached
+#: via _pallas_call_jvp_rule) — matched against the exception traceback.
+_PALLAS_JVP_MARKERS = ("pallas",)
+
+
+def _is_pallas_jvp_gap(err: BaseException) -> bool:
+    """Is this the known pallas-interpret jvp AssertionError (vs a real one)?"""
+    import traceback
+
+    if not isinstance(err, AssertionError):
+        return False
+    tb = "".join(traceback.format_exception(type(err), err, err.__traceback__))
+    return any(marker in tb for marker in _PALLAS_JVP_MARKERS)
+
+
+def _require_finite(name: str, arr) -> None:
+    bad = int(jax.device_get(jnp.sum(~jnp.isfinite(arr))))
+    if bad:
+        raise ValueError(
+            f"fit_gp: {name} contains {bad} non-finite value(s) (NaN/Inf) "
+            f"out of {arr.size}; drop or impute the offending rows before "
+            "fitting — a single non-finite entry poisons every MLL solve "
+            "and gradient"
+        )
 
 
 def fit_gp(
@@ -45,7 +93,7 @@ def fit_gp(
     Args:
       model: a :class:`repro.gp.model.GPModel` (structural — anything with
         ``prepare_inputs`` / ``init_params`` / ``loss``).
-      X, y: training inputs (n, d) and targets (n,).
+      X, y: training inputs (n, d) and targets (n,).  Must be finite.
       steps, lr: Adam schedule.
       key: PRNG key driving the per-step probe draws (fixed default →
         deterministic histories; models pass their historical defaults).
@@ -57,25 +105,107 @@ def fit_gp(
       (params, history) — final parameters and the per-step loss floats.
     """
     key = jax.random.PRNGKey(0) if key is None else key
+    X = jnp.asarray(X)
+    y = jnp.asarray(y)
+    _require_finite("X", X)
+    _require_finite("y", y)
     data = model.prepare_inputs(X)
     params = model.init_params(X)
     init, update = adam(lr)
     opt = init(params)
 
-    @jax.jit
-    def step(params, opt, k):
-        loss, g = jax.value_and_grad(model.loss)(params, data, y, k)
-        if grad_mask is not None:
-            g = grad_mask(g)
-        params, opt = update(g, opt, params)
-        return params, opt, loss
+    def make_step(m, d):
+        @jax.jit
+        def step(params, opt, k):
+            loss, g = jax.value_and_grad(m.loss)(params, d, y, k)
+            if grad_mask is not None:
+                g = grad_mask(g)
+            params, opt = update(g, opt, params)
+            return params, opt, loss
+
+        return step
+
+    step = make_step(model, data)
+    policy = getattr(getattr(model, "settings", None), "on_failure", "warn")
 
     n = y.shape[-1]
     history = []
-    for i in range(steps):
+    pallas_degraded = False
+    precision_degraded = False
+    i = 0
+    while i < steps:
         key, sub = jax.random.split(key)
-        params, opt, loss = step(params, opt, sub)
-        history.append(float(loss))
+        try:
+            params_new, opt_new, loss = step(params, opt, sub)
+            loss_f = float(loss)
+        except AssertionError as e:
+            if (
+                not pallas_degraded
+                and getattr(model, "mode", None) == "pallas"
+                and _is_pallas_jvp_gap(e)
+            ):
+                warnings.warn(
+                    "fit_gp: jax 0.4.37's interpret-mode pallas_call has no "
+                    "working jvp rule (its jvp path dies on `assert "
+                    "env.grid_context is not None` in jax/_src/pallas/core.py"
+                    "), so mode='pallas' cannot train under value_and_grad "
+                    "on this jax pin.  Degrading this fit to mode='dense' "
+                    "training — same kernel, same MLL, dense matmul; "
+                    "serve/predict with the pallas model afterwards, or "
+                    "pass mode='dense' explicitly to silence this warning.",
+                    SolveHealthWarning,
+                    stacklevel=2,
+                )
+                pallas_degraded = True
+                model = dataclasses.replace(model, mode="dense")
+                data = model.prepare_inputs(X)
+                step = make_step(model, data)
+                continue  # retry the SAME step index with the dense model
+            raise
+        if not math.isfinite(loss_f):
+            if policy == "raise":
+                raise SolveFailure(
+                    f"fit_gp: non-finite loss ({loss_f}) at step {i} with "
+                    "on_failure='raise'"
+                )
+            if (
+                policy == "degrade"
+                and not precision_degraded
+                and getattr(model, "settings", None) is not None
+                and model.settings.precision != "highest"
+            ):
+                warnings.warn(
+                    f"fit_gp: non-finite loss at step {i}; retrying from the "
+                    "pre-step parameters at precision='highest' (the "
+                    "poisoned update was discarded)",
+                    SolveHealthWarning,
+                    stacklevel=2,
+                )
+                precision_degraded = True
+                if getattr(model, "precision", None) is not None:
+                    # the model-level knob wins over settings in __post_init__
+                    model = dataclasses.replace(model, precision="highest")
+                else:
+                    model = dataclasses.replace(
+                        model,
+                        settings=dataclasses.replace(
+                            model.settings, precision="highest"
+                        ),
+                    )
+                step = make_step(model, data)
+                continue  # retry the SAME step; params/opt were not advanced
+            warnings.warn(
+                f"fit_gp: non-finite loss at step {i}; skipping the "
+                "poisoned update (parameters unchanged this step)",
+                SolveHealthWarning,
+                stacklevel=2,
+            )
+            history.append(loss_f)  # honest history: the step DID go bad
+            i += 1
+            continue
+        params, opt = params_new, opt_new
+        history.append(loss_f)
         if verbose and i % log_every == 0:
-            print(f"step {i:4d}  -mll/n {float(loss)/n:.4f}")
+            print(f"step {i:4d}  -mll/n {loss_f/n:.4f}")
+        i += 1
     return params, history

@@ -24,19 +24,41 @@ in the report).
 ``--model multitask`` serves a :class:`repro.gp.MultitaskGP` over
 long-format (x, task) rows — queries carry a task column and streamed
 observations append complete task blocks (the Kronecker-preserving case).
+
+``--chaos`` runs the **fault-injection drill** over the threaded driver:
+a seeded :class:`repro.core.FaultSchedule` corrupts the kernel matmuls
+mid-serve (NaN in the reduced-precision path, then a total outage) while
+query workers keep hammering the session.  The drill asserts the whole
+robustness stack end-to-end — the degradation ladder's
+``precision_f32`` escalation heals the mixed-precision NaNs, the circuit
+breaker opens under the outage and queries degrade to the last
+consistent cache instead of erroring, and the breaker re-closes on
+recovery — and exits nonzero if any query raised, no escalation was
+recorded, or no degraded query was served.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import sys
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import BBMMSettings
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    FaultInjectingOperator,
+    FaultSchedule,
+    build_posterior_cache,
+    extend_posterior_cache,
+)
+from repro.core.health import SolveHealthWarning
 from repro.gp import (
     SGPR,
     SKI,
@@ -46,7 +68,7 @@ from repro.gp import (
     MultitaskGP,
     to_long_format,
 )
-from repro.serving import PosteriorSession
+from repro.serving import CircuitBreaker, PosteriorSession
 
 MODELS = ("exact", "sgpr", "ski", "dkl", "blr", "multitask")
 
@@ -323,6 +345,244 @@ def run_serve_threaded(
     return metrics
 
 
+def _inject_operator(op, schedule, negative_diag=0.0):
+    """Thread a FaultInjectingOperator INSIDE the AddedDiag wrapper, so the
+    engine's preconditioner dispatch still sees the K + σ²I structure it
+    builds the pivoted-Cholesky factors from."""
+    if isinstance(op, AddedDiagOperator):
+        return AddedDiagOperator(
+            FaultInjectingOperator(
+                op.base, schedule=schedule, negative_diag=negative_diag
+            ),
+            op.sigma2,
+        )
+    return FaultInjectingOperator(
+        op, schedule=schedule, negative_diag=negative_diag
+    )
+
+
+class _ChaosModel:
+    """GPModel wrapper that injects faults at the operator seam.
+
+    Delegates the whole protocol to the wrapped model and overrides only
+    the engine-facing cache paths (``operator`` / ``posterior_cache`` /
+    ``update_cache``) so every mBCG solve runs against a
+    :class:`FaultInjectingOperator` driven by one shared live
+    :class:`FaultSchedule` — the drill toggles the schedule mid-run and
+    already-jitted solves feel it (the injection decision is a
+    ``pure_callback``, made per execution, not per trace)."""
+
+    def __init__(self, base, schedule, negative_diag=0.0):
+        self._base = base
+        self.schedule = schedule
+        self.negative_diag = negative_diag
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+    def operator(self, params, data):
+        return _inject_operator(
+            self._base.operator(params, data), self.schedule, self.negative_diag
+        )
+
+    def posterior_cache(self, params, data, y, *, key=None, variance_cache=True):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return build_posterior_cache(
+            self.operator(params, data), y, key, self._base.settings,
+            variance_cache=variance_cache,
+        )
+
+    def update_cache(self, params, data, y, cache, X_new, y_new):
+        return extend_posterior_cache(
+            self.operator(params, data), y, cache, self._base.settings
+        )
+
+
+def run_serve_chaos(
+    *,
+    n: int = 128,
+    d: int = 2,
+    batch: int = 64,
+    requests_per_phase: int = 6,
+    threads: int = 4,
+    max_cg_iters: int = 40,
+    nan_rate: float = 1.0,
+    latency_s: float = 0.0,
+    breaker_threshold: int = 2,
+    breaker_reset_s: float = 0.3,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """The fault-injection drill: serve through injected faults, assert the
+    robustness stack absorbed them.
+
+    Four phases over one threaded :class:`PosteriorSession` (ExactGP,
+    ``precision="mixed"``, ``on_failure="degrade"``):
+
+      1. **clean** — build + serve, schedule inactive (health baseline);
+      2. **nan** — ``nan_rate`` corrupts the *reduced-precision* matmuls
+         only; a streamed ``observe`` forces a cache refresh whose solve
+         goes unhealthy and the ladder's ``precision_f32`` rung heals it
+         (≥1 recorded precision-escalation retry);
+      3. **outage** — every matmul and ``to_dense`` goes NaN; a params
+         nudge invalidates the cache, guarded rebuilds exhaust their
+         retries, the breaker opens, and queries serve the last consistent
+         cache flagged degraded (≥1 degraded query, zero raised queries);
+      4. **recovery** — faults off, breaker cool-down elapses, the
+         half-open trial rebuild succeeds and the breaker re-closes.
+
+    Returns the metric row; ``chaos_ok`` is the CI gate (exit status).
+    """
+    key = jax.random.PRNGKey(seed)
+    kd, kq, ko = jax.random.split(key, 3)
+    X, y = _toy(kd, n, d)
+    gp = build_model("exact", max_cg_iters=max_cg_iters, precision="mixed")
+    gp.settings = dataclasses.replace(gp.settings, on_failure="degrade")
+    params = gp.init_params(X)
+    schedule = FaultSchedule(seed, reduced_only=True, latency_s=latency_s)
+    chaos = _ChaosModel(gp, schedule)
+    session = PosteriorSession(
+        chaos, params, X, y,
+        max_staleness=8,
+        query_deadline_s=60.0,
+        rebuild_retries=1,
+        rebuild_backoff_s=0.01,
+        breaker_threshold=breaker_threshold,
+        breaker_reset_s=breaker_reset_s,
+    )
+
+    unhandled: list = []
+    handled_failures: list = []
+    latencies: list = []
+    lat_lock = threading.Lock()
+
+    def one_query(r):
+        Xq = _query_batch(jax.random.fold_in(kq, r), batch, d)
+        t0 = time.perf_counter()
+        try:
+            mean, _ = session.query(Xq)
+            jax.block_until_ready(mean)
+        except Exception as e:  # noqa: BLE001 — the drill counts, never hides
+            with lat_lock:
+                unhandled.append(repr(e))
+            return
+        with lat_lock:
+            latencies.append(time.perf_counter() - t0)
+
+    def fire_queries(pool, base, k=requests_per_phase):
+        futures = [pool.submit(one_query, base + r) for r in range(k)]
+        for f in futures:
+            f.result()
+
+    def esc_count():
+        with session._lock:
+            return sum(
+                1
+                for rep in session.health_reports
+                for rung in rep.rungs
+                if rung.rung == "precision_f32"
+            )
+
+    with warnings.catch_warnings():
+        # degrade-path warnings are the EXPECTED signal here; count them
+        # via the health reports instead of spamming the drill output
+        warnings.simplefilter("ignore", SolveHealthWarning)
+        t_start = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=threads) as pool:
+            # phase 1: clean serving baseline
+            jax.block_until_ready(session.query(_query_batch(kq, batch, d))[0])
+            fire_queries(pool, 0)
+
+            # phase 2: NaN in the reduced-precision matmuls; the streamed
+            # observe refreshes the cache through the degradation ladder
+            schedule.nan_rate = nan_rate
+            Xn, yn = _observation(jax.random.fold_in(ko, 0), 1, d)
+            try:
+                session.observe(Xn, yn)
+            except Exception as e:  # noqa: BLE001
+                handled_failures.append(("observe_nan", repr(e)))
+            fire_queries(pool, 100)
+            escalations = esc_count()
+
+            # phase 3: total outage — rebuilds cannot succeed at ANY rung
+            schedule.nan_rate = 0.0
+            schedule.total_outage = True
+            session.update_params(
+                jax.tree_util.tree_map(lambda p: p + 1e-6, session.params)
+            )
+            Xn, yn = _observation(jax.random.fold_in(ko, 1), 1, d)
+            try:
+                session.observe(Xn, yn)
+            except Exception as e:  # noqa: BLE001
+                handled_failures.append(("observe_outage", repr(e)))
+            fire_queries(pool, 200)
+            degraded_after_outage = session.degraded_queries
+            breaker_opened = any(
+                to == CircuitBreaker.OPEN
+                for _, to, _ in session.breaker.transitions
+            )
+
+            # phase 4: recovery — faults off, cool-down, half-open trial
+            schedule.total_outage = False
+            time.sleep(breaker_reset_s + 0.05)
+            fire_queries(pool, 300)
+        wall = time.perf_counter() - t_start
+
+    stats = session.health_stats()
+    lat_sorted = sorted(latencies)
+    total = len(latencies) + len(unhandled)
+    metrics = {
+        "model": "serve_chaos_exact",
+        "n": n,
+        "batch": batch,
+        "threads": threads,
+        "requests": total,
+        "wall_s": wall,
+        "query_ms_p50": (
+            lat_sorted[len(lat_sorted) // 2] * 1e3 if lat_sorted else float("nan")
+        ),
+        "query_ms_p99": (
+            lat_sorted[min(len(lat_sorted) - 1, int(len(lat_sorted) * 0.99))]
+            * 1e3
+            if lat_sorted
+            else float("nan")
+        ),
+        "error_rate": len(unhandled) / total if total else 0.0,
+        "unhandled_exceptions": len(unhandled),
+        "handled_failures": len(handled_failures),
+        "precision_escalations": escalations,
+        "degraded_queries": stats["degraded_queries"],
+        "rebuild_failures": stats["rebuild_failures"],
+        "breaker_transitions": len(stats["breaker_transitions"]),
+        "breaker_state": stats["breaker_state"],
+        "fault_calls": schedule.calls,
+        "fault_injected": len(schedule.injected),
+    }
+    metrics["chaos_ok"] = bool(
+        not unhandled
+        and escalations >= 1
+        and degraded_after_outage >= 1
+        and breaker_opened
+        and stats["breaker_state"] == CircuitBreaker.CLOSED
+    )
+    if verbose:
+        print(
+            f"[chaos exact] {total} queries, {len(unhandled)} unhandled | "
+            f"{escalations} precision escalation(s), "
+            f"{stats['degraded_queries']} degraded quer"
+            f"{'y' if stats['degraded_queries'] == 1 else 'ies'}, "
+            f"{stats['rebuild_failures']} rebuild failure(s) | breaker "
+            f"{'→'.join([CircuitBreaker.CLOSED] + [t for _, t, _ in stats['breaker_transitions']])} | "
+            f"{schedule.calls} matmul calls, {len(schedule.injected)} injected | "
+            f"p50 {metrics['query_ms_p50']:.1f} ms p99 {metrics['query_ms_p99']:.1f} ms | "
+            f"{'OK' if metrics['chaos_ok'] else 'FAILED'}"
+        )
+        if unhandled:
+            for e in unhandled[:5]:
+                print(f"  unhandled: {e}")
+    return metrics
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="sgpr", choices=list(MODELS))
@@ -343,8 +603,28 @@ def main(argv=None):
     ap.add_argument("--threads", type=int, default=0,
                     help="run the concurrent thread-pool driver with this "
                     "many query workers (0 = sequential driver)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection drill over the threaded "
+                    "driver (NaN injection -> ladder escalation -> outage -> "
+                    "breaker -> recovery); exits nonzero unless the "
+                    "robustness stack absorbed every fault")
+    ap.add_argument("--chaos-nan-rate", type=float, default=1.0,
+                    help="per-matmul NaN probability during the injection "
+                    "phase (seeded; 1.0 = every reduced-precision call)")
+    ap.add_argument("--chaos-latency", type=float, default=0.0,
+                    help="artificial per-matmul host latency (seconds)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.chaos:
+        metrics = run_serve_chaos(
+            n=args.n, d=args.d, batch=args.batch,
+            threads=max(args.threads, 2), max_cg_iters=args.max_cg_iters,
+            nan_rate=args.chaos_nan_rate, latency_s=args.chaos_latency,
+            seed=args.seed,
+        )
+        if not metrics["chaos_ok"]:
+            sys.exit(1)
+        return metrics
     if args.threads > 0:
         return run_serve_threaded(
             model=args.model, n=args.n, d=args.d, requests=args.requests,

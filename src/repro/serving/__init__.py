@@ -9,6 +9,20 @@ async refresh.  The batched request driver lives in
 ``repro.launch.gp_serve``.
 """
 
-from .session import CacheInfo, PosteriorSession, fingerprint
+from .session import (
+    CacheInfo,
+    CircuitBreaker,
+    PosteriorSession,
+    QueryDeadlineExceeded,
+    RebuildFailed,
+    fingerprint,
+)
 
-__all__ = ["CacheInfo", "PosteriorSession", "fingerprint"]
+__all__ = [
+    "CacheInfo",
+    "CircuitBreaker",
+    "PosteriorSession",
+    "QueryDeadlineExceeded",
+    "RebuildFailed",
+    "fingerprint",
+]

@@ -40,11 +40,14 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
+import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import health
 from repro.gp.model import missing_protocol_methods, supports_streaming
 
 
@@ -70,6 +73,87 @@ class CacheInfo:
     fingerprint: str  # of the (params, X, y) this cache serves
     n: int  # training rows covered
     staleness: int  # incremental updates since the last full build
+    degraded: bool = False  # True while queries are being answered from the
+    # last CONSISTENT cache instead of a current one — the circuit breaker
+    # is open (consecutive rebuild failures) and fresh mutations are not yet
+    # reflected in served posteriors.  Cleared by the next successful swap.
+
+
+class QueryDeadlineExceeded(TimeoutError):
+    """A query could not be admitted within its per-query deadline."""
+
+
+class RebuildFailed(RuntimeError):
+    """No cache could be (re)built and no consistent fallback exists."""
+
+
+class CircuitBreaker:
+    """Per-session circuit breaker over posterior-cache rebuilds.
+
+    Classic three-state machine, deterministic via an injectable clock:
+
+      * ``closed``    — rebuilds flow normally; failures count up;
+      * ``open``      — ``threshold`` consecutive failures tripped it; no
+        rebuild is attempted until ``reset_after_s`` has elapsed (queries
+        serve the last consistent cache, flagged degraded);
+      * ``half_open`` — the cool-down elapsed; ONE trial rebuild is
+        admitted — success re-closes, failure re-opens.
+
+    ``transitions`` records every (from, to, t) edge — the assertion
+    surface for deterministic breaker tests.
+    """
+
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+    def __init__(self, threshold: int = 3, reset_after_s: float = 30.0, *, clock=time.monotonic):
+        self.threshold = int(threshold)
+        self.reset_after_s = float(reset_after_s)
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.state = self.CLOSED
+        self.failures = 0
+        self._opened_at: float | None = None
+        self.transitions: list = []
+
+    def _set(self, state: str) -> None:
+        if state != self.state:
+            self.transitions.append((self.state, state, self._clock()))
+            self.state = state
+
+    def allow(self) -> bool:
+        """May a rebuild be attempted right now?"""
+        with self._lock:
+            if self.state == self.OPEN:
+                if self._clock() - self._opened_at >= self.reset_after_s:
+                    self._set(self.HALF_OPEN)
+                    return True
+                return False
+            return True  # closed, or half-open trial
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.failures = 0
+            self._set(self.CLOSED)
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            if self.state == self.HALF_OPEN or self.failures >= self.threshold:
+                self._set(self.OPEN)
+                self._opened_at = self._clock()
+
+
+def _require_finite(name: str, arr) -> None:
+    bad = int(jax.device_get(jnp.sum(~jnp.isfinite(arr))))
+    if bad:
+        raise ValueError(
+            f"{name} contains {bad} non-finite value(s) (NaN/Inf) out of "
+            f"{arr.size}; clean the rows (e.g. drop or impute them) before "
+            "conditioning a posterior on them — a single non-finite entry "
+            "poisons every solve"
+        )
 
 
 class PosteriorSession:
@@ -90,9 +174,41 @@ class PosteriorSession:
         compacted (conservative variances at fixed memory; see
         ``repro.core.inference.extend_posterior_cache``).
       build: build the cache eagerly (default) or lazily on first query.
+      query_deadline_s: per-query admission deadline — a query that cannot
+        obtain a servable cache (it is waiting on another worker's rebuild)
+        within this budget serves the last consistent cache degraded, or
+        raises :class:`QueryDeadlineExceeded` if none exists.  None (default)
+        waits indefinitely.  The deadline governs admission, not the jax
+        compute itself (which cannot be preempted).
+      rebuild_retries / rebuild_backoff_s: failed cache rebuilds are retried
+        up to ``rebuild_retries`` more times with exponential backoff
+        (``rebuild_backoff_s``·2^attempt between attempts) before counting
+        as a rebuild failure.
+      breaker_threshold / breaker_reset_s: consecutive rebuild failures
+        (post-retry) before the per-session :class:`CircuitBreaker` opens,
+        and its cool-down before a half-open trial.  While open, queries
+        are answered from the last consistent cache with
+        ``cache_info.degraded=True`` instead of erroring the request path.
+      clock / sleep: injectable time sources (deterministic tests).
     """
 
-    def __init__(self, model, params, X, y, *, max_staleness: int = 8, build: bool = True):
+    def __init__(
+        self,
+        model,
+        params,
+        X,
+        y,
+        *,
+        max_staleness: int = 8,
+        build: bool = True,
+        query_deadline_s: float | None = None,
+        rebuild_retries: int = 2,
+        rebuild_backoff_s: float = 0.05,
+        breaker_threshold: int = 3,
+        breaker_reset_s: float = 30.0,
+        clock=time.monotonic,
+        sleep=time.sleep,
+    ):
         missing = missing_protocol_methods(model)
         if missing:
             raise TypeError(
@@ -101,6 +217,19 @@ class PosteriorSession:
             )
         self.model = model
         self.max_staleness = int(max_staleness)
+        self.query_deadline_s = query_deadline_s
+        self.rebuild_retries = int(rebuild_retries)
+        self.rebuild_backoff_s = float(rebuild_backoff_s)
+        self._clock = clock
+        self._sleep = sleep
+        self.breaker = CircuitBreaker(
+            breaker_threshold, breaker_reset_s, clock=clock
+        )
+        # observability: solve-health reports from builds/updates (bounded),
+        # and the serving-degradation counters the chaos harness asserts on
+        self.health_reports: deque = deque(maxlen=256)
+        self.degraded_queries = 0
+        self.rebuild_failures = 0
         self._lock = threading.RLock()
         # single-flight gate for lazy rebuilds: N query workers hitting a
         # stale cache run ONE build (the rest wait for the swap), not N
@@ -113,6 +242,8 @@ class PosteriorSession:
         self._params = params
         self._X = jnp.atleast_2d(jnp.asarray(X))
         self._y = jnp.atleast_1d(jnp.asarray(y))
+        _require_finite("X", self._X)
+        _require_finite("y", self._y)
         self._data = model.prepare_inputs(self._X)
         self._state_fp = fingerprint((self._params, self._X, self._y))
         self._cache = None
@@ -171,8 +302,10 @@ class PosteriorSession:
         yet): a mutation that landed mid-build must not be clobbered by the
         now-stale buffer.  Returns the swapped CacheInfo, or None when the
         buffer was discarded."""
-        cache = self.model.posterior_cache(params, data, y)
+        with health.collect() as reports:
+            cache = self.model.posterior_cache(params, data, y)
         with self._lock:
+            self.health_reports.extend(reports)
             if self._state_fp != fp and self._cache is not None:
                 return None  # state moved on mid-build: discard buffer
             self._version += 1
@@ -200,6 +333,29 @@ class PosteriorSession:
             return info
         with self._lock:
             return self._info
+
+    def _rebuild_guarded(self) -> CacheInfo | None:
+        """``rebuild`` with bounded exponential-backoff retry + breaker
+        accounting: the request-path (and observe-path) rebuild entry.
+
+        Returns the swapped CacheInfo, or raises the final attempt's error
+        after recording a (post-retry) rebuild failure with the breaker.
+        """
+        last_err = None
+        for attempt in range(1 + self.rebuild_retries):
+            if attempt:
+                self._sleep(self.rebuild_backoff_s * (2 ** (attempt - 1)))
+            try:
+                info = self.rebuild()
+            except Exception as e:  # noqa: BLE001 — any build fault degrades
+                last_err = e
+                continue
+            self.breaker.record_success()
+            return info
+        self.breaker.record_failure()
+        with self._lock:
+            self.rebuild_failures += 1
+        raise last_err
 
     def refresh_if_stale(self) -> bool:
         """Poll-style hook for a background refresher: rebuild when the
@@ -270,6 +426,10 @@ class PosteriorSession:
             raise ValueError(
                 f"X_new rows ({X_new.shape[0]}) != y_new length ({y_new.shape[0]})"
             )
+        # reject non-finite appends BEFORE any mutation: the session keeps
+        # serving its current posterior exactly as if the call never happened
+        _require_finite("X_new", X_new)
+        _require_finite("y_new", y_new)
         with self._lock:
             X_full = jnp.concatenate([self._X, X_new], axis=0)
             y_full = jnp.concatenate([self._y, y_new], axis=0)
@@ -291,13 +451,25 @@ class PosteriorSession:
                 v0 = self._version
                 self._appends_in_flight += 1
         if not can_stream:
-            self.rebuild()
+            self._rebuild_guarded()
             return "rebuild"
         try:
-            new_cache = self.model.update_cache(
-                params, data, y_full, cache, X_new, y_new
-            )
+            try:
+                with health.collect() as reports:
+                    new_cache = self.model.update_cache(
+                        params, data, y_full, cache, X_new, y_new
+                    )
+            except Exception:
+                # the data IS installed (validated above) but the cache is
+                # now stale — the next query rebuilds.  Count the failure
+                # with the breaker so a persistently failing update path
+                # degrades instead of hammering
+                self.breaker.record_failure()
+                with self._lock:
+                    self.rebuild_failures += 1
+                raise
             with self._lock:
+                self.health_reports.extend(reports)
                 # discard if another mutation landed (fingerprint) or any
                 # other build already swapped a cache in (version) — never
                 # clobber a fresher full build with this incremental one
@@ -315,30 +487,118 @@ class PosteriorSession:
         return "append"
 
     # -- queries ------------------------------------------------------------
+    def _snapshot_consistent(self):
+        """The (params, data, cache) triple a query may serve non-degraded,
+        or None when a rebuild is needed first."""
+        with self._lock:
+            if self._cache is not None and self._info.fingerprint == self._state_fp:
+                return self._params, self._data, self._cache
+            # an incremental append is computing its refreshed cache
+            # off-lock: serve the PREVIOUS consistent triple instead of
+            # stalling on — or duplicating — the in-progress update
+            if self._appends_in_flight > 0 and self._serving is not None:
+                return self._serving
+            return None
+
+    def _serve_degraded(self):
+        """Snapshot the last consistent triple for a degraded answer (or
+        None if nothing was ever consistent), flagging ``cache_info``."""
+        with self._lock:
+            if self._serving is None:
+                return None
+            self.degraded_queries += 1
+            if self._info is not None and not self._info.degraded:
+                self._info = dataclasses.replace(self._info, degraded=True)
+            return self._serving
+
     def query(self, Xstar, **kwargs):
         """Posterior (mean, variance) at Xstar, served from the cache —
         zero CG iterations.  Rebuilds first if the cache is stale —
         single-flight under concurrency: when many query workers see the
-        same stale cache, one runs the build and the rest wait for the
-        swap instead of launching duplicates (async refreshers avoid even
-        the wait via ``rebuild_async``).  The (params, data, cache)
-        snapshot is taken only when cache and state fingerprints agree
-        under the lock, so a mutation racing in between observe's state
-        update and its rebuild can never pair new data with an old cache;
-        while an incremental append is in flight, queries serve the
-        previous consistent (params, data, cache) triple instead."""
+        same stale cache, one runs the build (with retry/backoff via
+        ``_rebuild_guarded``) and the rest wait for the swap instead of
+        launching duplicates.  The (params, data, cache) snapshot is taken
+        only when cache and state fingerprints agree under the lock, so a
+        mutation racing in between observe's state update and its rebuild
+        can never pair new data with an old cache; while an incremental
+        append is in flight, queries serve the previous consistent
+        (params, data, cache) triple instead.
+
+        Hardened request path: when the circuit breaker is open (or a
+        guarded rebuild just exhausted its retries), the query is answered
+        from the LAST CONSISTENT triple with ``cache_info.degraded=True``
+        instead of erroring — stale-but-finite beats unavailable for a
+        serving posterior.  :class:`RebuildFailed` is raised only when no
+        consistent cache has ever existed.  ``query_deadline_s`` bounds how
+        long admission may wait on another worker's in-flight rebuild
+        (:class:`QueryDeadlineExceeded` when nothing is servable in time).
+        """
+        deadline = (
+            None
+            if self.query_deadline_s is None
+            else self._clock() + self.query_deadline_s
+        )
         while True:
-            with self._lock:
-                if self._cache is not None and self._info.fingerprint == self._state_fp:
-                    params, data, cache = self._params, self._data, self._cache
+            triple = self._snapshot_consistent()
+            if triple is not None:
+                break
+            # a rebuild is needed: breaker-gated, deadline-bounded
+            if not self.breaker.allow():
+                triple = self._serve_degraded()
+                if triple is not None:
                     break
-                # an incremental append is computing its refreshed cache
-                # off-lock: serve the PREVIOUS consistent triple instead of
-                # stalling on — or duplicating — the in-progress update
-                if self._appends_in_flight > 0 and self._serving is not None:
-                    params, data, cache = self._serving
-                    break
-            with self._rebuild_gate:
+                raise RebuildFailed(
+                    "circuit breaker is open and no consistent cache was "
+                    "ever built for this session"
+                )
+            if deadline is not None:
+                remaining = deadline - self._clock()
+                acquired = remaining > 0 and self._rebuild_gate.acquire(
+                    timeout=remaining
+                )
+                if not acquired:
+                    triple = self._serve_degraded()
+                    if triple is not None:
+                        break
+                    raise QueryDeadlineExceeded(
+                        f"query could not be admitted within "
+                        f"{self.query_deadline_s}s (rebuild in flight)"
+                    )
+            else:
+                self._rebuild_gate.acquire()
+            try:
                 if self.stale():  # may have been rebuilt while we waited
-                    self.rebuild()
-        return self.model.predict_cached(params, data, cache, jnp.asarray(Xstar), **kwargs)
+                    try:
+                        self._rebuild_guarded()
+                    except Exception as e:
+                        triple = self._serve_degraded()
+                        if triple is not None:
+                            break
+                        raise RebuildFailed(
+                            "posterior cache rebuild failed and no "
+                            "consistent cache exists to degrade to"
+                        ) from e
+            finally:
+                self._rebuild_gate.release()
+        params, data, cache = triple
+        return self.model.predict_cached(
+            params, data, cache, jnp.asarray(Xstar), **kwargs
+        )
+
+    def health_stats(self) -> dict:
+        """Operational counters + solve-health tallies for dashboards/tests."""
+        with self._lock:
+            by_status: dict = {}
+            for r in self.health_reports:
+                by_status[r.status] = by_status.get(r.status, 0) + 1
+            return {
+                "breaker_state": self.breaker.state,
+                "breaker_failures": self.breaker.failures,
+                "breaker_transitions": list(self.breaker.transitions),
+                "degraded_queries": self.degraded_queries,
+                "rebuild_failures": self.rebuild_failures,
+                "reports_by_status": by_status,
+                "degraded_rungs": sum(
+                    1 for r in self.health_reports if r.degraded
+                ),
+            }

@@ -1,0 +1,249 @@
+"""Million-row exact GPs: partitioned kernel MVMs (Wang et al. 2019).
+
+The scale claim of the BBMM paper made measurable: ``mode=
+"pallas_partitioned"`` streams K one (panel_rows × n) row-panel at a time,
+so an exact-GP engine solve at n = 10⁵ runs on this CPU container inside
+a ~128 MB panel working set instead of the 40 GB the dense K would need.
+
+Three row families land in BENCH_speed.json:
+
+  * ``million``            — per-size: one streamed MVM (total + per-panel
+    wall time), an engine solve + posterior cache build, and the memory
+    table (panel bytes vs n² bytes) from the panel-accounting hook;
+  * ``million_roofline``   — t ≈ c·n² fitted on the measured sizes and
+    extrapolated to n = 10⁶ (MVM seconds + panel working set there);
+  * ``million_crossover``  — the BBMM-vs-Cholesky crossover sweep at small
+    n (where Cholesky still wins on CPU) with the dense_direct routing
+    decision, plus a summary row naming the crossover n.
+
+``MILLION_SIZES`` (comma-separated) overrides the size grid — CI smoke
+runs ``MILLION_SIZES=20000``; the full fast-mode grid is
+{2·10⁴, 5·10⁴, 10⁵}.
+"""
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    DenseOperator,
+    build_posterior_cache,
+    collect,
+    engine_state,
+    panel_accounting,
+)
+from repro.gp import ExactGP, KernelOperator, RBFKernel
+from .common import emit, save_artifact, timeit
+
+SIZES = (20_000, 50_000, 100_000)
+CROSSOVER_SIZES = (256, 512, 1024, 2048, 4096)
+
+
+def _sizes():
+    env = os.environ.get("MILLION_SIZES")
+    if env:
+        return tuple(int(s) for s in env.split(",") if s.strip())
+    return SIZES
+
+
+def _mk_problem(n, d=4):
+    # well-conditioned problem at scale: standard-normal inputs keep the
+    # kernel locally supported at lengthscale 0.25 (uniform-[0,1] inputs
+    # would make K near-constant and κ explode), unit noise keeps κ
+    # benchmark-friendly — we are measuring the streaming machinery, not
+    # CG's worst case (same recipe tests/test_partitioned.py validates)
+    X = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    y = jnp.sin(2 * X[:, 0]) + 0.1 * jax.random.normal(
+        jax.random.PRNGKey(1), (n,)
+    )
+    kern = RBFKernel(
+        lengthscale=jnp.float32(0.25), outputscale=jnp.float32(1.0)
+    )
+    return X, y, kern
+
+
+def _bench_scale(rows, fast):
+    # the recipe tests/test_partitioned.py validates at n=20000: tol 0.1 is
+    # reached in ~8 CG iterations there and ~13 at n=50000 (denser data →
+    # more correlated rows → a few more iters); a too-small budget
+    # mis-classifies the still-transient probe column as DIVERGED
+    settings = BBMMSettings(
+        num_probes=2,
+        max_cg_iters=25,
+        cg_tol=0.1 if fast else 1e-2,
+        precond_rank=0,
+    )
+    measured = []
+    for n in _sizes():
+        X, y, kern = _mk_problem(n)
+        op = AddedDiagOperator(
+            KernelOperator(kernel=kern, X=X, mode="pallas_partitioned"),
+            1.0,
+        )
+        prepared = op.prepare()
+
+        # one streamed MVM: total + per-panel wall time, accounting record
+        with panel_accounting() as launches:
+            t_mvm = timeit(prepared.matmul, y[:, None], warmup=0, iters=1)
+        lau = launches[0]
+        per_panel = t_mvm / lau.num_panels
+        measured.append((n, t_mvm))
+        emit(
+            f"million_mvm_n{n}",
+            t_mvm,
+            f"panels={lau.num_panels};panel_rows={lau.panel_rows};"
+            f"per_panel={per_panel*1e3:.0f}ms;backend={lau.backend}",
+        )
+
+        # exact-GP engine solve + posterior cache build through the
+        # partitioned path (one engine call does both; n ≥ 1e5 included)
+        t0 = time.perf_counter()
+        with panel_accounting() as launches2:
+            with collect() as reports:
+                cache = build_posterior_cache(
+                    op, y, jax.random.PRNGKey(2), settings,
+                    variance_cache=False,
+                )
+        jax.block_until_ready(cache.alpha)
+        t_solve = time.perf_counter() - t0
+        status = reports[-1].status if reports else "UNKNOWN"
+        assert all(l.panel_rows < l.n for l in launches2), (
+            "partitioned path materialized a full-height panel"
+        )
+        emit(
+            f"million_engine_n{n}",
+            t_solve,
+            f"status={status};cg_iters={reports[-1].num_iters if reports else -1};"
+            f"panel_mb={lau.panel_bytes/1e6:.0f};dense_mb={lau.dense_bytes/1e6:.0f}",
+        )
+        rows.append(
+            {
+                "model": "million",
+                "n": n,
+                "mvm_s": t_mvm,
+                "per_panel_s": per_panel,
+                "num_panels": lau.num_panels,
+                "panel_rows": lau.panel_rows,
+                "backend": lau.backend,
+                "engine_solve_s": t_solve,
+                "engine_status": str(status),
+                "cg_iters": reports[-1].num_iters if reports else None,
+                "panel_bytes": lau.panel_bytes,
+                "dense_bytes": lau.dense_bytes,
+                "memory_ratio": lau.dense_bytes / max(lau.panel_bytes, 1),
+            }
+        )
+    return measured
+
+
+def _bench_roofline(rows, measured):
+    """Fit t ≈ c·n² on the two largest measured sizes and extrapolate the
+    streamed MVM to n = 10⁶ (the paper-scale roofline)."""
+    if len(measured) < 2:
+        return
+    (n1, t1), (n2, t2) = measured[-2], measured[-1]
+    c = 0.5 * (t1 / n1**2 + t2 / n2**2)
+    n_target = 1_000_000
+    t_target = c * n_target**2
+    from repro.kernels.kernel_matmul.ops import choose_panel_rows
+
+    p = choose_panel_rows(n_target)
+    panel_bytes = 4 * p * n_target
+    dense_bytes = 4 * n_target * n_target
+    emit(
+        "million_roofline_1e6",
+        t_target,
+        f"c={c:.3e};panel_rows={p};panel_gb={panel_bytes/1e9:.2f};"
+        f"dense_tb={dense_bytes/1e12:.1f}",
+    )
+    rows.append(
+        {
+            "model": "million_roofline",
+            "n": n_target,
+            "mvm_s_extrapolated": t_target,
+            "seconds_per_n2": c,
+            "panel_rows": p,
+            "panel_bytes": panel_bytes,
+            "dense_bytes": dense_bytes,
+            "memory_ratio": dense_bytes / panel_bytes,
+            "fitted_on": [n1, n2],
+        }
+    )
+
+
+def _bench_crossover(rows, fast):
+    """BBMM-vs-Cholesky across n: where the iterative engine starts winning
+    (scale is the paper's whole argument), and what the dense_direct
+    routing serves below the crossover."""
+    settings = BBMMSettings(
+        num_probes=4 if fast else 10,
+        max_cg_iters=20,
+        precond_rank=0,
+        dense_direct_max_n=1024,
+    )
+    crossover_n = None
+    for n in CROSSOVER_SIZES:
+        X, y, kern = _mk_problem(n)
+        K = kern(X, X)
+        op = AddedDiagOperator(DenseOperator(K), 1.0)
+
+        def chol(K, y):
+            A = K + 1.0 * jnp.eye(K.shape[0])
+            L = jnp.linalg.cholesky(A)
+            alpha = jax.scipy.linalg.cho_solve((L, True), y)
+            return y @ alpha, 2.0 * jnp.sum(jnp.log(jnp.diagonal(L)))
+
+        chol_j = jax.jit(chol)
+        t_c = timeit(chol_j, K, y)
+        with collect() as reports:
+            engine_state(op, y, jax.random.PRNGKey(2), settings)
+        routed = bool(
+            reports
+            and reports[-1].rungs
+            and reports[-1].rungs[0].rung == "dense_direct"
+        )
+        t_b = timeit(
+            lambda: engine_state(op, y, jax.random.PRNGKey(2), settings)
+        )
+        speedup = t_c / t_b
+        if crossover_n is None and speedup >= 1.0 and not routed:
+            crossover_n = n
+        emit(
+            f"million_crossover_n{n}",
+            t_b,
+            f"chol={t_c*1e6:.0f}us;speedup={speedup:.2f}x;"
+            f"routing={'dense_direct' if routed else 'mbcg'}",
+        )
+        rows.append(
+            {
+                "model": "million_crossover",
+                "n": n,
+                "bbmm_s": t_b,
+                "chol_s": t_c,
+                "speedup_vs_chol": speedup,
+                "routing": "dense_direct" if routed else "mbcg",
+            }
+        )
+    rows.append(
+        {
+            "model": "million_crossover_summary",
+            "crossover_n": crossover_n,
+            "note": "smallest measured n where un-routed BBMM beats "
+            "Cholesky; below it dense_direct routing serves Cholesky",
+        }
+    )
+    emit("million_crossover_summary", 0.0, f"crossover_n={crossover_n}")
+
+
+def run(fast: bool = False):
+    rows = []
+    measured = _bench_scale(rows, fast)
+    _bench_roofline(rows, measured)
+    _bench_crossover(rows, fast)
+    save_artifact("million", rows)
+    return rows

@@ -25,7 +25,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma-separated subset: solve_error,speed,mae,preconditioner,"
-        "complexity,serve,fused,multitask,health",
+        "complexity,serve,fused,multitask,health,million",
     )
     ap.add_argument(
         "--scenario",
@@ -34,7 +34,10 @@ def main() -> None:
         "cached-QPS and append-vs-rebuild rows; --scenario fused: per-"
         "iteration time, launch count and HBM bytes of the fused CG step; "
         "--scenario multitask: Kronecker BBMM vs naive dense nT×nT rows "
-        "for T in {2, 4, 8})",
+        "for T in {2, 4, 8}; --scenario million: partitioned-MVM exact-GP "
+        "solves at n up to 1e5 with per-panel timing, the n=1e6 roofline "
+        "extrapolation and the BBMM-vs-Cholesky crossover — "
+        "MILLION_SIZES=20000 env var trims the grid for smoke runs)",
     )
     ap.add_argument(
         "--fast",
@@ -58,6 +61,7 @@ def main() -> None:
         fused,
         health,
         mae,
+        million,
         multitask,
         preconditioner,
         serve,
@@ -75,6 +79,7 @@ def main() -> None:
         "fused": fused.run,  # fused CG step: launches/iter + HBM bytes/iter
         "multitask": multitask.run,  # Kronecker BBMM vs naive dense nT×nT
         "health": health.run,  # health-check overhead (~0) + chaos-drill p50/p99
+        "million": million.run,  # partitioned MVMs: n≤1e5 solves + 1e6 roofline
     }
     wanted = only.split(",") if only else list(suites)
 
@@ -85,7 +90,7 @@ def main() -> None:
         print(f"# --- {name} ---", flush=True)
         if name == "speed":
             speed_rows += suites[name](fast=args.fast, dtype=args.dtype)
-        elif name in ("serve", "fused", "multitask", "health"):
+        elif name in ("serve", "fused", "multitask", "health", "million"):
             speed_rows += suites[name](fast=args.fast)
         else:
             suites[name]()

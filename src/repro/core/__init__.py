@@ -22,6 +22,9 @@ from .linear_operator import (
     HadamardKroneckerOperator,
     InterpolatedOperator,
     CallableOperator,
+    PartitionedKernelOperator,
+    PanelLaunch,
+    panel_accounting,
     FaultSchedule,
     FaultInjectingOperator,
 )

@@ -46,7 +46,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import health
-from .health import RungRecord, SolveFailure, SolveHealthWarning, classify_mbcg
+from .health import (
+    RungRecord,
+    SolveFailure,
+    SolveHealthWarning,
+    SolveReport,
+    classify_mbcg,
+)
 from .linear_operator import LinearOperator
 from .mbcg import mbcg, tridiag_matrices
 from .precision import precision_compute_dtype, validate_precision
@@ -119,6 +125,17 @@ class BBMMSettings:
     # small Gram basisᵀK̂basis (still a subspace ⇒ served variances stay
     # conservative; only tightness degrades).  0 = unbounded (the
     # max_staleness rebuild policy is then the only growth bound).
+    panel_rows: int = 0  # pallas_partitioned: streamed row-panel height;
+    # 0 → the VMEM/HBM-budget auto-chooser
+    # (repro.kernels.kernel_matmul.ops.choose_panel_rows) picks the largest
+    # aligned panel whose (p × n) slab fits panel_budget_bytes
+    panel_budget_bytes: int = 0  # byte budget for one streamed panel slab
+    # (0 → ops.PANEL_BUDGET_BYTES, 128 MiB)
+    dense_direct_max_n: int = 0  # route exact solves with n ≤ this straight
+    # to dense Cholesky BEFORE spinning up mBCG (0 = off).  BENCH shows
+    # Cholesky beating the iterative engine below n≈1000 on CPU — tiny
+    # systems should not pay probe/preconditioner setup.  The routing is
+    # recorded in the solve's health report as a "dense_direct" rung.
 
     def __post_init__(self):
         if self.on_failure not in ("raise", "degrade", "warn"):
@@ -255,7 +272,38 @@ def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
     ``SolveReport.rungs``, so degradation is observable, never silent.
     ``dense_fn() -> (value, RungRecord)`` is the terminal rung, engaged
     only for ``n <= settings.dense_fallback_max_n``.
+
+    ``dense_direct_max_n`` short-circuits the whole machinery for tiny
+    systems: below the threshold the dense Cholesky IS the fast path (BENCH
+    shows it beating mBCG under n≈1000 on CPU), so it runs FIRST — recorded
+    as a "dense_direct" rung in the health report — and the iterative
+    engine is only consulted if the direct solve comes back unhealthy.
     """
+    if (
+        dense_fn is not None
+        and 0 < n <= settings.dense_direct_max_n
+    ):
+        value, rec = dense_fn()
+        rec = dataclasses.replace(rec, rung="dense_direct")
+        if rec.status == health.CONVERGED:
+            report = SolveReport(
+                status=health.CONVERGED,
+                residual_norm=rec.residual_norm or 0.0,
+                tol=settings.cg_tol,
+                num_iters=0,
+                max_iters=settings.max_cg_iters,
+                context=context,
+                rungs=(rec,),
+            )
+            health.record(report)
+            return value
+        # unhealthy direct solve → fall through to the iterative path
+        warnings.warn(
+            f"dense_direct routing (n={n} <= {settings.dense_direct_max_n}) "
+            f"produced an unhealthy solve; running the iterative engine",
+            SolveHealthWarning,
+            stacklevel=3,
+        )
     value, report = run(settings)
     if report is None:
         return value  # tracing: health is checked when the caller is eager

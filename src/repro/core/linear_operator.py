@@ -18,7 +18,9 @@ for free from ``jax.vjp`` of ``matmul``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
+from contextlib import contextmanager
 from functools import partial
 from typing import Any, Callable, Sequence
 
@@ -871,6 +873,482 @@ class CallableOperator(LinearOperator):
         return self.diag_fn(self.params)
 
 
+# --- partitioned kernel streaming (million-row exact GPs) -------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PanelLaunch:
+    """Trace-time accounting record for one partitioned ``matmul``.
+
+    This is the assertion surface for the partitioned path's memory
+    contract: the peak live kernel slab is ONE (panel_rows × n) tile, never
+    the (n × n) matrix.  Tests assert ``panel_rows < n`` on every recorded
+    launch; the million benchmark turns ``panel_bytes`` vs ``dense_bytes``
+    into its memory table."""
+
+    n: int
+    rhs_cols: int
+    batch: int
+    panel_rows: int
+    num_panels: int
+    backend: str
+    sharded: bool
+    devices: int = 1
+    itemsize: int = 4
+
+    @property
+    def panel_bytes(self) -> int:
+        """Peak live working set of one streamed panel: the (p × n) kernel
+        slab (materialized outright by the XLA backend; an upper bound for
+        the Pallas backend, which holds only (bn × bm) VMEM tiles) plus the
+        panel's accumulated output rows."""
+        return self.itemsize * self.panel_rows * (
+            self.n + self.rhs_cols * max(self.batch, 1)
+        )
+
+    @property
+    def dense_bytes(self) -> int:
+        """What materializing K would cost instead."""
+        return 4 * self.n * self.n
+
+
+_PANEL_SINK = threading.local()
+
+
+@contextmanager
+def panel_accounting(into=None):
+    """Collect a :class:`PanelLaunch` per partitioned matmul *traced* in the
+    block (mirrors :func:`repro.core.health.collect`).  Recording happens at
+    trace time — one record per distinct matmul in the program, including
+    matmuls inside a jitted CG scan (traced once, executed per iteration)."""
+    launches = [] if into is None else into
+    prev = getattr(_PANEL_SINK, "launches", None)
+    _PANEL_SINK.launches = launches
+    try:
+        yield launches
+    finally:
+        _PANEL_SINK.launches = prev
+
+
+def _record_panels(launch: PanelLaunch):
+    sink = getattr(_PANEL_SINK, "launches", None)
+    if sink is not None:
+        sink.append(launch)
+
+
+def _warn_unfused_partitioned():
+    warnings.warn(
+        "fuse_cg=True requested on a partitioned kernel operator: the fused "
+        "CG step is one launch over the FULL row range — exactly the "
+        "working-set bound partitioning exists to break. A panel-aware fused "
+        "step (one launch per panel) is a documented frontier (ROADMAP); "
+        "falling back to the unfused mBCG loop, whose per-iteration matmul "
+        "still streams row-panels.",
+        stacklevel=3,
+    )
+
+
+def _pallas_panel_matmul(
+    Xs_rows, Xs_cols, M, outputscale, panel_rows, row0, *, kernel_type, compute_dtype
+):
+    """Stream K(X_rows, X_cols) @ M through the Pallas kernel one
+    (panel_rows × n) row-panel at a time.
+
+    Each panel is one ``fused_kernel_matmul_prescaled`` launch on a
+    ``dynamic_slice`` of the pre-scaled rows with the panel's global
+    ``row_offset`` — the in-kernel edge-masking/row-offset machinery from
+    PR 1 doing what it was built for.  ``row0`` may be traced (the sharded
+    path passes each device's band start).  Output is f32 (…, rows, t)."""
+    from repro.kernels.kernel_matmul.ops import fused_kernel_matmul_prescaled
+
+    n_rows = Xs_rows.shape[0]
+    p = int(panel_rows)
+    num = -(-n_rows // p)
+    pad = num * p - n_rows
+    Xp = jnp.pad(Xs_rows, ((0, pad), (0, 0))) if pad else Xs_rows
+
+    def one_panel(start):
+        Xpan = jax.lax.dynamic_slice_in_dim(Xp, start, p, axis=0)
+        return fused_kernel_matmul_prescaled(
+            Xpan,
+            Xs_cols,
+            M,
+            outputscale,
+            jnp.float32(0.0),
+            row_offset=row0 + start,
+            kernel_type=kernel_type,
+            compute_dtype=compute_dtype,
+        )
+
+    outs = jax.lax.map(one_panel, jnp.arange(num) * p)  # (num, ..., p, t)
+    out = jnp.moveaxis(outs, 0, -3)  # (..., num, p, t)
+    out = out.reshape(*out.shape[:-3], num * p, out.shape[-1])
+    return out[..., :n_rows, :]
+
+
+def _xla_panel_matmul(kernel, X_rows, X_cols, M, panel_rows, *, compute_dtype):
+    """Streamed row-panel matmul with the kernel evaluated as plain XLA ops
+    (the differentiable / CPU-fast formulation; mirrors
+    ``repro.core.distributed._local_block_matmul``).
+
+    Each panel body is under ``jax.checkpoint``: the backward pass
+    rematerializes one (panel_rows × n) kernel slab at a time instead of
+    keeping every panel live — MLL gradients at n=10⁵ fit in memory."""
+    compute_dtype = normalize_compute_dtype(compute_dtype)
+    reduced = is_reduced(compute_dtype)
+    n_rows, d = X_rows.shape
+    p = int(panel_rows)
+    num = -(-n_rows // p)
+    pad = num * p - n_rows
+    Xp = jnp.pad(X_rows, ((0, pad), (0, 0))) if pad else X_rows
+
+    @jax.checkpoint
+    def one_panel(Xpan):
+        tile = kernel(Xpan, X_cols)
+        if reduced:
+            return _mixed_matmul(tile, M.astype(jnp.bfloat16))
+        return jnp.matmul(
+            tile.astype(jnp.float32),
+            M.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+
+    outs = jax.lax.map(one_panel, Xp.reshape(num, p, d))  # (num, ..., p, t)
+    out = jnp.moveaxis(outs, 0, -3)
+    out = out.reshape(*out.shape[:-3], num * p, out.shape[-1])
+    return out[..., :n_rows, :]
+
+
+def _sharded_panel_matmul(op, M, mesh, shards):
+    """Multi-device partitioned matmul: each device owns a contiguous row
+    band (panel ranges assigned by ``shard_map``), streams its band's
+    panels locally, and the row-sharded results are concatenated.  The one
+    collective is the all-gather of M (cast to ``compute_dtype`` first, so
+    the mixed policy halves the payload)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.precision import as_jnp_dtype
+    from repro.distributed.sharding import (
+        compat_shard_map,
+        row_shard_spec,
+    )
+
+    axes = op.data_axes
+    n = op.shape[0]
+    if n % shards != 0:
+        raise ValueError(
+            f"partitioned sharding needs n divisible by the device count: "
+            f"n={n}, shards={shards}"
+        )
+    n_loc = n // shards
+    p = min(op.panel_rows_for(n), n_loc)
+    backend = op.resolved_backend
+    row_axis = M.ndim - 2
+    Xdat = op.Xs if backend == "pallas" else op.X
+    kern_leaves, kern_def = jax.tree_util.tree_flatten(op.kernel)
+    kern_leaves = tuple(kern_leaves)
+    compute_dtype = op.compute_dtype
+
+    # kernel leaves ride as explicit operands (closure capture of traced
+    # values breaks vjp tracing through shard_map; same idiom as
+    # repro.core.distributed.ShardedKernelOperator)
+    def body(leaves, X_full, M_loc):
+        kernel = jax.tree_util.tree_unflatten(kern_def, leaves)
+        M_full = jax.lax.all_gather(M_loc, axes, axis=row_axis, tiled=True)
+        idx = jax.lax.axis_index(axes)
+        start = idx * n_loc
+        X_band = jax.lax.dynamic_slice_in_dim(X_full, start, n_loc, axis=0)
+        if backend == "pallas":
+            return _pallas_panel_matmul(
+                X_band,
+                X_full,
+                M_full,
+                kernel.outputscale,
+                p,
+                start,
+                kernel_type=op.kernel_type,
+                compute_dtype=compute_dtype,
+            )
+        return _xla_panel_matmul(
+            kernel, X_band, X_full, M_full, p, compute_dtype=compute_dtype
+        )
+
+    x_spec = P(*([None] * Xdat.ndim))
+    out = compat_shard_map(
+        body,
+        mesh,
+        in_specs=(
+            tuple(P() for _ in kern_leaves),
+            x_spec,
+            row_shard_spec(M.ndim, axes),
+        ),
+        out_specs=row_shard_spec(M.ndim, axes),
+    )(
+        kern_leaves,
+        Xdat,
+        M.astype(as_jnp_dtype(compute_dtype)) if backend == "pallas" else M,
+    )
+    return out
+
+
+@jax.custom_vjp
+def _partitioned_matmul(op, M):
+    """K @ M via streamed row-panels, with hand-wired gradients.
+
+    The primal runs the selected backend (Pallas launches or checkpointed
+    XLA panels, possibly sharded).  The VJP re-expresses the matmul as the
+    *checkpointed XLA panel stream* and differentiates that — so (a) the
+    backward pass also streams panels (never all slabs live at once), and
+    (b) ``mode="pallas_partitioned"`` trains natively even though
+    interpret-mode ``pallas_call`` has no jvp rule on this jax pin (the PR 6
+    gap): jax never differentiates through the Pallas launch at all."""
+    return op._forward_matmul(M)
+
+
+def _partitioned_matmul_fwd(op, M):
+    return op._forward_matmul(M), (op, M)
+
+
+def _partitioned_matmul_bwd(res, ct):
+    op, M = res
+    n = op.shape[0]
+    p = min(op.panel_rows_for(n), n)
+
+    def ref(kernel, X, m):
+        return _xla_panel_matmul(
+            kernel, X, X, m, p, compute_dtype=op.compute_dtype
+        )
+
+    _, vjp = jax.vjp(ref, op.kernel, op.X, M)
+    kern_bar, X_bar, M_bar = vjp(ct)
+    # cotangent for the op pytree: kernel/X get the reference-formulation
+    # grads; the pre-scaled Xs cache (a pure function of kernel.lengthscale
+    # and X, both already accounted for) gets zeros
+    op_bar = dataclasses.replace(
+        op,
+        kernel=kern_bar,
+        X=X_bar,
+        Xs=None if op.Xs is None else jnp.zeros_like(op.Xs),
+    )
+    return op_bar, M_bar
+
+
+_partitioned_matmul.defvjp(_partitioned_matmul_fwd, _partitioned_matmul_bwd)
+
+
+@_register
+@dataclasses.dataclass(frozen=True)
+class PartitionedKernelOperator(LinearOperator):
+    """K(X, X) streamed one (panel_rows × n) row-panel at a time — the
+    operator that makes "n is bounded by O(n²) memory" false.
+
+    No mode of this operator ever materializes K: ``matmul`` computes each
+    panel from (X_panel, X) on the fly (Wang et al. 2019, "Exact Gaussian
+    Processes on a Million Data Points") and accumulates into the (n, t)
+    output, so peak memory is O(n·(d + t)) persistent state plus one
+    (panel_rows × n) transient slab bounded by ``panel_budget_bytes``.
+
+    Backends (``backend=``):
+
+      * ``"pallas"`` — one ``fused_kernel_matmul_prescaled`` launch per
+        panel on pre-scaled inputs via the ``row_offset`` path; composes
+        with the native batch grid and the bf16 tile policy (f32
+        accumulation).
+      * ``"xla"``    — the kernel evaluated as plain XLA ops per panel
+        under ``jax.checkpoint`` (differentiable; also the faster choice
+        under interpret-mode Pallas on CPU).
+      * ``"auto"``   — pallas on TPU, xla elsewhere.
+
+    Gradients always flow through the checkpointed XLA panel stream via
+    ``_partitioned_matmul``'s custom VJP, so training never holds all
+    panels live and never differentiates a ``pallas_call``.
+
+    Multi-device: when ``data_axes`` names axes of an available mesh
+    (explicit ``mesh=`` or the ambient ``jax.sharding`` context), each
+    device owns a contiguous row band and streams its panels locally
+    (results concatenated by ``shard_map``).  ``row()``/``diagonal()`` are
+    exact O(n)/O(n·d) primitives feeding the pivoted-Cholesky
+    preconditioner without touching the panel loop.
+    """
+
+    kernel: Any  # stationary kernel pytree (RBF/Matérn — needs __call__/diag)
+    X: jax.Array  # (n, d) raw inputs
+    Xs: jax.Array | None = None  # prepare()-cached pre-scaled inputs
+    kernel_type: str = static_field(default="rbf")
+    panel_rows: int = static_field(default=0)  # 0 → budget auto-chooser
+    panel_budget_bytes: int = static_field(default=0)  # 0 → ops default
+    backend: str = static_field(default="auto")  # auto | pallas | xla
+    data_axes: tuple = static_field(default=("data",))
+    mesh: Any = static_field(default=None)
+    compute_dtype: str = static_field(default="float32")
+
+    def __post_init__(self):
+        if self.backend not in ("auto", "pallas", "xla"):
+            raise ValueError(
+                f"backend must be 'auto', 'pallas' or 'xla', got {self.backend!r}"
+            )
+
+    # -- shape / dtype -----------------------------------------------------
+    @property
+    def shape(self):
+        n = self.X.shape[0]
+        return (n, n)
+
+    @property
+    def dtype(self):
+        return jnp.float32  # panel accumulation is always f32
+
+    # -- panel geometry ----------------------------------------------------
+    @property
+    def resolved_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        from repro.kernels.kernel_matmul.ops import _on_tpu
+
+        return "pallas" if _on_tpu() else "xla"
+
+    def panel_rows_for(self, n) -> int:
+        """Effective panel height: the explicit knob, else the
+        VMEM/HBM-budget auto-chooser."""
+        from repro.kernels.kernel_matmul.ops import choose_panel_rows
+
+        if self.panel_rows > 0:
+            return max(1, min(self.panel_rows, n))
+        return choose_panel_rows(
+            n, budget_bytes=self.panel_budget_bytes or None
+        )
+
+    def _live_mesh(self):
+        """The mesh this matmul shards over, or None for single-device."""
+        if self.mesh is not None:
+            return self.mesh
+        if not self.data_axes:
+            return None
+        from repro.distributed.sharding import current_mesh, mesh_axis_sizes
+
+        mesh = current_mesh()
+        if mesh is None:
+            return None
+        sizes = mesh_axis_sizes(mesh)
+        if any(a not in sizes for a in self.data_axes):
+            return None
+        return mesh
+
+    def _num_shards(self, mesh) -> int:
+        if mesh is None:
+            return 1
+        from repro.distributed.sharding import mesh_axis_sizes
+
+        sizes = mesh_axis_sizes(mesh)
+        shards = 1
+        for a in self.data_axes:
+            shards *= sizes[a]
+        return shards
+
+    # -- matmul ------------------------------------------------------------
+    def matmul(self, M):
+        squeeze = M.ndim == 1
+        if squeeze:
+            M = M[:, None]
+        op = self._ready()
+        n = op.shape[0]
+        mesh = op._live_mesh()
+        shards = op._num_shards(mesh)
+        if shards > 1 and n % shards != 0:
+            # fall back loudly to single-device rather than mis-sharding
+            warnings.warn(
+                f"partitioned matmul: n={n} not divisible by {shards} "
+                f"devices; running single-device",
+                stacklevel=2,
+            )
+            mesh, shards = None, 1
+        p = op.panel_rows_for(n)
+        n_band = n // shards
+        p_eff = min(p, n_band)
+        num_panels = shards * (-(-n_band // p_eff))
+        from repro.core.precision import as_jnp_dtype
+
+        _record_panels(
+            PanelLaunch(
+                n=n,
+                rhs_cols=M.shape[-1],
+                batch=int(np.prod(M.shape[:-2], dtype=np.int64)) if M.ndim > 2 else 1,
+                panel_rows=p_eff,
+                num_panels=num_panels,
+                backend=op.resolved_backend,
+                sharded=shards > 1,
+                devices=shards,
+                itemsize=jnp.dtype(as_jnp_dtype(op.compute_dtype)).itemsize,
+            )
+        )
+        if shards > 1:
+            out = _sharded_panel_matmul(op, M, mesh, shards)
+        else:
+            out = _partitioned_matmul(op, M)
+        return out[..., 0] if squeeze else out
+
+    def _ready(self) -> "PartitionedKernelOperator":
+        if self.resolved_backend == "pallas" and self.Xs is None:
+            return self.prepare()
+        return self
+
+    def _forward_matmul(self, M):
+        """Single-device primal for the custom-VJP seam."""
+        n = self.shape[0]
+        p = min(self.panel_rows_for(n), n)
+        if self.resolved_backend == "pallas":
+            return _pallas_panel_matmul(
+                self.Xs,
+                self.Xs,
+                M,
+                self.kernel.outputscale,
+                p,
+                0,
+                kernel_type=self.kernel_type,
+                compute_dtype=self.compute_dtype,
+            )
+        return _xla_panel_matmul(
+            self.kernel, self.X, self.X, M, p, compute_dtype=self.compute_dtype
+        )
+
+    # -- exact cheap accessors (feed the pivoted-Cholesky preconditioner) --
+    def diagonal(self):
+        return self.kernel.diag(self.X).astype(jnp.float32)
+
+    def row(self, i):
+        return self.kernel(self.X[i][None, :], self.X)[0].astype(jnp.float32)
+
+    # -- solver preparation / precision ------------------------------------
+    def prepare(self):
+        if self.Xs is not None or self.resolved_backend != "pallas":
+            return self
+        from repro.kernels.kernel_matmul.ops import (
+            _stationary_kernel_type,
+            prescale_inputs,
+        )
+
+        return dataclasses.replace(
+            self,
+            Xs=prescale_inputs(self.X, self.kernel.lengthscale, self.compute_dtype),
+            kernel_type=_stationary_kernel_type(self.kernel),
+        )
+
+    def with_compute_dtype(self, compute_dtype):
+        compute_dtype = normalize_compute_dtype(compute_dtype)
+        if compute_dtype == self.compute_dtype:
+            return self
+        # drop the prescale cache: it is stored at the old dtype
+        return dataclasses.replace(self, compute_dtype=compute_dtype, Xs=None)
+
+    def fused_cg_step_fn(self, sigma2=None):
+        """Not fusable yet: one fused launch spans the full row range, which
+        would rebuild the O(n²) working set panel-streaming removes.  Warns
+        (loud) and returns None — the engine's unfused mBCG loop still
+        streams panels every iteration (the PR 4 fallback seam)."""
+        _warn_unfused_partitioned()
+        return None
+
+
 # --- fault injection (robustness harness) ----------------------------------
 
 
@@ -917,9 +1395,9 @@ class FaultSchedule:
         latency_s: float = 0.0,
         total_outage: bool = False,
         reduced_only: bool = False,
+        panel: tuple | None = None,
     ):
         import random
-        import threading
 
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
@@ -929,6 +1407,11 @@ class FaultSchedule:
         self.latency_s = float(latency_s)
         self.total_outage = bool(total_outage)
         self.reduced_only = bool(reduced_only)
+        #: (row_start, num_rows) — corrupt this row band instead of row 0,
+        #: targeting a SINGLE panel of a partitioned solve (chaos coverage
+        #: for the streamed path: one poisoned panel must not poison the
+        #: other panels' rows)
+        self.panel = None if panel is None else (int(panel[0]), int(panel[1]))
         self.calls = 0
         self.injected: list = []
 
@@ -1022,8 +1505,15 @@ class FaultInjectingOperator(LinearOperator):
             jnp.nan,
             jnp.where(code == FaultSchedule.INF, jnp.inf, 0.0),
         ).astype(out.dtype)
+        span = getattr(sched, "panel", None)
         if out.ndim == 1:
+            if span is not None:
+                s0, rows = span
+                return out.at[s0 : s0 + rows].add(bad)
             return out.at[0].add(bad)
+        if span is not None:
+            s0, rows = span
+            return out.at[..., s0 : s0 + rows, :].add(bad)
         return out.at[..., 0, :].add(bad)
 
     def diagonal(self):

@@ -54,8 +54,14 @@ KERNELS = {"rbf": RBFKernel, "matern52": partial(MaternKernel, nu=2.5),
 @dataclasses.dataclass
 class ExactGP(KrylovCachePredictor):
     kernel_type: str = "rbf"
-    mode: str = "dense"  # dense | blocked | pallas (the blackbox matmul impl)
+    # dense | blocked | pallas | pallas_partitioned (the blackbox matmul
+    # impl; "pallas_partitioned" streams K one row-panel at a time — panel
+    # height / budget come from settings.panel_rows / panel_budget_bytes,
+    # backend from ``panel_backend`` — and trains natively: its matmul
+    # carries a custom VJP that checkpoints the backward panel stream)
+    mode: str = "dense"
     block_size: int = 512
+    panel_backend: str = "auto"  # pallas_partitioned: auto | pallas | xla
     settings: BBMMSettings = dataclasses.field(default_factory=BBMMSettings)
     # end-to-end precision knob: "highest" (all f32) or "mixed" (bf16 kernel
     # tiles + f32 accumulation + periodic f32 residual refresh in mBCG).
@@ -101,8 +107,16 @@ class ExactGP(KrylovCachePredictor):
         )
 
     def operator(self, params, data) -> AddedDiagOperator:
+        extra = {}
+        if self.mode == "pallas_partitioned":
+            extra = {
+                "panel_rows": self.settings.panel_rows,
+                "panel_budget_bytes": self.settings.panel_budget_bytes,
+                "panel_backend": self.panel_backend,
+            }
         base = KernelOperator(
-            kernel=self.kernel(params), X=data, mode=self.mode, block_size=self.block_size
+            kernel=self.kernel(params), X=data, mode=self.mode,
+            block_size=self.block_size, **extra,
         )
         return AddedDiagOperator(base, _softplus(params["raw_noise"]))
 

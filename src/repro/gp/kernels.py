@@ -123,12 +123,17 @@ class KernelOperator(LinearOperator):
 
     kernel: object
     X: jax.Array  # (n, d)
-    mode: str = static_field(default="dense")  # dense | blocked | pallas | pallas_sharded
+    # dense | blocked | pallas | pallas_sharded | pallas_partitioned
+    mode: str = static_field(default="dense")
     block_size: int = static_field(default=512)
     shard_rows: bool = static_field(default=False)  # annotate row sharding
-    data_axes: tuple = static_field(default=("data",))  # pallas_sharded row axes
+    data_axes: tuple = static_field(default=("data",))  # sharded row axes
     mesh: object = static_field(default=None)  # explicit mesh (else live context)
     compute_dtype: str = static_field(default="float32")
+    # pallas_partitioned knobs (see core.PartitionedKernelOperator):
+    panel_rows: int = static_field(default=0)  # 0 → budget auto-chooser
+    panel_budget_bytes: int = static_field(default=0)  # 0 → ops default
+    panel_backend: str = static_field(default="auto")  # auto | pallas | xla
 
     @property
     def shape(self):
@@ -159,6 +164,8 @@ class KernelOperator(LinearOperator):
                 self.kernel, self.X, M, self._mesh(), self.data_axes,
                 compute_dtype=self.compute_dtype,
             )
+        elif self.mode == "pallas_partitioned":
+            out = self._partitioned().matmul(M)
         else:  # pragma: no cover
             raise ValueError(self.mode)
         if self.shard_rows:
@@ -182,7 +189,14 @@ class KernelOperator(LinearOperator):
         loop: returns an operator whose per-iteration matmul consumes the
         already-scaled X (single-device and sharded pallas modes).  Under a
         bf16 ``compute_dtype`` the pre-scaled X is *stored* in bf16 — half
-        the HBM footprint / gather payload for the whole solve."""
+        the HBM footprint / gather payload for the whole solve.
+
+        ``mode="pallas_partitioned"`` prepares into the streaming
+        :class:`repro.core.PartitionedKernelOperator` — K is never
+        materialized; its matmul runs one (panel_rows × n) row-panel at a
+        time (see the class docstring for backend/sharding semantics)."""
+        if self.mode == "pallas_partitioned":
+            return self._partitioned().prepare()
         if self.mode not in ("pallas", "pallas_sharded"):
             return self
         from repro.kernels.kernel_matmul.ops import (
@@ -213,10 +227,29 @@ class KernelOperator(LinearOperator):
             self, compute_dtype=normalize_compute_dtype(compute_dtype)
         )
 
+    def _partitioned(self):
+        """The streaming operator behind ``mode="pallas_partitioned"``."""
+        from repro.core.linear_operator import PartitionedKernelOperator
+
+        return PartitionedKernelOperator(
+            kernel=self.kernel,
+            X=self.X,
+            panel_rows=self.panel_rows,
+            panel_budget_bytes=self.panel_budget_bytes,
+            backend=self.panel_backend,
+            data_axes=self.data_axes,
+            mesh=self.mesh,
+            compute_dtype=self.compute_dtype,
+        )
+
     def fused_cg_step_fn(self, sigma2=None):
         """Fused CG capability: pallas modes delegate to their prepared form
         (the engine prepares before the loop anyway); dense/blocked keep the
-        unfused fallback."""
+        unfused fallback; the partitioned mode declines LOUDLY (a full-range
+        fused launch would rebuild the O(n²) working set — see
+        ``PartitionedKernelOperator.fused_cg_step_fn``)."""
+        if self.mode == "pallas_partitioned":
+            return self._partitioned().fused_cg_step_fn(sigma2=sigma2)
         if self.mode not in ("pallas", "pallas_sharded"):
             return None
         return self.prepare().fused_cg_step_fn(sigma2=sigma2)

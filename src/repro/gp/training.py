@@ -27,7 +27,9 @@ Robustness (the training leg of the solve-health layer):
     ``jax.value_and_grad``) is detected on the first step and the model is
     LOUDLY degraded to ``mode="dense"`` training — one warning naming the
     bug and the override — instead of surfacing an opaque AssertionError
-    from deep inside jax;
+    from deep inside jax (``mode="pallas_partitioned"`` is NOT affected:
+    its custom VJP re-streams row-panels under ``jax.checkpoint``, so it
+    trains natively on any backend);
   * every step's loss is checked for finiteness on the host, under the
     model's ``settings.on_failure`` policy: ``raise`` fails the fit,
     ``degrade`` retries the SAME step from the pre-step parameters at

@@ -67,6 +67,45 @@ def prescale_inputs(X, lengthscale, compute_dtype="float32"):
     return _pad_to(Xs, 128, 1)
 
 
+#: Default working-set budget for one streamed row-panel of K (bytes).
+#: The partitioned path's peak live tile is one (panel_rows × n) slab —
+#: the XLA backend materializes it outright, the Pallas backend bounds it
+#: by (bn × bm) VMEM tiles — so this caps panel_rows ≈ budget / (n·4).
+PANEL_BUDGET_BYTES = 128 * 1024 * 1024
+
+#: Panel heights are floored to this multiple so pallas row tiles (bn=256)
+#: and the 128-lane grid stay aligned; also the minimum viable panel.
+PANEL_ALIGN = 128
+
+#: Never stream panels taller than this even when the budget allows —
+#: beyond it the panel is no longer "small vs n" and the streaming loop
+#: adds launch overhead without memory benefit.
+MAX_PANEL_ROWS = 8192
+
+
+def choose_panel_rows(n, *, budget_bytes=None, itemsize=4):
+    """Largest aligned panel height whose (panel_rows × n) slab fits the
+    byte budget — the VMEM/HBM auto-chooser behind ``panel_rows=0``.
+
+    Returns a multiple of :data:`PANEL_ALIGN` in
+    [PANEL_ALIGN, min(n, MAX_PANEL_ROWS)]; at very large n (where even one
+    aligned panel row-slab exceeds the budget) it returns PANEL_ALIGN —
+    the floor below which the pallas grid cannot shrink."""
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    budget = PANEL_BUDGET_BYTES if budget_bytes is None else int(budget_bytes)
+    if budget <= 0:
+        raise ValueError(f"budget_bytes must be positive, got {budget}")
+    rows = budget // max(n * itemsize, 1)
+    rows = (rows // PANEL_ALIGN) * PANEL_ALIGN
+    rows = max(PANEL_ALIGN, min(rows, MAX_PANEL_ROWS))
+    return min(rows, _ceil_to(n, PANEL_ALIGN))
+
+
+def _ceil_to(x, mult):
+    return -(-x // mult) * mult
+
+
 @partial(
     jax.jit,
     static_argnames=("kernel_type", "bn", "bm", "interpret", "compute_dtype"),

@@ -54,6 +54,35 @@ def count_pallas_calls(jaxpr) -> int:
     return sum(1 for eqn, _ in _iter_eqns(jaxpr) if eqn.primitive.name == "pallas_call")
 
 
+def count_pallas_launches(jaxpr) -> int:
+    """Pallas launches per EXECUTION of the traced body — like
+    :func:`count_pallas_calls`, but a pallas_call inside a ``lax.scan``
+    (the panel-fused step's rolled panel loop; ``lax.map`` lowers to scan)
+    counts once per trip: a scan of length P over one launch is P launches
+    at runtime even though the jaxpr holds a single pallas_call eqn.
+    This is the assertion surface for "launches per CG iteration ==
+    num_panels" on the panel-fused partitioned path."""
+
+    def walk(j, mult):
+        j = getattr(j, "jaxpr", j)
+        total = 0
+        for eqn in j.eqns:
+            if eqn.primitive.name == "pallas_call":
+                total += mult
+                continue
+            sub_mult = mult
+            if eqn.primitive.name == "scan":
+                sub_mult = mult * int(eqn.params.get("length", 1))
+            for v in eqn.params.values():
+                leaves = v if isinstance(v, (list, tuple)) else [v]
+                for leaf in leaves:
+                    if hasattr(leaf, "eqns") or hasattr(leaf, "jaxpr"):
+                        total += walk(leaf, sub_mult)
+        return total
+
+    return walk(jaxpr, 1)
+
+
 # layout/metadata ops: no HBM traffic of their own (XLA aliases them or
 # folds them into the consumer) — not state passes
 _NO_TRAFFIC = {"reshape", "squeeze", "expand_dims", "broadcast_in_dim", "copy"}

@@ -14,7 +14,11 @@ Three row families land in BENCH_speed.json:
     extrapolated to n = 10⁶ (MVM seconds + panel working set there);
   * ``million_crossover``  — the BBMM-vs-Cholesky crossover sweep at small
     n (where Cholesky still wins on CPU) with the dense_direct routing
-    decision, plus a summary row naming the crossover n.
+    decision, plus a summary row naming the crossover n;
+  * ``million_fused``      — the panel-fused CG step (PR 8): per-CG-
+    iteration wall time fused vs the unfused streamed loop, jaxpr-counted
+    launches per iteration (== num_panels), modeled HBM bytes, and a
+    ``fuse_cg=True`` engine smoke.
 
 ``MILLION_SIZES`` (comma-separated) overrides the size grid — CI smoke
 runs ``MILLION_SIZES=20000``; the full fast-mode grid is
@@ -240,10 +244,99 @@ def _bench_crossover(rows, fast):
     emit("million_crossover_summary", 0.0, f"crossover_n={crossover_n}")
 
 
+def _bench_fused(rows, fast):
+    """Panel-fused CG on the partitioned path (PR 8): per-CG-iteration wall
+    time of the panel-fused step vs the unfused streamed loop (xla backend —
+    the formulation that is real on this CPU container), jaxpr-counted
+    kernel launches per iteration (must equal num_panels; counted from the
+    pallas-backend step with the scan-aware counter), modeled HBM bytes
+    from ``fused_step_tile_counts(..., panel_rows=...)``, and a
+    ``fuse_cg=True`` engine smoke — the ``million_fused`` rows."""
+    from repro.core import PartitionedKernelOperator
+    from repro.core.mbcg import mbcg
+    from repro.kernels.kernel_matmul.kernel_matmul import fused_step_tile_counts
+    from .fused import count_pallas_launches
+
+    n = 10_000 if fast else min(min(_sizes()), 20_000)
+    t = 4 if fast else 8
+    iters = 4 if fast else 8
+    X, y, kern = _mk_problem(n)
+    op = AddedDiagOperator(
+        PartitionedKernelOperator(kernel=kern, X=X, backend="xla"), 1.0
+    )
+    prepared = op.prepare()
+    step = prepared.fused_cg_step_fn()
+    B = jax.random.normal(jax.random.PRNGKey(1), (n, t))
+    fused_fn = jax.jit(
+        lambda B: mbcg(prepared.matmul, B, max_iters=iters, tol=0.0,
+                       fused_step=step).solves
+    )
+    unfused_fn = jax.jit(
+        lambda B: mbcg(prepared.matmul, B, max_iters=iters, tol=0.0).solves
+    )
+    t_fused = timeit(fused_fn, B, warmup=1, iters=1) / iters
+    t_unfused = timeit(unfused_fn, B, warmup=1, iters=1) / iters
+
+    # launch accounting from the traced pallas-backend step body (tracing
+    # only — interpret-mode execution at this n would be pointless)
+    op_p = AddedDiagOperator(
+        PartitionedKernelOperator(kernel=kern, X=X, backend="pallas"), 1.0
+    )
+    step_p = op_p.prepare().fused_cg_step_fn()
+    z = jnp.zeros((t,))
+    with panel_accounting() as launches:
+        jaxpr = jax.make_jaxpr(lambda s: step_p(*s))((B, B, B, B, z, z, jnp.ones((t,))))
+    lau = launches[0]
+    counted = count_pallas_launches(jaxpr)
+    assert counted == lau.num_panels, (counted, lau.num_panels)
+    traffic = fused_step_tile_counts(n, n, 1, t=t, panel_rows=lau.panel_rows)
+
+    # end-to-end: the engine solve with fuse_cg=True (same recipe as the
+    # unfused million engine smoke)
+    s = BBMMSettings(
+        num_probes=2, max_cg_iters=25, cg_tol=0.1, precond_rank=0, fuse_cg=True
+    )
+    t0 = time.perf_counter()
+    with collect() as reports:
+        st = engine_state(op, y, jax.random.PRNGKey(2), s)
+    jax.block_until_ready(st.solve_y)
+    t_engine = time.perf_counter() - t0
+    status = reports[-1].status if reports else "UNKNOWN"
+
+    emit(
+        f"million_fused_n{n}",
+        t_fused,
+        f"unfused={t_unfused*1e3:.0f}ms;launches={counted}(=panels);"
+        f"engine={status};hbm_ratio={traffic['hbm_bytes_ratio']:.2f}x",
+    )
+    rows.append(
+        {
+            "model": "million_fused",
+            "n": n,
+            "t": t,
+            "cg_iters": iters,
+            "panel_rows": int(lau.panel_rows),
+            "num_panels": int(lau.num_panels),
+            "fused_iter_s": t_fused,
+            "unfused_iter_s": t_unfused,
+            "iter_speedup": t_unfused / t_fused,
+            # jaxpr-counted (scan-aware): one pallas launch per panel
+            "launches_per_iter_fused": counted,
+            "launches_per_iter_unfused": traffic["launches_per_iter_unfused"],
+            "hbm_bytes_per_iter_fused": traffic["fused_hbm_bytes_per_iter"],
+            "hbm_bytes_per_iter_unfused": traffic["unfused_hbm_bytes_per_iter"],
+            "hbm_bytes_ratio": traffic["hbm_bytes_ratio"],
+            "engine_solve_s": t_engine,
+            "engine_status": str(status),
+        }
+    )
+
+
 def run(fast: bool = False):
     rows = []
     measured = _bench_scale(rows, fast)
     _bench_roofline(rows, measured)
     _bench_crossover(rows, fast)
+    _bench_fused(rows, fast)
     save_artifact("million", rows)
     return rows

@@ -94,12 +94,18 @@ class BBMMSettings:
     # launch when the (prepared) operator advertises a CGStepFn
     # (LinearOperator.fused_cg_step_fn — the Pallas kernel-matmul family
     # does): state updates + K̂·D + the per-column reductions in one grid
-    # sweep, leaving only O(t) scalar arithmetic in XLA.  Operators without
-    # the capability keep the unfused loop (transparent fallback), but a
-    # non-identity preconditioner cannot fuse: fuse_cg with precond_rank > 0
-    # raises in mbcg rather than silently falling back — set precond_rank=0.
-    # Composes with precision="mixed": the fused launches run bf16 MXU
-    # stages, the periodic residual refresh stays an f32 matmul.
+    # sweep, leaving only O(t) scalar arithmetic in XLA.  On the
+    # partitioned path (mode="pallas_partitioned") the step is PANEL-fused:
+    # one launch per streamed row-panel per iteration with the (4, t)
+    # reductions carried across the panel loop (sharded: per device band,
+    # combined once per iteration) — million-row solves keep the one-launch
+    # economy without ever forming an (n × n) working set.  Operators
+    # without the capability keep the unfused loop (transparent fallback,
+    # warned once per operator), but a non-identity preconditioner cannot
+    # fuse: fuse_cg with precond_rank > 0 raises in mbcg rather than
+    # silently falling back — set precond_rank=0.  Composes with
+    # precision="mixed": the fused launches run bf16 MXU stages, the
+    # periodic residual refresh stays an f32 matmul.
     on_failure: str = "warn"  # solve-health policy for the host-level
     # engine entry points (solve / engine_state / build_posterior_cache /
     # extend_posterior_cache) when repro.core.health classifies the mBCG

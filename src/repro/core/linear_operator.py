@@ -347,7 +347,18 @@ class AddedDiagOperator(LinearOperator):
         # kernel emits it at global row == col, so the fused step IS K̂·D)
         s2 = jnp.asarray(self.sigma2)
         if s2.ndim:
-            return None  # batched noise: no scalar σ² tile — unfused fallback
+            # batched noise: no scalar σ² tile — unfused fallback
+            if self.base.fused_cg_step_fn.__func__ is not (
+                LinearOperator.fused_cg_step_fn
+            ):
+                _warn_once_per_op(
+                    self,
+                    "added_diag_batched_sigma2",
+                    "fuse_cg=True with batched (per-model) noise: the fused "
+                    "kernel folds one scalar σ² into its diagonal tile, so "
+                    "batched σ² runs the unfused mBCG loop instead.",
+                )
+            return None
         if sigma2 is not None:
             s2 = s2 + sigma2
         return self.base.fused_cg_step_fn(sigma2=s2)
@@ -574,14 +585,45 @@ class KroneckerOperator(LinearOperator):
         )
 
 
-def _warn_unfused_kronecker():
-    warnings.warn(
+_FUSED_FALLBACK_WARNED: dict = {}
+
+
+def _warn_once_per_op(op, key, message):
+    """Warn once per operator *construction*, not once per solve.
+
+    ``fused_cg_step_fn`` is probed on every engine solve, and the wrappers'
+    ``prepare()``/``_partitioned()`` plumbing rebuilds fresh operator
+    instances per probe — so a per-instance flag would still warn every
+    solve of a training loop.  Instead the dedup token is the identity of
+    the operator's array leaves: ``dataclasses.replace`` and the wrapper
+    constructors reuse the same underlying arrays, so every re-prepared
+    copy of one user-constructed operator maps to the same token, while a
+    genuinely new operator (new parameter arrays) warns afresh.  Inside a
+    ``jit`` trace the leaves are per-trace tracers, so each distinct
+    compilation warns at most once — also the right granularity."""
+    leaves = jax.tree_util.tree_leaves(op)
+    token = (
+        key,
+        tuple(id(l) for l in leaves) if leaves else id(op),
+        tuple(getattr(l, "shape", ()) for l in leaves),
+    )
+    if token in _FUSED_FALLBACK_WARNED:
+        return
+    if len(_FUSED_FALLBACK_WARNED) > 4096:
+        _FUSED_FALLBACK_WARNED.clear()
+    _FUSED_FALLBACK_WARNED[token] = True
+    warnings.warn(message, stacklevel=4)
+
+
+def _warn_unfused_kronecker(op):
+    _warn_once_per_op(
+        op,
+        "kronecker_unfused",
         "fuse_cg=True requested on a Kronecker-structured operator: fusing the "
         "Kronecker CG step into one Pallas launch is a documented frontier "
         "(ROADMAP), not implemented — falling back to the unfused mBCG loop. "
         "The data-kernel matmul inside each iteration still runs the "
         "prepared/sharded Pallas path.",
-        stacklevel=3,
     )
 
 
@@ -655,8 +697,9 @@ class KroneckerKernelOperator(LinearOperator):
     def fused_cg_step_fn(self, sigma2=None):
         """Not fusable yet: the Kronecker step needs a task contraction
         between the prologue and the tile matmul — a documented frontier.
-        Warns (loud) and returns None (graceful unfused fallback)."""
-        _warn_unfused_kronecker()
+        Warns (loud, once per operator) and returns None (graceful unfused
+        fallback)."""
+        _warn_unfused_kronecker(self)
         return None
 
 
@@ -731,7 +774,7 @@ class HadamardKroneckerOperator(LinearOperator):
         )
 
     def fused_cg_step_fn(self, sigma2=None):
-        _warn_unfused_kronecker()
+        _warn_unfused_kronecker(self)
         return None
 
 
@@ -797,7 +840,7 @@ class KroneckerAddedDiagOperator(LinearOperator):
         )
 
     def fused_cg_step_fn(self, sigma2=None):
-        _warn_unfused_kronecker()
+        _warn_unfused_kronecker(self)
         return None
 
 
@@ -895,6 +938,10 @@ class PanelLaunch:
     sharded: bool
     devices: int = 1
     itemsize: int = 4
+    #: True when this record is a panel-fused CG step (one fused launch per
+    #: panel per iteration) rather than a plain streamed matmul — the
+    #: accounting surface for "launches per CG iteration == num_panels"
+    fused: bool = False
 
     @property
     def panel_bytes(self) -> int:
@@ -934,18 +981,6 @@ def _record_panels(launch: PanelLaunch):
     sink = getattr(_PANEL_SINK, "launches", None)
     if sink is not None:
         sink.append(launch)
-
-
-def _warn_unfused_partitioned():
-    warnings.warn(
-        "fuse_cg=True requested on a partitioned kernel operator: the fused "
-        "CG step is one launch over the FULL row range — exactly the "
-        "working-set bound partitioning exists to break. A panel-aware fused "
-        "step (one launch per panel) is a documented frontier (ROADMAP); "
-        "falling back to the unfused mBCG loop, whose per-iteration matmul "
-        "still streams row-panels.",
-        stacklevel=3,
-    )
 
 
 def _pallas_panel_matmul(
@@ -1017,6 +1052,193 @@ def _xla_panel_matmul(kernel, X_rows, X_cols, M, panel_rows, *, compute_dtype):
     out = jnp.moveaxis(outs, 0, -3)
     out = out.reshape(*out.shape[:-3], num * p, out.shape[-1])
     return out[..., :n_rows, :]
+
+
+def _xla_band_fused_step(
+    kernel,
+    X_band,
+    X_cols,
+    U,
+    R,
+    D,
+    V,
+    D2_cols,
+    alpha,
+    beta,
+    gamma,
+    sigma2,
+    panel_rows,
+    *,
+    compute_dtype,
+):
+    """One whole CG iteration over a contiguous row band, streamed one
+    (panel_rows × n) kernel slab at a time — the XLA-backend twin of
+    ``ops._panel_fused_cg_step_bands``.
+
+    Same math as the fused Pallas kernel: the pending rank-1 updates
+    (U += α∘D, R −= α∘V) and this iteration's direction D₂ = γ∘R₂ + β∘D
+    are elementwise over the band's own rows (touched once per iteration);
+    the O(rows·n) work — V₂ = K̂·D₂ — consumes ``D2_cols``, the SAME full
+    new direction recomputed from the previous iteration's column-side
+    state on every device, one kernel panel per scan step.  The
+    ``[dᵀV; rᵀr; rᵀV; vᵀV]`` partials are band-row sums accumulated in a
+    loop-carried (…, t) slab per panel, in panel order (a left fold from
+    zeros — the order the sharded path's ``ordered_psum`` reproduces).
+    Not checkpointed: the fused step is solve-only machinery; MLL
+    gradients flow through the matmul custom VJP, never through here."""
+    compute_dtype = normalize_compute_dtype(compute_dtype)
+    reduced = is_reduced(compute_dtype)
+    rows = X_band.shape[0]
+    p = max(1, min(int(panel_rows), rows))
+    num = rows // p
+    rem = rows - num * p
+    a = alpha[..., None, :]
+    b_ = beta[..., None, :]
+    g = gamma[..., None, :]
+    U2 = U + a * D
+    R2 = R - a * V
+    D2 = g * R2 + b_ * D  # the band's rows of D2_cols, computed locally
+    s2 = jnp.asarray(sigma2, jnp.float32)
+    Mc = (
+        D2_cols.astype(jnp.bfloat16)
+        if reduced
+        else D2_cols.astype(jnp.float32)
+    )
+    lead = U.shape[:-2]
+    t = U.shape[-1]
+
+    def panel_mvm(Xp, D2p):
+        tile = kernel(Xp, X_cols)
+        if reduced:
+            out = _mixed_matmul(tile, Mc)
+        else:
+            out = jnp.matmul(
+                tile.astype(jnp.float32), Mc, preferred_element_type=jnp.float32
+            )
+        return out + s2 * D2p
+
+    def partials(D2p, R2p, V2p):
+        return (
+            jnp.sum(D2p * V2p, axis=-2),
+            jnp.sum(R2p * R2p, axis=-2),
+            jnp.sum(R2p * V2p, axis=-2),
+            jnp.sum(V2p * V2p, axis=-2),
+        )
+
+    red = tuple(jnp.zeros(lead + (t,), jnp.float32) for _ in range(4))
+
+    def one_panel(red, start):
+        Xp = jax.lax.dynamic_slice_in_dim(X_band, start, p, axis=0)
+        D2p = jax.lax.dynamic_slice_in_dim(D2, start, p, axis=-2)
+        R2p = jax.lax.dynamic_slice_in_dim(R2, start, p, axis=-2)
+        V2p = panel_mvm(Xp, D2p)
+        red = jax.tree_util.tree_map(jnp.add, red, partials(D2p, R2p, V2p))
+        return red, V2p
+
+    red, V2s = jax.lax.scan(one_panel, red, jnp.arange(num) * p)
+    V2 = jnp.moveaxis(V2s, 0, -3)
+    V2 = V2.reshape(*V2.shape[:-3], num * p, V2.shape[-1])
+    if rem:
+        # non-dividing tail: one exact-height panel, never padded rows
+        # (zero-pad rows would contribute σ²-diagonal terms to vᵀV)
+        D2p = D2[..., num * p :, :]
+        V2p = panel_mvm(X_band[num * p :], D2p)
+        red = jax.tree_util.tree_map(
+            jnp.add, red, partials(D2p, R2[..., num * p :, :], V2p)
+        )
+        V2 = jnp.concatenate([V2, V2p], axis=-2)
+    return U2, R2, D2, V2, red
+
+
+def _xla_panel_fused_step(
+    kernel, X, U, R, D, V, alpha, beta, gamma, sigma2, panel_rows, *, compute_dtype
+):
+    """Single-device XLA-backend panel-fused CG step (band == full range)."""
+    a = alpha[..., None, :]
+    D2_cols = (
+        gamma[..., None, :] * (R - a * V) + beta[..., None, :] * D
+    )
+    return _xla_band_fused_step(
+        kernel, X, X, U, R, D, V, D2_cols, alpha, beta, gamma, sigma2,
+        panel_rows, compute_dtype=compute_dtype,
+    )
+
+
+def _sharded_xla_panel_fused_step(
+    op, U, R, D, V, alpha, beta, gamma, sigma2, panel_rows, mesh, shards
+):
+    """shard_map twin of :func:`_xla_panel_fused_step`: each device
+    all-gathers the column-side (R, D, V) state, recomputes the full new
+    direction, streams its own contiguous row band through
+    :func:`_xla_band_fused_step`, and the (4, t) reductions are combined
+    across devices ONCE per iteration with the deterministic
+    ``ordered_psum`` fold (bitwise-matching a single device scanning the
+    same panels when panel_rows divides the band height)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import (
+        compat_shard_map,
+        ordered_psum,
+        row_shard_spec,
+    )
+
+    axes = op.data_axes
+    n = op.shape[0]
+    n_loc = n // shards
+    row_axis = U.ndim - 2
+    kern_leaves, kern_def = jax.tree_util.tree_flatten(op.kernel)
+    kern_leaves = tuple(kern_leaves)
+    compute_dtype = op.compute_dtype
+
+    def body(leaves, X_full, U_loc, R_loc, D_loc, V_loc, al, be, ga, s2):
+        kernel = jax.tree_util.tree_unflatten(kern_def, leaves)
+        R_full = jax.lax.all_gather(R_loc, axes, axis=row_axis, tiled=True)
+        D_full = jax.lax.all_gather(D_loc, axes, axis=row_axis, tiled=True)
+        V_full = jax.lax.all_gather(V_loc, axes, axis=row_axis, tiled=True)
+        idx = jax.lax.axis_index(axes)
+        X_band = jax.lax.dynamic_slice_in_dim(
+            X_full, idx * n_loc, n_loc, axis=0
+        )
+        a = al[..., None, :]
+        D2_cols = ga[..., None, :] * (R_full - a * V_full) + be[..., None, :] * D_full
+        U2, R2, D2, V2, red = _xla_band_fused_step(
+            kernel, X_band, X_full, U_loc, R_loc, D_loc, V_loc, D2_cols,
+            al, be, ga, s2, panel_rows, compute_dtype=compute_dtype,
+        )
+        red = jax.tree_util.tree_map(lambda x: ordered_psum(x, axes), red)
+        return U2, R2, D2, V2, red
+
+    state_spec = row_shard_spec(U.ndim, axes)
+    rep = P(*([None] * (U.ndim - 1)))
+    x_spec = P(*([None] * op.X.ndim))
+    return compat_shard_map(
+        body,
+        mesh,
+        in_specs=(
+            tuple(P() for _ in kern_leaves),
+            x_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            state_spec,
+            rep,
+            rep,
+            rep,
+            P(),
+        ),
+        out_specs=(state_spec, state_spec, state_spec, state_spec, (rep, rep, rep, rep)),
+    )(
+        kern_leaves,
+        op.X,
+        U,
+        R,
+        D,
+        V,
+        alpha,
+        beta,
+        gamma,
+        jnp.asarray(sigma2, jnp.float32),
+    )
 
 
 def _sharded_panel_matmul(op, M, mesh, shards):
@@ -1134,6 +1356,97 @@ def _partitioned_matmul_bwd(res, ct):
 
 
 _partitioned_matmul.defvjp(_partitioned_matmul_fwd, _partitioned_matmul_bwd)
+
+
+@jax.custom_vjp
+def _sharded_partitioned_matmul(op, M):
+    """Sharded K @ M with a *band-sharded* backward pass.
+
+    The primal is :func:`_sharded_panel_matmul` (each device streams its
+    contiguous row band).  The VJP re-expresses each device's band as the
+    checkpointed XLA panel stream — ``K[band, :] @ M`` — and differentiates
+    that band ON ITS OWN DEVICE at the band's rows of the cotangent, then
+    ``psum``s the (kernel, X, M) contributions; the gradient pass
+    re-streams panels on all devices instead of serializing through one.
+    X appears as both the band rows (sliced inside the vjp'd function) and
+    the full column set, so one ``jax.vjp`` accounts for both paths of
+    dK/dX.  ``op.mesh`` must carry the resolved mesh (the caller pins it
+    with ``dataclasses.replace`` — it is a static field, so it rides in
+    the pytree aux data through jit/grad)."""
+    mesh = op.mesh
+    return _sharded_panel_matmul(op, M, mesh, op._num_shards(mesh))
+
+
+def _sharded_partitioned_matmul_fwd(op, M):
+    mesh = op.mesh
+    return _sharded_panel_matmul(op, M, mesh, op._num_shards(mesh)), (op, M)
+
+
+def _sharded_partitioned_matmul_bwd(res, ct):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import compat_shard_map, row_shard_spec
+
+    op, M = res
+    mesh = op.mesh
+    shards = op._num_shards(mesh)
+    axes = op.data_axes
+    n = op.shape[0]
+    n_loc = n // shards
+    p = min(op.panel_rows_for(n), n_loc)
+    row_axis = M.ndim - 2
+    kern_leaves, kern_def = jax.tree_util.tree_flatten(op.kernel)
+    kern_leaves = tuple(kern_leaves)
+    compute_dtype = op.compute_dtype
+
+    def body(leaves, X_full, M_loc, ct_loc):
+        kernel = jax.tree_util.tree_unflatten(kern_def, leaves)
+        M_full = jax.lax.all_gather(M_loc, axes, axis=row_axis, tiled=True)
+        idx = jax.lax.axis_index(axes)
+
+        def ref(kernel, X, m):
+            X_band = jax.lax.dynamic_slice_in_dim(
+                X, idx * n_loc, n_loc, axis=0
+            )
+            return _xla_panel_matmul(
+                kernel, X_band, X, m, p, compute_dtype=compute_dtype
+            )
+
+        _, vjp = jax.vjp(ref, kernel, X_full, M_full)
+        kern_bar, X_bar, M_bar = vjp(ct_loc)
+        # each device differentiated its own output band; the total
+        # gradient is the sum of the per-band contributions
+        kb_leaves = tuple(jax.tree_util.tree_leaves(kern_bar))
+        kb_leaves = jax.lax.psum(kb_leaves, axes)
+        return kb_leaves, jax.lax.psum(X_bar, axes), jax.lax.psum(M_bar, axes)
+
+    x_spec = P(*([None] * op.X.ndim))
+    ct_spec = row_shard_spec(M.ndim, axes)
+    rep_m = P(*([None] * M.ndim))
+    kb_leaves, X_bar, M_bar = compat_shard_map(
+        body,
+        mesh,
+        in_specs=(
+            tuple(P() for _ in kern_leaves),
+            x_spec,
+            ct_spec,
+            ct_spec,
+        ),
+        out_specs=(tuple(P() for _ in kern_leaves), x_spec, rep_m),
+    )(kern_leaves, op.X, M, ct)
+    kern_bar = jax.tree_util.tree_unflatten(kern_def, list(kb_leaves))
+    op_bar = dataclasses.replace(
+        op,
+        kernel=kern_bar,
+        X=X_bar,
+        Xs=None if op.Xs is None else jnp.zeros_like(op.Xs),
+    )
+    return op_bar, M_bar
+
+
+_sharded_partitioned_matmul.defvjp(
+    _sharded_partitioned_matmul_fwd, _sharded_partitioned_matmul_bwd
+)
 
 
 @_register
@@ -1282,7 +1595,12 @@ class PartitionedKernelOperator(LinearOperator):
             )
         )
         if shards > 1:
-            out = _sharded_panel_matmul(op, M, mesh, shards)
+            # pin the resolved mesh into the (static) mesh field so the
+            # custom-VJP backward can rebuild the same shard_map — the
+            # gradient pass then re-streams panels on all devices too
+            out = _sharded_partitioned_matmul(
+                dataclasses.replace(op, mesh=mesh), M
+            )
         else:
             out = _partitioned_matmul(op, M)
         return out[..., 0] if squeeze else out
@@ -1341,12 +1659,112 @@ class PartitionedKernelOperator(LinearOperator):
         return dataclasses.replace(self, compute_dtype=compute_dtype, Xs=None)
 
     def fused_cg_step_fn(self, sigma2=None):
-        """Not fusable yet: one fused launch spans the full row range, which
-        would rebuild the O(n²) working set panel-streaming removes.  Warns
-        (loud) and returns None — the engine's unfused mBCG loop still
-        streams panels every iteration (the PR 4 fallback seam)."""
-        _warn_unfused_partitioned()
-        return None
+        """Panel-fused CG step: the PR 4 fused iteration launched once per
+        (panel_rows × n) row-panel via the ``row_offset`` path, with the
+        partial ``[dᵀV; rᵀr; rᵀV; vᵀV]`` reductions carried across the
+        panel loop — one launch per panel per CG iteration instead of the
+        unfused loop's per-panel matmul plus ~10 XLA state passes, and
+        never an (n × n) working set.
+
+        Sharded, each device streams its contiguous row band through the
+        fused step and the (4, t) reductions are combined across devices
+        once per iteration in deterministic device order, so 1-device and
+        N-device fused solves stay bitwise-equal when panel_rows divides
+        the band height.  Panel height is chosen at trace time from the
+        RHS shape with the *fused* working-set budget
+        (``choose_panel_rows(..., fused=True)``)."""
+        s2 = jnp.float32(0.0) if sigma2 is None else jnp.asarray(sigma2)
+        if s2.ndim:
+            _warn_once_per_op(
+                self,
+                "partitioned_batched_sigma2",
+                "fuse_cg=True on the partitioned path with batched noise: "
+                "the fused kernel folds one scalar σ² into its diagonal "
+                "tile — running the unfused streamed loop.",
+            )
+            return None
+        op = self._ready()
+        n = op.shape[0]
+        mesh = op._live_mesh()
+        shards = op._num_shards(mesh)
+        if shards > 1 and n % shards != 0:
+            _warn_once_per_op(
+                self,
+                "partitioned_fused_indivisible",
+                f"panel-fused CG: n={n} not divisible by {shards} devices; "
+                f"running the fused step single-device",
+                )
+            mesh, shards = None, 1
+        backend = op.resolved_backend
+        from repro.core.precision import as_jnp_dtype
+        from repro.kernels.kernel_matmul.ops import (
+            choose_panel_rows,
+            panel_fused_cg_step_prescaled,
+            sharded_fused_cg_step_prescaled,
+        )
+
+        itemsize = jnp.dtype(as_jnp_dtype(op.compute_dtype)).itemsize
+        n_band = n // shards
+
+        def step(U, R, D, V, alpha, beta, gamma):
+            # shapes are static at trace time: budget the FUSED working set
+            # (state-column slabs + carried reductions) for this RHS
+            t = U.shape[-1]
+            b = int(np.prod(U.shape[:-2], dtype=np.int64)) if U.ndim > 2 else 1
+            if op.panel_rows > 0:
+                p = max(1, min(op.panel_rows, n_band))
+            else:
+                p = min(
+                    choose_panel_rows(
+                        n,
+                        budget_bytes=op.panel_budget_bytes or None,
+                        itemsize=itemsize,
+                        rhs_cols=t,
+                        batch=b,
+                        fused=True,
+                    ),
+                    n_band,
+                )
+            num_band = n_band // p + (1 if n_band % p else 0)
+            _record_panels(
+                PanelLaunch(
+                    n=n,
+                    rhs_cols=t,
+                    batch=b,
+                    panel_rows=p,
+                    num_panels=shards * num_band,
+                    backend=backend,
+                    sharded=shards > 1,
+                    devices=shards,
+                    itemsize=itemsize,
+                    fused=True,
+                )
+            )
+            if backend == "pallas":
+                kw = dict(
+                    panel_rows=p,
+                    kernel_type=op.kernel_type,
+                    compute_dtype=op.compute_dtype,
+                )
+                if shards > 1:
+                    return sharded_fused_cg_step_prescaled(
+                        op.Xs, U, R, D, V, alpha, beta, gamma,
+                        op.kernel.outputscale, s2, mesh, op.data_axes, **kw,
+                    )
+                return panel_fused_cg_step_prescaled(
+                    op.Xs, U, R, D, V, alpha, beta, gamma,
+                    op.kernel.outputscale, s2, **kw,
+                )
+            if shards > 1:
+                return _sharded_xla_panel_fused_step(
+                    op, U, R, D, V, alpha, beta, gamma, s2, p, mesh, shards
+                )
+            return _xla_panel_fused_step(
+                op.kernel, op.X, U, R, D, V, alpha, beta, gamma, s2, p,
+                compute_dtype=op.compute_dtype,
+            )
+
+        return step
 
 
 # --- fault injection (robustness harness) ----------------------------------
@@ -1458,10 +1876,13 @@ class FaultInjectingOperator(LinearOperator):
         corrupts everything including ``to_dense``.
 
     ``diagonal`` / ``row`` delegate CLEAN (so pivoted-Cholesky
-    preconditioner construction is not the thing under test), and the
-    wrapper does not advertise a fused CG step — under ``fuse_cg`` the
-    engine transparently falls back to the unfused loop, where the
-    injection seam lives.
+    preconditioner construction is not the thing under test).  The wrapper
+    forwards the base's fused CG step with the same injection seam wrapped
+    around it: a corrupted call poisons the scheduled row band of the
+    iteration's V update AND the carried (4, t) reductions — exactly what
+    a faulted panel launch would feed the panel-carry accumulator — so
+    chaos coverage extends to the panel-fused path (``negative_diag``
+    stays unfused-only: it perturbs the operator itself, not one call).
 
     Wrap INSIDE the noise wrapper — ``AddedDiagOperator(FaultInjecting…(K),
     σ²)`` — so ``build_preconditioner``'s structural dispatch still sees the
@@ -1538,6 +1959,48 @@ class FaultInjectingOperator(LinearOperator):
             # the unhealable fault class (→ serving circuit breaker)
             dense = jnp.full_like(dense, jnp.nan)
         return dense
+
+    def fused_cg_step_fn(self, sigma2=None):
+        if self.negative_diag:
+            # a structural perturbation of K̂ itself — keep it on the
+            # unfused loop, whose matmul seam already applies it
+            return None
+        base_fn = self.base.fused_cg_step_fn(sigma2=sigma2)
+        if base_fn is None:
+            return None
+        sched = self.schedule
+        if sched is None:
+            return base_fn
+        reduced = self.reduced
+
+        def step(U, R, D, V, alpha, beta, gamma):
+            Un, Rn, Dn, Vn, red = base_fn(U, R, D, V, alpha, beta, gamma)
+
+            def _decide(_probe):
+                return np.float32(sched.next_code(reduced))
+
+            # same per-EXECUTION tick as the matmul seam: the probe's data
+            # dependence on this iteration's V keeps the callback inside
+            # the CG scan body
+            probe = jnp.real(Vn.ravel()[0]).astype(jnp.float32)
+            code = jax.pure_callback(
+                _decide, jax.ShapeDtypeStruct((), jnp.float32), probe
+            )
+            bad = jnp.where(
+                code == FaultSchedule.NAN,
+                jnp.nan,
+                jnp.where(code == FaultSchedule.INF, jnp.inf, 0.0),
+            ).astype(Vn.dtype)
+            span = getattr(sched, "panel", None)
+            s0, rows = span if span is not None else (0, 1)
+            # the faulted panel's V rows go bad, and so do its epilogue
+            # partials — which the panel carry has already summed into the
+            # iteration's (4, t) reductions
+            Vn = Vn.at[..., s0 : s0 + rows, :].add(bad)
+            red = tuple(r + bad.astype(r.dtype) for r in red)
+            return Un, Rn, Dn, Vn, red
+
+        return step
 
     def prepare(self):
         return dataclasses.replace(self, base=self.base.prepare())

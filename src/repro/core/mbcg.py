@@ -167,6 +167,13 @@ REFRESH_MOMENTUM_GATE = 0.25
 #: ``LinearOperator.fused_cg_step_fn()``; :func:`xla_cg_step` builds the
 #: pure-XLA reference from any matmul (the semantics every fused kernel
 #: must match — and the testing oracle for them).
+#:
+#: The contract says nothing about HOW the step covers the row range, which
+#: is what lets the partitioned operators plug in a PANEL-fused step — one
+#: kernel launch per streamed row-panel (sharded: per device band), with
+#: the four reductions accumulated across the panel loop and returned once
+#: — without this loop changing at all: `_fused_loop` only ever sees whole
+#: iterations and whole (…, t) reductions.
 CGStepFn = Callable
 
 

@@ -66,6 +66,26 @@ def compat_shard_map(f, mesh, in_specs, out_specs):
     return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
 
+def ordered_psum(x, axes=("data",)):
+    """Deterministic-order cross-device sum: all-gather the per-device
+    partials, then fold them left-to-right in device-index order from a
+    zeros accumulator.
+
+    ``jax.lax.psum`` leaves the floating-point reduction order up to the
+    backend (ring vs tree, implementation-defined), so a sharded sum is
+    generally NOT bitwise-equal to the same sum on one device.  This fold
+    is: it reproduces exactly the left fold a single device performs when
+    it scans the same partials in the same order — the contract the
+    panel-fused CG step relies on for its bitwise 1-vs-N-device guarantee.
+    O(S·|x|) gather instead of psum's O(|x|), fine for the (4, t)-sized
+    reduction slabs it exists for; don't use it for large operands."""
+    parts = jax.lax.all_gather(x, axes, axis=0, tiled=False)
+    total = jnp.zeros_like(parts[0])
+    for k in range(parts.shape[0]):
+        total = total + parts[k]
+    return total
+
+
 def row_shard_spec(ndim, axes=("data",)):
     """P(…, axes, None): shard the row (-2) dim of an (…, n, t) operand over
     ``axes``, leading batch dims replicated — the layout of M and of the

@@ -245,8 +245,9 @@ class KernelOperator(LinearOperator):
     def fused_cg_step_fn(self, sigma2=None):
         """Fused CG capability: pallas modes delegate to their prepared form
         (the engine prepares before the loop anyway); dense/blocked keep the
-        unfused fallback; the partitioned mode declines LOUDLY (a full-range
-        fused launch would rebuild the O(n²) working set — see
+        unfused fallback; the partitioned mode runs the PANEL-fused step —
+        one fused launch per streamed row-panel per iteration, reductions
+        carried across the panel loop (see
         ``PartitionedKernelOperator.fused_cg_step_fn``)."""
         if self.mode == "pallas_partitioned":
             return self._partitioned().fused_cg_step_fn(sigma2=sigma2)

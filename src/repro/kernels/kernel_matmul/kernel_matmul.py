@@ -576,7 +576,14 @@ def fused_cg_step_pallas(
 
 
 def fused_step_tile_counts(
-    rows: int, cols: int, batch: int, *, t: int = 128, bn: int = 256, bm: int = 512
+    rows: int,
+    cols: int,
+    batch: int,
+    *,
+    t: int = 128,
+    bn: int = 256,
+    bm: int = 512,
+    panel_rows: int | None = None,
 ) -> dict:
     """Measured tile-level HBM traffic of ONE fused CG iteration, mirrored
     from the index maps of ``_fused_cg_step_kernel`` (the same way
@@ -600,7 +607,54 @@ def fused_step_tile_counts(
     the fusion targets (n_loc ≲ 2·bn).  Above that the fused path still
     wins on launches (1 vs ≥ 2 + the XLA pass dispatch latencies), just
     not on raw bytes.
+
+    ``panel_rows`` models the PANEL-FUSED partitioned step instead: the
+    fused kernel launched once per (panel_rows × cols) row-panel with the
+    (4, t) reductions carried across the panel loop (a non-dividing tail
+    runs as one exact-height launch).  Counts are the sum of the
+    per-height sub-launches; ``launches_per_iter_fused == num_panels``
+    (vs the unfused partitioned iteration's ``num_panels`` matmul
+    launches PLUS one full-height set of XLA state passes), and the
+    returned dict gains ``num_panels`` / ``panel_rows`` keys.
     """
+    if panel_rows is not None:
+        p = max(1, min(int(panel_rows), rows))
+        num = rows // p
+        rem = rows - num * p
+        heights = [p] * num + ([rem] if rem else [])
+        subs = [
+            fused_step_tile_counts(h, cols, batch, t=t, bn=bn, bm=bm)
+            for h in heights
+        ]
+        d_bytes = 4
+        nt = rows * t * batch
+        fused_bytes = sum(s["fused_hbm_bytes_per_iter"] for s in subs)
+        # unfused partitioned iteration: each panel's matmul traffic (D
+        # column tiles + its V rows), then ONE full-height set of XLA
+        # state-update passes — strip each sub-model's own XLA component
+        # and add the 12 (b, n, t) passes once
+        unfused_bytes = (
+            sum(
+                s["unfused_hbm_bytes_per_iter"] - 12 * h * t * batch * d_bytes
+                for s, h in zip(subs, heights)
+            )
+            + 12 * nt * d_bytes
+        )
+        return {
+            "grid": subs[0]["grid"],
+            "num_panels": len(heights),
+            "panel_rows": p,
+            "x_tile_loads": sum(s["x_tile_loads"] for s in subs),
+            "col_state_tile_loads": sum(s["col_state_tile_loads"] for s in subs),
+            "row_state_tile_loads": sum(s["row_state_tile_loads"] for s in subs),
+            "epilogue_extra_tile_loads": 0,
+            "state_slab_stores": sum(s["state_slab_stores"] for s in subs),
+            "fused_hbm_bytes_per_iter": fused_bytes,
+            "unfused_hbm_bytes_per_iter": unfused_bytes,
+            "hbm_bytes_ratio": unfused_bytes / fused_bytes,
+            "launches_per_iter_fused": len(heights),
+            "launches_per_iter_unfused": len(heights) + 1,
+        }
     ebn, ebm = _effective_blocks(
         rows, cols, t, batch, bn, bm, slabs=_FUSED_STATE_SLABS
     )

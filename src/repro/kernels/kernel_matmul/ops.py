@@ -20,6 +20,18 @@ Three layers:
     ``KernelOperator`` family advertises through ``fused_cg_step_fn``; the
     sharded form all-gathers the (R, V, D) column state (f32 — CG state
     never loses bits in flight) and ``psum``s the (4, t) reductions.
+  * :func:`panel_fused_cg_step_prescaled` — the *partitioned* fused CG
+    iteration: the same fused kernel launched once per (panel_rows × n)
+    row-panel via ``row_offset``, with the partial [dᵀV; rᵀr; rᵀV; vᵀV]
+    reductions carried across the panel loop in a loop-carried (4, t) slab.
+    Each panel's prologue touches only its own row band (state is updated
+    once per iteration, not once per panel) and the column-side (R, V, D)
+    arrays are the full *previous-iteration* state, so the on-the-fly
+    direction recompute inside the kernel sees consistent columns no
+    matter which panel runs first.  ``sharded_fused_cg_step_prescaled``
+    takes ``panel_rows=`` to stream each device's contiguous row band
+    through this loop, with the carried reductions summed across devices
+    once per iteration in deterministic device order.
 
 Every entry point takes a ``compute_dtype`` ('float32' | 'bfloat16', with
 the 'highest'/'mixed' precision aliases accepted) that selects the MXU
@@ -39,7 +51,11 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.precision import as_jnp_dtype, normalize_compute_dtype
-from .kernel_matmul import fused_cg_step_pallas, kernel_matmul_pallas
+from .kernel_matmul import (
+    _FUSED_STATE_SLABS,
+    fused_cg_step_pallas,
+    kernel_matmul_pallas,
+)
 
 
 def _pad_to(x, mult, axis):
@@ -83,9 +99,21 @@ PANEL_ALIGN = 128
 MAX_PANEL_ROWS = 8192
 
 
-def choose_panel_rows(n, *, budget_bytes=None, itemsize=4):
-    """Largest aligned panel height whose (panel_rows × n) slab fits the
+def choose_panel_rows(
+    n, *, budget_bytes=None, itemsize=4, rhs_cols=0, batch=1, fused=False
+):
+    """Largest aligned panel height whose streamed working set fits the
     byte budget — the VMEM/HBM auto-chooser behind ``panel_rows=0``.
+
+    The plain-matmul working set is the (panel_rows × n) kernel slab.  With
+    ``fused=True`` the chooser budgets the *fused CG step's* working set
+    instead: on top of the kernel slab, each panel launch keeps
+    ``_FUSED_STATE_SLABS`` f32 (batch, panel_rows, t) row-state slabs live
+    (U/R/D/V in and out), and the whole iteration holds the f32 (R, V, D)
+    column state plus the carried (4, t) reduction slab resident — without
+    accounting for those, a "within budget" panel height silently blows
+    ``panel_budget_bytes`` the moment ``fuse_cg=True`` runs.  ``rhs_cols``
+    (t) and ``batch`` size that state; they are trace-time shape constants.
 
     Returns a multiple of :data:`PANEL_ALIGN` in
     [PANEL_ALIGN, min(n, MAX_PANEL_ROWS)]; at very large n (where even one
@@ -96,7 +124,14 @@ def choose_panel_rows(n, *, budget_bytes=None, itemsize=4):
     budget = PANEL_BUDGET_BYTES if budget_bytes is None else int(budget_bytes)
     if budget <= 0:
         raise ValueError(f"budget_bytes must be positive, got {budget}")
-    rows = budget // max(n * itemsize, 1)
+    per_row = n * itemsize
+    overhead = 0
+    if fused:
+        t = max(int(rhs_cols), 1)
+        b = max(int(batch), 1)
+        per_row += _FUSED_STATE_SLABS * b * t * 4
+        overhead = 3 * n * b * t * 4 + 4 * t * 4
+    rows = max(budget - overhead, 0) // max(per_row, 1)
     rows = (rows // PANEL_ALIGN) * PANEL_ALIGN
     rows = max(PANEL_ALIGN, min(rows, MAX_PANEL_ROWS))
     return min(rows, _ceil_to(n, PANEL_ALIGN))
@@ -462,6 +497,143 @@ def fused_cg_step_prescaled(
     )
 
 
+def _panel_fused_cg_step_bands(
+    Xs_rows,
+    Xs_cols,
+    U,
+    R,
+    D,
+    V,
+    R_cols,
+    D_cols,
+    V_cols,
+    alpha,
+    beta,
+    gamma,
+    outputscale,
+    sigma2,
+    row0,
+    *,
+    panel_rows,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+    compute_dtype="float32",
+):
+    """Panel-carried fused CG step over a contiguous row band.
+
+    Streams the band's (…, rows, t) state through the fused kernel one
+    (panel_rows × cols) launch at a time — each launch runs the full PR 4
+    iteration (prologue rank-1 updates, on-the-fly direction recompute,
+    epilogue reductions) for its own rows via ``row_offset = row0 + start``
+    — and **carries the partial [dᵀV; rᵀr; rᵀV; vᵀV] reductions across the
+    panel loop**: every panel's epilogue lands in a loop-carried (4, t)
+    slab (a left fold from zeros, in panel order), so the iteration's
+    reductions exist without any XLA pass over the O(rows·t) state.
+
+    Correctness of the decomposition rests on two invariants of the fused
+    kernel: (a) the prologue touches only the launch's own row block, so
+    panels partition the state update exactly once per iteration; (b) the
+    matmul consumes this iteration's direction recomputed on the fly from
+    the *column-side* (R_cols, D_cols, V_cols) arrays — the full
+    previous-iteration state, identical for every panel — so panel order
+    cannot change any V row.  A non-dividing last panel runs as its own
+    exact-height launch (the kernel's in-kernel row masking handles any
+    height), never as zero-padded rows that would pollute vᵀV.
+
+    ``row0`` may be traced (the sharded path passes each device's band
+    start).  Returns the band's updated state and the (dv, rr, rv, vv)
+    tuple of (…, t) partial sums for these rows."""
+    rows = Xs_rows.shape[0]
+    p = max(1, min(int(panel_rows), rows))
+    num = rows // p
+    rem = rows - num * p
+    lead = U.shape[:-2]
+    t = U.shape[-1]
+    kw = dict(
+        kernel_type=kernel_type,
+        bn=bn,
+        bm=bm,
+        interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+    red = tuple(jnp.zeros(lead + (t,), jnp.float32) for _ in range(4))
+
+    def one_panel(red, start):
+        Xp = jax.lax.dynamic_slice_in_dim(Xs_rows, start, p, axis=0)
+        bands = [
+            jax.lax.dynamic_slice_in_dim(a, start, p, axis=-2)
+            for a in (U, R, D, V)
+        ]
+        Un, Rn, Dn, Vn, pred = _fused_cg_step_padded(
+            Xp, Xs_cols, *bands, R_cols, D_cols, V_cols,
+            alpha, beta, gamma, outputscale, sigma2,
+            row_offset=row0 + start, **kw,
+        )
+        red = jax.tree_util.tree_map(jnp.add, red, pred)
+        return red, (Un, Rn, Dn, Vn)
+
+    red, outs = jax.lax.scan(one_panel, red, jnp.arange(num) * p)
+    state = []
+    for a in outs:  # (num, …, p, t) stacked bands → (…, num·p, t)
+        a = jnp.moveaxis(a, 0, -3)
+        state.append(a.reshape(*a.shape[:-3], num * p, a.shape[-1]))
+    if rem:
+        Un, Rn, Dn, Vn, pred = _fused_cg_step_padded(
+            Xs_rows[num * p :], Xs_cols,
+            U[..., num * p :, :], R[..., num * p :, :],
+            D[..., num * p :, :], V[..., num * p :, :],
+            R_cols, D_cols, V_cols,
+            alpha, beta, gamma, outputscale, sigma2,
+            row_offset=row0 + num * p, **kw,
+        )
+        red = jax.tree_util.tree_map(jnp.add, red, pred)
+        state = [
+            jnp.concatenate([s, x], axis=-2)
+            for s, x in zip(state, (Un, Rn, Dn, Vn))
+        ]
+    return state[0], state[1], state[2], state[3], red
+
+
+def panel_fused_cg_step_prescaled(
+    Xs,
+    U,
+    R,
+    D,
+    V,
+    alpha,
+    beta,
+    gamma,
+    outputscale,
+    sigma2,
+    *,
+    panel_rows,
+    kernel_type="rbf",
+    bn=256,
+    bm=512,
+    interpret=None,
+    compute_dtype="float32",
+):
+    """Partitioned fused CG iteration of K̂ = K(X, X) + σ²I — the
+    single-device panel-streamed :data:`repro.core.mbcg.CGStepFn`.
+
+    One fused-kernel launch per (panel_rows × n) row-panel instead of one
+    full-range launch (whose (n × n)-bounded tile sweep is exactly the
+    working set partitioning exists to break) and instead of the unfused
+    loop's per-panel matmul plus ~10 XLA state passes.  The column-side
+    state the kernel recomputes D from is the full pre-update (R, D, V) —
+    the same arrays every panel reads — and the (4, t) reductions are
+    carried across the panel loop (see :func:`_panel_fused_cg_step_bands`).
+    """
+    return _panel_fused_cg_step_bands(
+        Xs, Xs, U, R, D, V, R, D, V,
+        alpha, beta, gamma, outputscale, sigma2, 0,
+        panel_rows=panel_rows, kernel_type=kernel_type,
+        bn=bn, bm=bm, interpret=interpret, compute_dtype=compute_dtype,
+    )
+
+
 def sharded_fused_cg_step_prescaled(
     Xs,
     U,
@@ -476,6 +648,7 @@ def sharded_fused_cg_step_prescaled(
     mesh,
     axes=("data",),
     *,
+    panel_rows=None,
     kernel_type="rbf",
     bn=256,
     bm=512,
@@ -487,16 +660,28 @@ def sharded_fused_cg_step_prescaled(
     Layout mirrors :func:`sharded_kernel_matmul_prescaled`: Xs replicated,
     the (…, n, t) CG state row-sharded over ``axes``.  Each device applies
     the pending updates to its own row band inside its fused kernel and
-    contributes its band's partial reductions, which are ``psum``'d — the
-    only O(t) collective.  The column-side (R, V, D) state is all-gathered
-    (three payloads instead of the plain matmul's one: the kernel
-    recomputes this iteration's D from them on the fly, which is what
-    keeps the whole iteration a single launch; the gather stays f32 so the
-    recursively-updated CG state never loses bits in flight, even when the
-    MXU stages run at ``compute_dtype='bfloat16'``)."""
+    contributes its band's partial reductions, which are summed across
+    devices ONCE per iteration — the only O(t) collective.  The column-side
+    (R, V, D) state is all-gathered (three payloads instead of the plain
+    matmul's one: the kernel recomputes this iteration's D from them on the
+    fly, which is what keeps the whole iteration a single launch per band;
+    the gather stays f32 so the recursively-updated CG state never loses
+    bits in flight, even when the MXU stages run at
+    ``compute_dtype='bfloat16'``).
+
+    ``panel_rows``: None runs each device band as ONE fused launch (the
+    PR 4 behaviour); an int streams each device's contiguous band through
+    :func:`_panel_fused_cg_step_bands` — one launch per panel, reductions
+    carried across the local panel loop, then combined across devices with
+    :func:`repro.distributed.sharding.ordered_psum` so the cross-device sum
+    uses the same deterministic left fold as a single device scanning the
+    same panels (1-device vs N-device fused solves stay bitwise-equal when
+    the panel decomposition matches, i.e. when panel_rows divides the band
+    height)."""
     from repro.distributed.sharding import (
         compat_shard_map,
         mesh_axis_sizes,
+        ordered_psum,
         row_shard_spec,
     )
 
@@ -518,6 +703,23 @@ def sharded_fused_cg_step_prescaled(
         idx = jax.lax.axis_index(axes)
         n_loc = n // shards
         X_loc = jax.lax.dynamic_slice_in_dim(Xs_full, idx * n_loc, n_loc, axis=0)
+        kw = dict(
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            interpret=interpret,
+            compute_dtype=compute_dtype,
+        )
+        if panel_rows is not None:
+            Un, Rn, Dn, Vn, red = _panel_fused_cg_step_bands(
+                X_loc, Xs_full, U_loc, R_loc, D_loc, V_loc,
+                R_full, D_full, V_full, al, be, ga, outputscale, sigma2,
+                idx * n_loc, panel_rows=panel_rows, **kw,
+            )
+            red = jax.tree_util.tree_map(
+                lambda x: ordered_psum(x, axes), red
+            )
+            return Un, Rn, Dn, Vn, red
         Un, Rn, Dn, Vn, red = _fused_cg_step_padded(
             X_loc,
             Xs_full,
@@ -534,11 +736,7 @@ def sharded_fused_cg_step_prescaled(
             outputscale,
             sigma2,
             row_offset=idx * n_loc,
-            kernel_type=kernel_type,
-            bn=bn,
-            bm=bm,
-            interpret=interpret,
-            compute_dtype=compute_dtype,
+            **kw,
         )
         red = jax.lax.psum(red, axes)
         return Un, Rn, Dn, Vn, red

@@ -7,8 +7,18 @@ materializes K — every matmul streams (panel_rows × n) row-panels (Pallas
 sizes that don't divide n, batched RHS), checkpointed MLL gradients vs the
 in-memory path, shard_map panel bands bitwise-equal to single-device on 8
 forced CPU devices, a real n=20 000 engine solve + posterior cache build,
-the loud fused-CG fallback, dense_direct small-n routing, and single-panel
-fault injection healing through the PR 6 degradation ladder.
+dense_direct small-n routing, and single-panel fault injection healing
+through the PR 6 degradation ladder.
+
+PR 8 makes ``fuse_cg=True`` real on this path: the PANEL-FUSED CG step —
+one fused kernel launch per row-panel per iteration, the [dᵀV; rᵀr; rᵀV;
+vᵀV] reductions carried across the panel loop — is tested for parity with
+the unfused streamed loop (solves, logdet, MLL grads) on both backends,
+for jaxpr-counted launches == num_panels with no (n, n) aval anywhere,
+for bitwise 1-vs-8-device equality (deterministic ordered reduction
+fold), for the band-sharded custom-VJP backward (all devices re-stream
+their own gradient panels; also unblocks pallas-backend sharded grads),
+and for chaos confinement + ladder healing on the fused path.
 """
 
 import dataclasses
@@ -78,6 +88,28 @@ class TestPanelChooser:
             choose_panel_rows(0)
         with pytest.raises(ValueError):
             choose_panel_rows(100, budget_bytes=0)
+
+    def test_fused_budget_accounts_cg_state(self):
+        """fused=True budgets the fused step's working set — the kernel slab
+        PLUS the f32 row-state slabs per panel and the resident column state
+        + (4, t) reduction slab — so the chosen panel shrinks vs the plain
+        chooser and the fused working set still fits the budget."""
+        from repro.kernels.kernel_matmul.kernel_matmul import _FUSED_STATE_SLABS
+
+        n, t, b = 50_000, 128, 4
+        budget = 512 << 20
+        plain = choose_panel_rows(n, budget_bytes=budget)
+        fused = choose_panel_rows(
+            n, budget_bytes=budget, rhs_cols=t, batch=b, fused=True
+        )
+        assert fused % PANEL_ALIGN == 0
+        assert fused < plain
+        per_row = n * 4 + _FUSED_STATE_SLABS * b * t * 4
+        overhead = 3 * n * b * t * 4 + 4 * t * 4
+        assert fused == PANEL_ALIGN or fused * per_row + overhead <= budget
+        # without fused=True the extra shape hints change nothing (the plain
+        # matmul path is byte-identical to the pre-fused chooser)
+        assert choose_panel_rows(n, budget_bytes=budget, rhs_cols=t, batch=b) == plain
 
 
 class TestPanelParity:
@@ -345,29 +377,259 @@ class TestEngineAtScale:
         assert cache.alpha.shape == (n,)
 
 
-class TestFusedFallback:
-    def test_fused_cg_warns_and_matches(self):
-        n = 400
+class TestPanelFusedCG:
+    """Tentpole coverage: ``fuse_cg=True`` on the partitioned path runs the
+    PANEL-FUSED step — one fused launch per streamed row-panel per CG
+    iteration, the four reductions carried across the panel loop — with NO
+    fallback warning and no n×n working set."""
+
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    def test_engine_matches_unfused_no_fallback(self, backend):
+        n = 300
         X, kern = _problem(n)
         op = AddedDiagOperator(
             KernelOperator(
-                kernel=kern, X=X, mode="pallas_partitioned", panel_rows=128
+                kernel=kern, X=X, mode="pallas_partitioned", panel_rows=96,
+                panel_backend=backend,
             ),
             0.5,
         )
         y = jnp.sin(X[:, 0])
-        s = BBMMSettings(num_probes=2, max_cg_iters=30, precond_rank=0)
+        s = BBMMSettings(num_probes=2, max_cg_iters=40, precond_rank=0, cg_tol=1e-6)
+        key = jax.random.PRNGKey(3)
+        ref = engine_state(op, y, key, s)
+        with warnings.catch_warnings():
+            # the fused path is REAL now: any fallback warning fails the test
+            warnings.simplefilter("error")
+            with panel_accounting() as launches:
+                with collect() as reports:
+                    st = engine_state(op, y, key, dataclasses.replace(s, fuse_cg=True))
+        assert reports[-1].status == "CONVERGED", reports[-1].describe()
+        np.testing.assert_allclose(
+            np.asarray(st.solve_y), np.asarray(ref.solve_y), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            float(st.logdet), float(ref.logdet), rtol=1e-4, atol=1e-3
+        )
+        fused = [lau for lau in launches if lau.fused]
+        assert fused, "no fused panel launches recorded"
+        for lau in fused:
+            assert lau.panel_rows < lau.n  # streamed, never full height
+            assert lau.num_panels == -(-lau.n // lau.panel_rows)
+
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    def test_tridiag_matches_unfused(self, backend):
+        """Same α/β Lanczos coefficients as the unfused loop — the logdet
+        estimate rides on these, so they must agree, not just the solves."""
+        from repro.core.mbcg import mbcg
+
+        n = 320
+        X, kern = _problem(n)
+        op = AddedDiagOperator(
+            PartitionedKernelOperator(
+                kernel=kern, X=X, panel_rows=96, backend=backend
+            ),
+            0.5,
+        )
+        step = op.fused_cg_step_fn()
+        assert step is not None, "partitioned operator must advertise a fused step"
+        B = jax.random.normal(jax.random.PRNGKey(1), (n, 3))
+        res_f = mbcg(op.matmul, B, max_iters=10, tol=0.0, fused_step=step)
+        res_u = mbcg(op.matmul, B, max_iters=10, tol=0.0)
+        np.testing.assert_allclose(
+            np.asarray(res_f.solves), np.asarray(res_u.solves), rtol=1e-4, atol=1e-4
+        )
+        np.testing.assert_allclose(
+            np.asarray(res_f.tridiag_alpha), np.asarray(res_u.tridiag_alpha),
+            rtol=1e-4, atol=1e-5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(res_f.tridiag_beta), np.asarray(res_u.tridiag_beta),
+            rtol=1e-4, atol=1e-5,
+        )
+
+    def test_one_launch_per_panel_no_dense_aval(self):
+        """The perf contract, asserted on the jaxpr: ONE pallas launch per
+        row-panel per CG iteration (the scan-rolled panel loop counts once
+        per trip), and no (n, n) intermediate anywhere."""
+        from benchmarks.fused import count_pallas_launches
+
+        n, p, t = 300, 96, 3
+        X, kern = _problem(n)
+        op = AddedDiagOperator(
+            PartitionedKernelOperator(kernel=kern, X=X, panel_rows=p, backend="pallas"),
+            0.5,
+        )
+        step = op.fused_cg_step_fn()
+        B = jax.random.normal(jax.random.PRNGKey(1), (n, t))
+        z = jnp.zeros((t,))
+        jaxpr = jax.make_jaxpr(lambda s: step(*s))((B, B, B, B, z, z, jnp.ones((t,))))
+        num_panels = -(-n // p)
+        assert count_pallas_launches(jaxpr) == num_panels
+
+        def all_avals(j):
+            j = getattr(j, "jaxpr", j)
+            for eqn in j.eqns:
+                for v in eqn.outvars:
+                    yield v.aval
+                for param in eqn.params.values():
+                    leaves = param if isinstance(param, (list, tuple)) else [param]
+                    for leaf in leaves:
+                        if hasattr(leaf, "eqns") or hasattr(leaf, "jaxpr"):
+                            yield from all_avals(leaf)
+
+        assert not any(
+            getattr(a, "shape", ()) == (n, n) for a in all_avals(jaxpr)
+        ), "panel-fused step materialized an n×n intermediate"
+
+    def test_batched_sigma2_declines_with_one_warning(self):
+        """Satellite: the unfused fallback warns once per operator, not once
+        per solve — repeated step-fn requests on the same operator are
+        silent."""
+        n = 160
+        X, kern = _problem(n)
+        op = AddedDiagOperator(
+            KernelOperator(
+                kernel=kern, X=X, mode="pallas_partitioned", panel_rows=64
+            ),
+            jnp.full((3,), 0.5),
+        )
+        with pytest.warns(UserWarning, match="unfused"):
+            assert op.fused_cg_step_fn() is None
         with warnings.catch_warnings(record=True) as w:
             warnings.simplefilter("always")
-            x_fused = solve(op, y, dataclasses.replace(s, fuse_cg=True))
-        assert any(
-            "partitioned" in str(x.message) and "fall" in str(x.message).lower()
-            for x in w
-        ), [str(x.message) for x in w]
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore")
-            x_unfused = solve(op, y, s)
-        np.testing.assert_array_equal(np.asarray(x_fused), np.asarray(x_unfused))
+            assert op.fused_cg_step_fn() is None  # same operator: no re-warn
+        assert not w, [str(x.message) for x in w]
+        # a genuinely new operator (fresh arrays) warns afresh
+        X2, kern2 = _problem(n, seed=7)
+        op2 = AddedDiagOperator(
+            KernelOperator(
+                kernel=kern2, X=X2, mode="pallas_partitioned", panel_rows=64
+            ),
+            jnp.full((3,), 0.5),
+        )
+        with pytest.warns(UserWarning, match="unfused"):
+            assert op2.fused_cg_step_fn() is None
+
+
+class TestShardedFused:
+    """Panel-fused CG across 8 forced CPU devices: bitwise 1-vs-N solves
+    (deterministic ordered reduction fold) and the band-sharded custom-VJP
+    backward (gradient-pass panels re-streamed on all devices; also the fix
+    that makes pallas-backend sharded matmuls differentiable at all)."""
+
+    def test_fused_engine_bitwise_1_vs_8_devices(self):
+        """The full fused engine batch (y + probes, t=3): solves AND logdet
+        bitwise across 1 vs 8 devices on both backends.  t >= 2 matters: at
+        t=1 XLA-CPU lowers the per-panel (p × n)·(n × 1) product as a GEMV
+        whose in-context vectorization differs between the single-device
+        scan body and the shard_map body, so single-RHS fused solves are
+        only near-bitwise — the engine never runs t=1 (probes ride along)."""
+        body = """
+        import warnings
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import (AddedDiagOperator, BBMMSettings,
+                                PartitionedKernelOperator, collect, engine_state)
+        from repro.gp import RBFKernel
+
+        assert jax.device_count() == 8
+        n = 768  # 96-row band per device == panel_rows: one panel per device
+        X = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+        kern = RBFKernel(lengthscale=jnp.float32(0.7), outputscale=jnp.float32(1.3))
+        y = jnp.sin(X[:, 0])
+        key = jax.random.PRNGKey(5)
+        s = BBMMSettings(num_probes=2, max_cg_iters=25, precond_rank=0,
+                         cg_tol=1e-4, fuse_cg=True)
+        mesh = jax.make_mesh((8,), ("data",))
+        for backend in ("xla", "pallas"):
+            single = AddedDiagOperator(PartitionedKernelOperator(
+                kernel=kern, X=X, panel_rows=96, backend=backend,
+                data_axes=()), 0.5)
+            sharded = AddedDiagOperator(PartitionedKernelOperator(
+                kernel=kern, X=X, panel_rows=96, backend=backend,
+                mesh=mesh), 0.5)
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                with collect() as r1:
+                    st1 = engine_state(single, y, key, s)
+                with collect() as r8:
+                    st8 = engine_state(sharded, y, key, s)
+            assert r1[-1].status == r8[-1].status, (backend, r1[-1], r8[-1])
+            assert np.array_equal(np.asarray(st1.solve_y),
+                                  np.asarray(st8.solve_y)), (
+                backend, float(jnp.max(jnp.abs(st1.solve_y - st8.solve_y))))
+            assert float(st1.logdet) == float(st8.logdet), (
+                backend, float(st1.logdet), float(st8.logdet))
+        print("OK")
+        """
+        TestSharded._run(body)
+
+    def test_band_sharded_backward_grads(self):
+        body = """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import BBMMSettings, PartitionedKernelOperator
+        from repro.gp import ExactGP, KernelOperator, RBFKernel
+
+        assert jax.device_count() == 8
+        n = 512
+        X = jax.random.normal(jax.random.PRNGKey(0), (n, 4))
+        M = jax.random.normal(jax.random.PRNGKey(1), (n, 2))
+        mesh = jax.make_mesh((8,), ("data",))
+
+        def loss(ell, backend, use_mesh):
+            kern = RBFKernel(lengthscale=ell, outputscale=jnp.float32(1.3))
+            kw = dict(mesh=mesh) if use_mesh else dict(data_axes=())
+            op = PartitionedKernelOperator(
+                kernel=kern, X=X, panel_rows=64, backend=backend, **kw)
+            return jnp.sum(op.matmul(M) ** 2)
+
+        def loss_dense(ell):
+            kern = RBFKernel(lengthscale=ell, outputscale=jnp.float32(1.3))
+            return jnp.sum(
+                KernelOperator(kernel=kern, X=X, mode="dense").matmul(M) ** 2)
+
+        g_ref = jax.grad(loss_dense)(jnp.float32(0.7))
+        for backend in ("xla", "pallas"):
+            g8 = jax.grad(loss)(jnp.float32(0.7), backend, True)
+            g1 = jax.grad(loss)(jnp.float32(0.7), backend, False)
+            np.testing.assert_allclose(float(g8), float(g_ref), rtol=1e-4)
+            np.testing.assert_allclose(float(g8), float(g1), rtol=1e-5)
+
+        # RHS cotangent through the sharded custom VJP
+        kern = RBFKernel(lengthscale=jnp.float32(0.7), outputscale=jnp.float32(1.3))
+        op8 = PartitionedKernelOperator(kernel=kern, X=X, panel_rows=64,
+                                        backend="xla", mesh=mesh)
+        dense = KernelOperator(kernel=kern, X=X, mode="dense")
+        gM8 = jax.grad(lambda m: jnp.sum(op8.matmul(m) ** 2))(M)
+        gMd = jax.grad(lambda m: jnp.sum(dense.matmul(m) ** 2))(M)
+        np.testing.assert_allclose(np.asarray(gM8), np.asarray(gMd),
+                                   rtol=1e-4, atol=1e-4)
+
+        # MLL grads through the band-sharded backward (ambient mesh),
+        # unfused and panel-fused solves
+        y = jnp.sin(X[:, 0])
+        key = jax.random.PRNGKey(2)
+        s = BBMMSettings(num_probes=2, max_cg_iters=25, precond_rank=0,
+                         panel_rows=64)
+        gp = ExactGP(mode="pallas_partitioned", settings=s)
+        gp_f = ExactGP(mode="pallas_partitioned",
+                       settings=dataclasses.replace(s, fuse_cg=True))
+        params = gp.init_params(X)
+        lp1, g1 = jax.value_and_grad(gp.loss)(params, X, y, key)
+        with mesh:
+            lp8, g8 = jax.value_and_grad(gp.loss)(params, X, y, key)
+            lpf, gf = jax.value_and_grad(gp_f.loss)(params, X, y, key)
+        np.testing.assert_allclose(float(lp8), float(lp1), rtol=1e-4)
+        np.testing.assert_allclose(float(lpf), float(lp1), rtol=1e-3)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(g8[k]), np.asarray(g1[k]),
+                                       rtol=2e-3, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(gf[k]), np.asarray(g1[k]),
+                                       rtol=5e-3, atol=5e-4)
+        print("OK")
+        """
+        TestSharded._run(body)
 
 
 class TestDenseDirectRouting:
@@ -462,6 +724,68 @@ class TestPanelFaultInjection:
             ref = solve(clean, y, s)
         # the healed solve ran on a later rung (extended CG budget), so it
         # agrees with the clean initial-rung solve only to CG tolerance
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(ref), rtol=1e-2, atol=5e-3
+        )
+        assert sched.injected, "no fault was actually delivered"
+
+    def test_fused_fault_confined_to_panel(self):
+        """Chaos on the PANEL-FUSED step: poisoning one panel mid-iteration
+        hits only that panel's rows of V — the other bands' state stays
+        finite — while the carried (4, t) reductions go NaN (that is the
+        signal the ladder sees)."""
+        n = 256
+        X, kern = _problem(n)
+        sched = FaultSchedule(nan_calls={0}, panel=(64, 64))
+        op = self._op(n, X, kern, sched)
+        step = op.fused_cg_step_fn()
+        assert step is not None, "fault wrapper must forward the fused step"
+        t = 2
+        B = jax.random.normal(jax.random.PRNGKey(1), (n, t))
+        z = jnp.zeros((t,))
+        Un, Rn, Dn, Vn, red = step(B, B, B, B, z, z, jnp.ones((t,)))
+        V = np.asarray(Vn)
+        assert np.isnan(V[64:128]).all()
+        assert np.isfinite(V[:64]).all() and np.isfinite(V[128:]).all(), (
+            "fused fault leaked outside its panel"
+        )
+        for arr in (Un, Rn, Dn):
+            assert np.isfinite(np.asarray(arr)).all()
+        assert all(np.isnan(np.asarray(r)).all() for r in red), (
+            "carried reductions must carry the poison to the α/β recurrence"
+        )
+        assert sched.injected
+
+    def test_ladder_heals_fused_panel_fault(self):
+        """A transient NaN inside the fused panel loop ends the fused attempt
+        unhealthy; the PR 6 ladder retries (the unfused rung drops fuse_cg)
+        and heals to the clean answer."""
+        n = 256
+        X, kern = _problem(n)
+        sched = FaultSchedule(nan_calls={0, 1}, panel=(64, 64))
+        op = self._op(n, X, kern, sched)
+        y = jnp.sin(X[:, 0])
+        s = BBMMSettings(
+            num_probes=2, max_cg_iters=40, precond_rank=0, cg_tol=1e-3,
+            on_failure="degrade", fuse_cg=True,
+        )
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            with collect() as reports:
+                x = solve(op, y, s)
+        rep = reports[-1]
+        assert rep.status == "CONVERGED", rep.describe()
+        assert any(r.rung != "initial" for r in rep.rungs), rep.rungs
+        assert any("healed" in str(x.message) for x in w)
+        clean = AddedDiagOperator(
+            KernelOperator(
+                kernel=kern, X=X, mode="pallas_partitioned", panel_rows=64
+            ),
+            0.5,
+        )
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ref = solve(clean, y, dataclasses.replace(s, fuse_cg=False))
         np.testing.assert_allclose(
             np.asarray(x), np.asarray(ref), rtol=1e-2, atol=5e-3
         )

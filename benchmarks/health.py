@@ -2,12 +2,18 @@
 and what serving looks like when everything is (the robustness ISSUE's
 acceptance rows).
 
-Two row families, written into BENCH_speed.json:
+Three row families, written into BENCH_speed.json:
 
   * **health_overhead** — the same eager CONVERGED solve timed with the
     classification live vs monkeypatched to a no-op.  Classification runs
     device-side reductions and moves only scalars to host, so the
     acceptance target is overhead ~= 0 relative to the solve itself;
+  * **obs_overhead** — the same solve timed with the telemetry seams live
+    (mbcg wrapper, ladder timing, registry emit hooks) but NO sink
+    installed, vs the seams monkeypatched out entirely.  The null-sink
+    discipline's acceptance target: ``obs_overhead_frac`` within noise
+    (<=2%).  A second timing with a registry + trace INSTALLED rides along
+    as ``obs_enabled_overhead_frac`` — the price of actually watching;
   * **serve_chaos** — p50/p99 query latency and error rate of the
     threaded ``--chaos`` drill (NaN injection -> ladder escalation ->
     outage -> breaker -> recovery), next to a fault-free threaded run of
@@ -18,7 +24,10 @@ Two row families, written into BENCH_speed.json:
 import jax
 import jax.numpy as jnp
 
+import repro.core.health as health_mod
 import repro.core.inference as inference_mod
+from repro import obs
+from repro.core.mbcg import _mbcg_jit
 from repro.core import AddedDiagOperator, BBMMSettings, DenseOperator, solve
 from repro.launch.gp_serve import run_serve_chaos, run_serve_threaded
 
@@ -55,11 +64,53 @@ def _overhead_row(n, settings):
     }
 
 
+def _obs_overhead_row(n, settings):
+    """Cost of the telemetry seams with no sink installed (target: noise).
+
+    Baseline = the same solve with the seams bypassed: the public ``mbcg``
+    wrapper replaced by the jitted body it guards, and the report-to-
+    registry emitter no-op'd.  ``obs_enabled_*`` additionally times the
+    solve with a registry AND a trace collector installed (host scalar
+    reads + span bookkeeping per solve) for honesty about the watched
+    path."""
+    assert obs.active() is None, "obs_overhead_row must run with no sink"
+    A, b = _system(jax.random.PRNGKey(0), n)
+    op = AddedDiagOperator(DenseOperator(A), jnp.float32(0.1))
+    t_seamed = timeit(lambda: solve(op, b, settings), iters=5)
+    orig_mbcg, orig_emit = inference_mod.mbcg, health_mod._obs_emit
+    inference_mod.mbcg = _mbcg_jit  # seams out
+    health_mod._obs_emit = lambda report: None
+    try:
+        t_bare = timeit(lambda: solve(op, b, settings), iters=5)
+    finally:
+        inference_mod.mbcg = orig_mbcg
+        health_mod._obs_emit = orig_emit
+    with obs.installed(), obs.trace():
+        t_enabled = timeit(lambda: solve(op, b, settings), iters=5)
+    overhead = t_seamed - t_bare
+    frac = overhead / t_bare if t_bare > 0 else 0.0
+    frac_enabled = (t_enabled - t_bare) / t_bare if t_bare > 0 else 0.0
+    emit(f"obs_overhead_n{n}", overhead,
+         f"seamed {t_seamed*1e3:.2f}ms bare {t_bare*1e3:.2f}ms "
+         f"({frac*100:+.1f}%; installed {frac_enabled*100:+.1f}%)")
+    return {
+        "model": "obs_overhead",
+        "n": n,
+        "solve_seamed_s": t_seamed,
+        "solve_bare_s": t_bare,
+        "solve_obs_enabled_s": t_enabled,
+        "obs_overhead_s": overhead,
+        "obs_overhead_frac": frac,
+        "obs_enabled_overhead_frac": frac_enabled,
+    }
+
+
 def run(fast=False):
     rows = []
     settings = BBMMSettings(num_probes=8, max_cg_iters=40, cg_tol=1e-4)
     for n in ((256,) if fast else (256, 1024)):
         rows.append(_overhead_row(n, settings))
+        rows.append(_obs_overhead_row(n, settings))
 
     # fault-free threaded baseline at the drill's shape, then the drill
     n, batch, rpp = (48, 8, 3) if fast else (128, 32, 6)

@@ -36,6 +36,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 # --- taxonomy -------------------------------------------------------------
 
 CONVERGED = "CONVERGED"
@@ -68,6 +70,7 @@ class RungRecord:
     residual_norm: Optional[float] = None
     num_iters: Optional[int] = None
     error: Optional[str] = None  # repr of the exception if the rung raised
+    duration_s: Optional[float] = None  # wall time of this attempt (host-timed)
 
 
 @dataclass(frozen=True)
@@ -94,8 +97,18 @@ class SolveReport:
         """True when the answer came from any rung past the initial solve."""
         return len(self.rungs) > 1
 
+    @property
+    def duration_s(self) -> Optional[float]:
+        """Total wall time across stamped rung attempts; None if unstamped."""
+        stamped = [r.duration_s for r in self.rungs if r.duration_s is not None]
+        return sum(stamped) if stamped else None
+
     def describe(self) -> str:
-        path = " -> ".join(f"{r.rung}:{r.status or 'error'}" for r in self.rungs)
+        path = " -> ".join(
+            f"{r.rung}:{r.status or 'error'}"
+            + (f"({r.duration_s * 1e3:.1f}ms)" if r.duration_s is not None else "")
+            for r in self.rungs
+        )
         return (
             f"{self.context}: {self.status} "
             f"(res {self.residual_norm:.3e} vs tol {self.tol:.3e}, "
@@ -236,10 +249,31 @@ def collect(into: Optional[list] = None):
 
 
 def record(report: Optional[SolveReport]) -> Optional[SolveReport]:
-    """Deliver a report to the innermost collect() on this thread, if any."""
+    """Deliver a report to the innermost collect() on this thread, if any.
+
+    Also the single metrics seam for solve outcomes: every final report —
+    and only final reports — passes through here, so the obs registry sees
+    exactly one ``solves_total`` increment per engine solve with the full
+    rung trail attached."""
     if report is None:
         return None
+    if obs.active() is not None:
+        _obs_emit(report)
     stack = getattr(_sink, "stack", None)
     if stack:
         stack[-1].append(report)
     return report
+
+
+def _obs_emit(report: SolveReport) -> None:
+    """Translate one SolveReport into registry updates (sink installed)."""
+    obs.inc("solves_total", status=report.status, context=report.context)
+    if report.degraded:
+        obs.inc("solves_degraded_total", context=report.context)
+    for r in report.rungs:
+        obs.inc("ladder_rungs_total", rung=r.rung, status=r.status or "error")
+        if r.duration_s is not None:
+            obs.observe("ladder_rung_seconds", r.duration_s, rung=r.rung)
+    dur = report.duration_s
+    if dur is not None:
+        obs.observe("solve_seconds", dur, context=report.context)

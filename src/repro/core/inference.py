@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 import warnings
 from functools import partial
 from typing import Any, NamedTuple
@@ -44,6 +45,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from . import health
 from .health import (
@@ -269,15 +272,26 @@ def _apply_policy(report, settings: BBMMSettings, context: str):
     return report
 
 
+def _stamp_last_rung(report, duration_s: float):
+    """Attach wall time to the most recent rung attempt of a report."""
+    if report is None or not report.rungs:
+        return report
+    rungs = list(report.rungs)
+    rungs[-1] = dataclasses.replace(rungs[-1], duration_s=duration_s)
+    return dataclasses.replace(report, rungs=tuple(rungs))
+
+
 def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
     """Execute ``run(settings) -> (value, report|None)`` under the
     ``on_failure`` policy, walking the degradation ladder when asked.
 
     Every rung attempt — healed, still-unhealthy, or errored (e.g. a
     preconditioner the operator cannot build) — lands in
-    ``SolveReport.rungs``, so degradation is observable, never silent.
-    ``dense_fn() -> (value, RungRecord)`` is the terminal rung, engaged
-    only for ``n <= settings.dense_fallback_max_n``.
+    ``SolveReport.rungs``, stamped with its wall time, so degradation is
+    observable, never silent.  ``dense_fn() -> (value, RungRecord)`` is the
+    terminal rung, engaged only for ``n <= settings.dense_fallback_max_n``.
+    When a trace is active the whole walk is a ``"solve"`` span with one
+    ``"rung:<name>"`` child per attempt.
 
     ``dense_direct_max_n`` short-circuits the whole machinery for tiny
     systems: below the threshold the dense Cholesky IS the fast path (BENCH
@@ -285,12 +299,23 @@ def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
     as a "dense_direct" rung in the health report — and the iterative
     engine is only consulted if the direct solve comes back unhealthy.
     """
+    with obs.span("solve", context=context, n=n):
+        return _ladder_walk(
+            run, settings, context=context, n=n, dense_fn=dense_fn
+        )
+
+
+def _ladder_walk(run, settings: BBMMSettings, *, context, n, dense_fn=None):
     if (
         dense_fn is not None
         and 0 < n <= settings.dense_direct_max_n
     ):
-        value, rec = dense_fn()
-        rec = dataclasses.replace(rec, rung="dense_direct")
+        t_dd = time.perf_counter()
+        with obs.span("rung:dense_direct", context=context):
+            value, rec = dense_fn()
+        rec = dataclasses.replace(
+            rec, rung="dense_direct", duration_s=time.perf_counter() - t_dd
+        )
         if rec.status == health.CONVERGED:
             report = SolveReport(
                 status=health.CONVERGED,
@@ -310,23 +335,41 @@ def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
             SolveHealthWarning,
             stacklevel=3,
         )
-    value, report = run(settings)
+    t_init = time.perf_counter()
+    with obs.span("rung:initial", context=context):
+        value, report = run(settings)
     if report is None:
         return value  # tracing: health is checked when the caller is eager
-    report = dataclasses.replace(report, context=context)
+    report = _stamp_last_rung(
+        dataclasses.replace(report, context=context), time.perf_counter() - t_init
+    )
     if report.healthy or settings.on_failure != "degrade":
         _apply_policy(report, settings, context)
         return value
 
     rungs = list(report.rungs)
     for name, s in _escalation_ladder(settings):
+        t_rung = time.perf_counter()
         try:
-            value2, rep2 = run(s)
+            with obs.span(f"rung:{name}", context=context):
+                value2, rep2 = run(s)
         except Exception as e:  # rung structurally unavailable → next rung
-            rungs.append(RungRecord(rung=name, status=None, error=repr(e)))
+            rungs.append(
+                RungRecord(
+                    rung=name,
+                    status=None,
+                    error=repr(e),
+                    duration_s=time.perf_counter() - t_rung,
+                )
+            )
             continue
+        dur_rung = time.perf_counter() - t_rung
         if rep2 is None:  # defensive: a traced rerun cannot be classified
-            rungs.append(RungRecord(rung=name, status=None, error="untraced"))
+            rungs.append(
+                RungRecord(
+                    rung=name, status=None, error="untraced", duration_s=dur_rung
+                )
+            )
             continue
         rungs.append(
             RungRecord(
@@ -334,6 +377,7 @@ def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
                 status=rep2.status,
                 residual_norm=rep2.residual_norm,
                 num_iters=rep2.num_iters,
+                duration_s=dur_rung,
             )
         )
         if rep2.healthy:
@@ -350,13 +394,23 @@ def _run_with_ladder(run, settings: BBMMSettings, *, context, n, dense_fn=None):
         report = dataclasses.replace(rep2, context=context)
 
     if dense_fn is not None and n <= settings.dense_fallback_max_n:
+        t_dense = time.perf_counter()
         try:
-            value3, rec = dense_fn()
+            with obs.span("rung:dense_cholesky", context=context):
+                value3, rec = dense_fn()
         except Exception as e:
             rungs.append(
-                RungRecord(rung="dense_cholesky", status=None, error=repr(e))
+                RungRecord(
+                    rung="dense_cholesky",
+                    status=None,
+                    error=repr(e),
+                    duration_s=time.perf_counter() - t_dense,
+                )
             )
         else:
+            rec = dataclasses.replace(
+                rec, duration_s=time.perf_counter() - t_dense
+            )
             rungs.append(rec)
             if rec.status == health.CONVERGED:
                 final = dataclasses.replace(
@@ -537,10 +591,13 @@ def _engine_forward(
     *,
     context: str = "mll",
 ):
-    state, report = _engine_forward_report(op, y, key, settings)
+    t0 = time.perf_counter()
+    with obs.span("engine_forward", context=context):
+        state, report = _engine_forward_report(op, y, key, settings)
     # check-only here: this is the differentiable-MLL seam, where a retry
     # would desynchronize the custom-VJP residuals — training's recovery
     # policy lives in fit_gp, serving's in the session layer
+    report = _stamp_last_rung(report, time.perf_counter() - t0)
     _apply_policy(report, settings, context)
     return state
 

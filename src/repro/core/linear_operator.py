@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 from .precision import is_reduced, normalize_compute_dtype
 
 
@@ -978,9 +980,46 @@ def panel_accounting(into=None):
 
 
 def _record_panels(launch: PanelLaunch):
+    """Deliver one trace-time PanelLaunch to every installed sink.
+
+    Three sinks, same record: the :func:`panel_accounting` list (tests and
+    the million benchmark), the obs metrics registry (launch / byte
+    counters), and the obs trace (one ``panel_launch`` span per record, so
+    a trace's panel-span count equals ``panel_accounting()``'s list length
+    by construction).  All are no-ops when nothing is installed."""
     sink = getattr(_PANEL_SINK, "launches", None)
     if sink is not None:
         sink.append(launch)
+    if obs.active() is not None:
+        labels = dict(
+            backend=launch.backend,
+            fused=str(launch.fused).lower(),
+            sharded=str(launch.sharded).lower(),
+        )
+        obs.inc("panel_matmuls_traced_total", **labels)
+        obs.inc("panel_launches_traced_total", launch.num_panels, **labels)
+        obs.inc(
+            "panel_bytes_streamed_total",
+            launch.panel_bytes * launch.num_panels,
+            **labels,
+        )
+        obs.set_gauge("panel_rows", launch.panel_rows, backend=launch.backend)
+    if obs.active_trace() is not None:
+        col = obs.active_trace()
+        ts = col.now_us()
+        col.add_complete(
+            "panel_launch",
+            ts,
+            0.0,  # trace-time record: the span marks the launch, not a wall
+            {
+                "n": launch.n,
+                "panel_rows": launch.panel_rows,
+                "num_panels": launch.num_panels,
+                "backend": launch.backend,
+                "fused": launch.fused,
+                "sharded": launch.sharded,
+            },
+        )
 
 
 def _pallas_panel_matmul(

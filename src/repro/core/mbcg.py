@@ -111,11 +111,14 @@ period) apply unchanged.
 
 from __future__ import annotations
 
+import time
 from functools import partial
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import obs
 
 
 class MBCGResult(NamedTuple):
@@ -387,7 +390,7 @@ def _safe_rsqrt(x):
         "fused_step",
     ),
 )
-def mbcg(
+def _mbcg_jit(
     matmul: Callable[[jax.Array], jax.Array],
     B: jax.Array,
     *,
@@ -402,6 +405,9 @@ def mbcg(
     fused_step: CGStepFn | None = None,
 ) -> MBCGResult:
     """Solve K̂⁻¹B for all columns (and all leading batch dims) of B at once.
+
+    This is the jitted body; :func:`mbcg` is the public entry point (same
+    signature) whose only addition is host-side telemetry.
 
     Args:
       matmul: blackbox ``M ↦ K̂ @ M`` for (..., n, t) M (must broadcast over
@@ -678,6 +684,103 @@ def mbcg(
         num_rescues=num_rescues,
         num_curvature_skips=num_curvature_skips,
     )
+
+
+def mbcg(
+    matmul: Callable[[jax.Array], jax.Array],
+    B: jax.Array,
+    *,
+    precond_solve: Callable[[jax.Array], jax.Array] | None = None,
+    max_iters: int = 20,
+    tol: float = 1e-4,
+    return_basis: bool = False,
+    refresh_every: int = 0,
+    refresh_matmul: Callable[[jax.Array], jax.Array] | None = None,
+    refresh_adaptive: bool = False,
+    refresh_max_period: int = 0,
+    fused_step: CGStepFn | None = None,
+) -> MBCGResult:
+    """Solve K̂⁻¹B — the instrumented public entry over :func:`_mbcg_jit`.
+
+    See :func:`_mbcg_jit` for the full argument reference; this wrapper is
+    bit-identical to it and adds only telemetry, under the same
+    device-side-scalars-only discipline as ``health.classify_mbcg``:
+
+    * **no sink installed** (the common case): one module-attribute read
+      and a ``None`` check, then straight into the jitted body — measured
+      as ``obs_overhead_frac`` in ``benchmarks/health.py``;
+    * **metrics registry installed** (eager callers only): after the solve,
+      the device-side scalar telemetry (iterations, refreshes, rescues,
+      curvature skips) is host-read and folded into ``cg_*`` series, plus
+      an amortised per-iteration wall time (first call includes compile);
+    * **trace() active**: the call is wrapped in an ``"mbcg"`` span;
+    * **called under jit/grad** (results are tracers): everything above
+      no-ops, so the traced program — and its jaxpr — is unchanged.
+    """
+    if obs.active() is None and obs.active_trace() is None:
+        return _mbcg_jit(
+            matmul,
+            B,
+            precond_solve=precond_solve,
+            max_iters=max_iters,
+            tol=tol,
+            return_basis=return_basis,
+            refresh_every=refresh_every,
+            refresh_matmul=refresh_matmul,
+            refresh_adaptive=refresh_adaptive,
+            refresh_max_period=refresh_max_period,
+            fused_step=fused_step,
+        )
+    with obs.span("mbcg", fused=fused_step is not None, refresh=bool(refresh_every)):
+        t0 = time.perf_counter()
+        result = _mbcg_jit(
+            matmul,
+            B,
+            precond_solve=precond_solve,
+            max_iters=max_iters,
+            tol=tol,
+            return_basis=return_basis,
+            refresh_every=refresh_every,
+            refresh_matmul=refresh_matmul,
+            refresh_adaptive=refresh_adaptive,
+            refresh_max_period=refresh_max_period,
+            fused_step=fused_step,
+        )
+        _obs_record_mbcg(result, t0, fused=fused_step is not None)
+    return result
+
+
+def _obs_scalar(x) -> int | None:
+    """Worst-column host int from device scalar telemetry; None if tracing."""
+    if x is None or isinstance(x, jax.core.Tracer):
+        return None
+    try:
+        return int(jax.device_get(jnp.max(jnp.asarray(x))))
+    except (TypeError, jax.errors.TracerArrayConversionError):
+        return None
+
+
+def _obs_record_mbcg(result: MBCGResult, t0: float, *, fused: bool) -> None:
+    """Fold one eager mbcg call into the metrics registry (if installed)."""
+    if obs.active() is None:
+        return
+    iters = _obs_scalar(result.num_iters)
+    if iters is None:
+        return  # under an outer jit/grad trace: leave the jaxpr untouched
+    # the device_get above synchronised, so this wall time covers the solve
+    wall = time.perf_counter() - t0
+    mode = "fused" if fused else "plain"
+    obs.inc("cg_solves_total", mode=mode)
+    obs.observe("cg_iterations", iters, mode=mode)
+    obs.observe("cg_iteration_seconds", wall / max(iters, 1), mode=mode)
+    for name, raw in (
+        ("cg_refreshes_total", result.num_refreshes),
+        ("cg_rescues_total", result.num_rescues),
+        ("cg_curvature_skips_total", result.num_curvature_skips),
+    ):
+        count = _obs_scalar(raw)
+        if count:
+            obs.inc(name, count)
 
 
 def tridiag_matrices(result: MBCGResult) -> jax.Array:

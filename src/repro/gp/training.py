@@ -42,12 +42,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 import warnings
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.health import SolveFailure, SolveHealthWarning
 from repro.optim import adam
 
@@ -137,9 +139,10 @@ def fit_gp(
     i = 0
     while i < steps:
         key, sub = jax.random.split(key)
+        t_step = time.perf_counter()
         try:
             params_new, opt_new, loss = step(params, opt, sub)
-            loss_f = float(loss)
+            loss_f = float(loss)  # host sync — the step is done here
         except AssertionError as e:
             if (
                 not pallas_degraded
@@ -164,6 +167,17 @@ def fit_gp(
                 step = make_step(model, data)
                 continue  # retry the SAME step index with the dense model
             raise
+        if obs.active() is not None:
+            # per-step training telemetry for gp_top during long fits
+            mname = type(model).__name__
+            obs.inc("fit_steps_total", model=mname)
+            obs.observe(
+                "fit_step_seconds", time.perf_counter() - t_step, model=mname
+            )
+            if math.isfinite(loss_f):
+                obs.set_gauge("fit_loss", loss_f, model=mname)
+            else:
+                obs.inc("fit_nonfinite_steps_total", model=mname)
         if not math.isfinite(loss_f):
             if policy == "raise":
                 raise SolveFailure(

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.core.precision import as_jnp_dtype, normalize_compute_dtype
 from .kernel_matmul import (
     _FUSED_STATE_SLABS,
@@ -214,18 +215,19 @@ def fused_kernel_matmul(
 ):
     """(K(X,X)+σ²I) @ M via the Pallas kernel (any n — no padding of M)."""
     Xs = prescale_inputs(X, lengthscale, compute_dtype)
-    return fused_kernel_matmul_prescaled(
-        Xs,
-        Xs,
-        M,
-        outputscale,
-        sigma2,
-        kernel_type=kernel_type,
-        bn=bn,
-        bm=bm,
-        interpret=interpret,
-        compute_dtype=compute_dtype,
-    )
+    with obs.annotation("pallas:kernel_matmul"):
+        return fused_kernel_matmul_prescaled(
+            Xs,
+            Xs,
+            M,
+            outputscale,
+            sigma2,
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            interpret=interpret,
+            compute_dtype=compute_dtype,
+        )
 
 
 def _stationary_kernel_type(kernel):
@@ -474,27 +476,28 @@ def fused_cg_step_prescaled(
     state, computes V = K̂·D tile-by-tile and returns the four per-column
     reductions [dᵀV, rᵀr, rᵀV, vᵀV] — ONE kernel launch, no XLA pass over
     the O(n·t) state.  Leading batch dims run on the native batch grid."""
-    return _fused_cg_step_padded(
-        Xs,
-        Xs,
-        U,
-        R,
-        D,
-        V,
-        R,
-        D,
-        V,
-        alpha,
-        beta,
-        gamma,
-        outputscale,
-        sigma2,
-        kernel_type=kernel_type,
-        bn=bn,
-        bm=bm,
-        interpret=interpret,
-        compute_dtype=compute_dtype,
-    )
+    with obs.annotation("pallas:fused_cg_step"):
+        return _fused_cg_step_padded(
+            Xs,
+            Xs,
+            U,
+            R,
+            D,
+            V,
+            R,
+            D,
+            V,
+            alpha,
+            beta,
+            gamma,
+            outputscale,
+            sigma2,
+            kernel_type=kernel_type,
+            bn=bn,
+            bm=bm,
+            interpret=interpret,
+            compute_dtype=compute_dtype,
+        )
 
 
 def _panel_fused_cg_step_bands(
@@ -626,12 +629,13 @@ def panel_fused_cg_step_prescaled(
     the same arrays every panel reads — and the (4, t) reductions are
     carried across the panel loop (see :func:`_panel_fused_cg_step_bands`).
     """
-    return _panel_fused_cg_step_bands(
-        Xs, Xs, U, R, D, V, R, D, V,
-        alpha, beta, gamma, outputscale, sigma2, 0,
-        panel_rows=panel_rows, kernel_type=kernel_type,
-        bn=bn, bm=bm, interpret=interpret, compute_dtype=compute_dtype,
-    )
+    with obs.annotation("pallas:panel_fused_cg_step"):
+        return _panel_fused_cg_step_bands(
+            Xs, Xs, U, R, D, V, R, D, V,
+            alpha, beta, gamma, outputscale, sigma2, 0,
+            panel_rows=panel_rows, kernel_type=kernel_type,
+            bn=bn, bm=bm, interpret=interpret, compute_dtype=compute_dtype,
+        )
 
 
 def sharded_fused_cg_step_prescaled(

@@ -50,6 +50,7 @@ from concurrent.futures import ThreadPoolExecutor
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import (
     AddedDiagOperator,
     BBMMSettings,
@@ -158,8 +159,12 @@ def run_serve(
     num_tasks: int = 2,
     seed: int = 0,
     verbose: bool = True,
+    session_hook=None,
 ) -> dict:
-    """Drive the request loop; return the metric row (also printed)."""
+    """Drive the request loop; return the metric row (also printed).
+
+    ``session_hook(session)`` fires once the session exists — the metrics
+    endpoint uses it to wire ``/health`` to ``session.health_stats()``."""
     key = jax.random.PRNGKey(seed)
     kd, kq, ko = jax.random.split(key, 3)
     T = num_tasks if model == "multitask" else 0
@@ -174,6 +179,8 @@ def run_serve(
 
     t0 = time.perf_counter()
     session = PosteriorSession(gp, params, X, y, max_staleness=max_staleness)
+    if session_hook is not None:
+        session_hook(session)
     jax.block_until_ready(jax.tree_util.tree_leaves(session.cache))
     t_build = time.perf_counter() - t0
 
@@ -258,6 +265,7 @@ def run_serve_threaded(
     threads: int = 4,
     seed: int = 0,
     verbose: bool = True,
+    session_hook=None,
 ) -> dict:
     """Concurrent request driver over the double-buffered session.
 
@@ -279,6 +287,8 @@ def run_serve_threaded(
     else:
         params = gp.init_params(X)
     session = PosteriorSession(gp, params, X, y, max_staleness=max_staleness)
+    if session_hook is not None:
+        session_hook(session)
 
     # warm the query path before opening the floodgates
     jax.block_until_ready(session.query(_query_batch(kq, batch, d, T))[0])
@@ -412,6 +422,7 @@ def run_serve_chaos(
     breaker_reset_s: float = 0.3,
     seed: int = 0,
     verbose: bool = True,
+    session_hook=None,
 ) -> dict:
     """The fault-injection drill: serve through injected faults, assert the
     robustness stack absorbed them.
@@ -450,6 +461,8 @@ def run_serve_chaos(
         breaker_threshold=breaker_threshold,
         breaker_reset_s=breaker_reset_s,
     )
+    if session_hook is not None:
+        session_hook(session)
 
     unhandled: list = []
     handled_failures: list = []
@@ -583,6 +596,15 @@ def run_serve_chaos(
     return metrics
 
 
+def _health_payload(session) -> dict:
+    """/health JSON: the session's health_stats() once one is serving."""
+    if session is None:
+        return {"status": "starting"}
+    stats = session.health_stats()
+    stats["status"] = "serving"
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--model", default="sgpr", choices=list(MODELS))
@@ -613,34 +635,67 @@ def main(argv=None):
                     "phase (seeded; 1.0 = every reduced-precision call)")
     ap.add_argument("--chaos-latency", type=float, default=0.0,
                     help="artificial per-matmul host latency (seconds)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics + /health JSON on this "
+                    "localhost port for the duration of the run (installs "
+                    "the obs metrics registry; 0 = ephemeral port, printed "
+                    "at startup)")
+    ap.add_argument("--metrics-hold", type=float, default=0.0,
+                    help="keep the metrics endpoint up this many seconds "
+                    "after the run completes (lets a CI smoke test scrape a "
+                    "finished drill before the process exits)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
-    if args.chaos:
-        metrics = run_serve_chaos(
-            n=args.n, d=args.d, batch=args.batch,
-            threads=max(args.threads, 2), max_cg_iters=args.max_cg_iters,
-            nan_rate=args.chaos_nan_rate, latency_s=args.chaos_latency,
-            seed=args.seed,
-        )
-        if not metrics["chaos_ok"]:
-            sys.exit(1)
-        return metrics
-    if args.threads > 0:
-        return run_serve_threaded(
+
+    server = None
+    holder: dict = {}
+    hook = None
+    if args.metrics_port is not None:
+        if obs.active() is None:
+            obs.install()
+        server = obs.MetricsServer(
+            port=args.metrics_port,
+            health_fn=lambda: _health_payload(holder.get("session")),
+        ).start()
+        hook = lambda s: holder.__setitem__("session", s)  # noqa: E731
+        print(f"[obs] metrics: {server.url}/metrics  health: {server.url}/health")
+    try:
+        if args.chaos:
+            metrics = run_serve_chaos(
+                n=args.n, d=args.d, batch=args.batch,
+                threads=max(args.threads, 2), max_cg_iters=args.max_cg_iters,
+                nan_rate=args.chaos_nan_rate, latency_s=args.chaos_latency,
+                seed=args.seed, session_hook=hook,
+            )
+            if not metrics["chaos_ok"]:
+                sys.exit(1)
+            return metrics
+        if args.threads > 0:
+            return run_serve_threaded(
+                model=args.model, n=args.n, d=args.d, requests=args.requests,
+                batch=args.batch, observe_every=args.observe_every,
+                observe_batch=args.observe_batch, max_staleness=args.max_staleness,
+                fit_steps=args.fit_steps, max_cg_iters=args.max_cg_iters,
+                precision=args.precision, num_tasks=args.num_tasks,
+                threads=args.threads, seed=args.seed, session_hook=hook,
+            )
+        return run_serve(
             model=args.model, n=args.n, d=args.d, requests=args.requests,
             batch=args.batch, observe_every=args.observe_every,
             observe_batch=args.observe_batch, max_staleness=args.max_staleness,
             fit_steps=args.fit_steps, max_cg_iters=args.max_cg_iters,
-            precision=args.precision, num_tasks=args.num_tasks,
-            threads=args.threads, seed=args.seed,
+            precision=args.precision, num_tasks=args.num_tasks, seed=args.seed,
+            session_hook=hook,
         )
-    return run_serve(
-        model=args.model, n=args.n, d=args.d, requests=args.requests,
-        batch=args.batch, observe_every=args.observe_every,
-        observe_batch=args.observe_batch, max_staleness=args.max_staleness,
-        fit_steps=args.fit_steps, max_cg_iters=args.max_cg_iters,
-        precision=args.precision, num_tasks=args.num_tasks, seed=args.seed,
-    )
+    finally:
+        if server is not None:
+            if args.metrics_hold > 0:
+                print(
+                    f"[obs] holding {server.url} for {args.metrics_hold:.0f}s "
+                    "(scrape window)"
+                )
+                time.sleep(args.metrics_hold)
+            server.stop()
 
 
 if __name__ == "__main__":

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import health
 from repro.gp.model import missing_protocol_methods, supports_streaming
 
@@ -99,15 +100,25 @@ class CircuitBreaker:
       * ``half_open`` — the cool-down elapsed; ONE trial rebuild is
         admitted — success re-closes, failure re-opens.
 
-    ``transitions`` records every (from, to, t) edge — the assertion
-    surface for deterministic breaker tests.
+    ``transitions`` records the most recent (from, to, t) edges — the
+    assertion surface for deterministic breaker tests.  It is a ring buffer
+    (``transition_history`` entries) so a long-lived session cannot grow it
+    unboundedly; ``transitions_total`` counts every edge ever taken (also
+    exported as the ``breaker_transitions_total`` registry counter).
     """
 
     CLOSED = "closed"
     OPEN = "open"
     HALF_OPEN = "half_open"
 
-    def __init__(self, threshold: int = 3, reset_after_s: float = 30.0, *, clock=time.monotonic):
+    def __init__(
+        self,
+        threshold: int = 3,
+        reset_after_s: float = 30.0,
+        *,
+        clock=time.monotonic,
+        transition_history: int = 64,
+    ):
         self.threshold = int(threshold)
         self.reset_after_s = float(reset_after_s)
         self._clock = clock
@@ -115,11 +126,17 @@ class CircuitBreaker:
         self.state = self.CLOSED
         self.failures = 0
         self._opened_at: float | None = None
-        self.transitions: list = []
+        self.transitions: deque = deque(maxlen=int(transition_history))
+        self.transitions_total = 0
 
     def _set(self, state: str) -> None:
         if state != self.state:
             self.transitions.append((self.state, state, self._clock()))
+            self.transitions_total += 1
+            obs.inc(
+                "breaker_transitions_total",
+                **{"from": self.state, "to": state},
+            )
             self.state = state
 
     def allow(self) -> bool:
@@ -302,11 +319,12 @@ class PosteriorSession:
         yet): a mutation that landed mid-build must not be clobbered by the
         now-stale buffer.  Returns the swapped CacheInfo, or None when the
         buffer was discarded."""
-        with health.collect() as reports:
+        with health.collect() as reports, obs.span("serving:cache_build"):
             cache = self.model.posterior_cache(params, data, y)
         with self._lock:
             self.health_reports.extend(reports)
             if self._state_fp != fp and self._cache is not None:
+                obs.inc("cache_swap_discards_total", kind="build")
                 return None  # state moved on mid-build: discard buffer
             self._version += 1
             self._cache = cache
@@ -315,6 +333,7 @@ class PosteriorSession:
                 version=self._version, fingerprint=fp,
                 n=int(y.shape[0]), staleness=0,
             )
+            obs.inc("cache_swaps_total", kind="build")
             return self._info
 
     def rebuild(self) -> CacheInfo:
@@ -355,6 +374,7 @@ class PosteriorSession:
         self.breaker.record_failure()
         with self._lock:
             self.rebuild_failures += 1
+        obs.inc("rebuild_failures_total")
         raise last_err
 
     def refresh_if_stale(self) -> bool:
@@ -420,6 +440,20 @@ class PosteriorSession:
         like ``rebuild_async`` (a mutation racing in mid-update leaves the
         session stale rather than clobbered — the next query rebuilds).
         """
+        if obs.active() is None and obs.active_trace() is None:
+            return self._observe_impl(X_new, y_new)
+        t0 = time.perf_counter()
+        with obs.span("serving:observe"):
+            try:
+                path = self._observe_impl(X_new, y_new)
+            except Exception:
+                obs.inc("serving_observes_total", path="error")
+                raise
+        obs.inc("serving_observes_total", path=path)
+        obs.observe("serving_observe_seconds", time.perf_counter() - t0, path=path)
+        return path
+
+    def _observe_impl(self, X_new, y_new) -> str:
         X_new = jnp.atleast_2d(jnp.asarray(X_new))
         y_new = jnp.atleast_1d(jnp.asarray(y_new))
         if X_new.shape[0] != y_new.shape[0]:
@@ -467,6 +501,7 @@ class PosteriorSession:
                 self.breaker.record_failure()
                 with self._lock:
                     self.rebuild_failures += 1
+                obs.inc("rebuild_failures_total")
                 raise
             with self._lock:
                 self.health_reports.extend(reports)
@@ -481,6 +516,9 @@ class PosteriorSession:
                         version=self._version, fingerprint=fp,
                         n=int(y_full.shape[0]), staleness=staleness + 1,
                     )
+                    obs.inc("cache_swaps_total", kind="append")
+                else:
+                    obs.inc("cache_swap_discards_total", kind="append")
         finally:
             with self._lock:
                 self._appends_in_flight -= 1
@@ -507,6 +545,7 @@ class PosteriorSession:
             if self._serving is None:
                 return None
             self.degraded_queries += 1
+            obs.inc("serving_degraded_total")
             if self._info is not None and not self._info.degraded:
                 self._info = dataclasses.replace(self._info, degraded=True)
             return self._serving
@@ -533,6 +572,25 @@ class PosteriorSession:
         long admission may wait on another worker's in-flight rebuild
         (:class:`QueryDeadlineExceeded` when nothing is servable in time).
         """
+        if obs.active() is None and obs.active_trace() is None:
+            return self._query_impl(Xstar, **kwargs)
+        t0 = time.perf_counter()
+        d0 = self.degraded_queries
+        with obs.span("serving:query"):
+            try:
+                out = self._query_impl(Xstar, **kwargs)
+            except Exception:
+                obs.inc("serving_queries_total", result="error")
+                raise
+        # per-call degradation inferred from the counter delta — exact
+        # single-threaded; under contention a neighbour's degraded serve can
+        # only OVER-count "degraded", never hide one
+        result = "degraded" if self.degraded_queries > d0 else "ok"
+        obs.inc("serving_queries_total", result=result)
+        obs.observe("serving_query_seconds", time.perf_counter() - t0, result=result)
+        return out
+
+    def _query_impl(self, Xstar, **kwargs):
         deadline = (
             None
             if self.query_deadline_s is None
@@ -586,15 +644,24 @@ class PosteriorSession:
         )
 
     def health_stats(self) -> dict:
-        """Operational counters + solve-health tallies for dashboards/tests."""
+        """Operational counters + solve-health tallies for dashboards/tests.
+
+        This is the structured-health-export surface (ROADMAP robustness
+        frontier (d)): ``gp_serve --metrics-port`` serves it verbatim as
+        ``/health`` JSON, and when a metrics registry is installed the same
+        events also stream into label-keyed ``serving_*`` / ``cache_*`` /
+        ``breaker_*`` series on ``/metrics`` — the dict view is the
+        point-in-time summary, the registry view the scrapeable history
+        (its serving-relevant families ride along under ``"registry"``)."""
         with self._lock:
             by_status: dict = {}
             for r in self.health_reports:
                 by_status[r.status] = by_status.get(r.status, 0) + 1
-            return {
+            stats = {
                 "breaker_state": self.breaker.state,
                 "breaker_failures": self.breaker.failures,
                 "breaker_transitions": list(self.breaker.transitions),
+                "breaker_transitions_total": self.breaker.transitions_total,
                 "degraded_queries": self.degraded_queries,
                 "rebuild_failures": self.rebuild_failures,
                 "reports_by_status": by_status,
@@ -602,3 +669,12 @@ class PosteriorSession:
                     1 for r in self.health_reports if r.degraded
                 ),
             }
+        reg = obs.active()
+        if reg is not None:
+            snap = reg.snapshot()
+            stats["registry"] = {
+                name: fam
+                for name, fam in snap.items()
+                if name.startswith(("serving_", "cache_", "breaker_", "solves_"))
+            }
+        return stats

@@ -1,0 +1,544 @@
+"""BBMM telemetry: metrics registry, trace spans, exposition surface
+(the observability ISSUE).
+
+Covers the acceptance criteria:
+  * registry label/threading semantics and fixed log-bucket histogram
+    edges, including the Prometheus text round-trip ``gp_top`` relies on;
+  * the null-sink discipline — with no sink installed the seams write
+    nothing, and with sinks installed the jitted program (jaxpr) of an
+    mbcg solve is UNCHANGED and the results stay bitwise identical;
+  * a ladder-healed solve produces a well-formed Chrome trace (Perfetto
+    event schema) with ``rung:*`` spans nested inside the ``solve`` span,
+    duration-stamped :class:`RungRecord`\\ s, and the matching
+    ``ladder_rungs_total`` / ``solves_degraded_total`` series;
+  * a traced n=20 000 partitioned solve emits exactly one
+    ``panel_launch`` span per :func:`panel_accounting` record;
+  * the ``/metrics`` + ``/health`` HTTP surface round-trips through the
+    threaded ``--chaos`` drill: ≥1 precision escalation, ≥1 degraded
+    query and query-latency histograms are visible to a scraper;
+  * the :class:`CircuitBreaker` transition ring buffer + counter.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import (
+    AddedDiagOperator,
+    BBMMSettings,
+    DenseOperator,
+    FaultInjectingOperator,
+    FaultSchedule,
+    PartitionedKernelOperator,
+    SolveHealthWarning,
+    collect,
+    panel_accounting,
+    solve,
+)
+from repro.core.mbcg import mbcg
+from repro.gp import RBFKernel
+from repro.launch import gp_top
+from repro.launch.gp_serve import _health_payload, run_serve_chaos
+from repro.serving import CircuitBreaker
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.obs
+
+N = 48
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_sinks():
+    """Every test starts AND ends with the null sink installed."""
+    assert obs.active() is None, "a previous test leaked a registry"
+    assert obs.active_trace() is None, "a previous test leaked a trace"
+    yield
+    obs.uninstall()
+
+
+@pytest.fixture(scope="module")
+def system():
+    key = jax.random.PRNGKey(0)
+    Q = jax.random.normal(key, (N, N)) / jnp.sqrt(N)
+    A = Q @ Q.T
+    b = jax.random.normal(jax.random.fold_in(key, 1), (N,))
+    return A, b
+
+
+def clean_op(A, sigma2=0.1):
+    return AddedDiagOperator(DenseOperator(A), jnp.float32(sigma2))
+
+
+#: settings + schedule that heal through exactly initial -> precision_f32
+HEAL = BBMMSettings(
+    num_probes=4, max_cg_iters=60, cg_tol=1e-4, precond_rank=0,
+    precision="mixed", on_failure="degrade",
+)
+
+
+def healed_solve(A, b):
+    """Run the canonical reduced-precision-NaN heal; return (report, x)."""
+    op = AddedDiagOperator(
+        FaultInjectingOperator(
+            DenseOperator(A),
+            schedule=FaultSchedule(0, nan_rate=1.0, reduced_only=True),
+        ),
+        jnp.float32(0.1),
+    )
+    with collect() as reports:
+        with pytest.warns(SolveHealthWarning, match="degraded but healed"):
+            x = solve(op, b, HEAL)
+    return reports[-1], x
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    def test_counter_labels_canonical(self):
+        reg = obs.MetricsRegistry()
+        reg.inc("q_total", result="ok", ctx="a")
+        reg.inc("q_total", 2.0, ctx="a", result="ok")  # kwarg order irrelevant
+        reg.inc("q_total", result="err", ctx="a")
+        assert reg.get("q_total", result="ok", ctx="a") == 3.0
+        assert reg.get("q_total", ctx="a", result="err") == 1.0
+        assert reg.get("q_total", result="missing") is None
+        assert reg.sum("q_total") == 4.0
+
+    def test_counter_rejects_decrease(self):
+        reg = obs.MetricsRegistry()
+        with pytest.raises(ValueError, match="cannot decrease"):
+            reg.inc("c", -1.0)
+
+    def test_one_name_one_kind(self):
+        reg = obs.MetricsRegistry()
+        reg.inc("x")
+        with pytest.raises(ValueError, match="one name, one kind"):
+            reg.observe("x", 1.0)
+
+    def test_gauge_overwrites(self):
+        reg = obs.MetricsRegistry()
+        reg.set_gauge("rows", 128, backend="xla")
+        reg.set_gauge("rows", 256, backend="xla")
+        assert reg.get("rows", backend="xla") == 256.0
+
+    def test_histogram_bucket_edges_le_inclusive(self):
+        reg = obs.MetricsRegistry()
+        edges = (1.0, 10.0, 100.0)
+        for v in (0.5, 1.0, 5.0, 1000.0):  # 1.0 lands IN the le=1 bucket
+            reg.observe("lat", v, buckets=edges)
+        got_edges, counts, total, n = reg.get_histogram("lat")
+        assert got_edges == edges
+        assert counts == (2, 1, 0, 1)  # per-bucket, last = +Inf overflow
+        assert total == pytest.approx(1006.5)
+        assert n == 4
+        cum = reg.snapshot()["lat"]["series"][""]["buckets"]
+        assert cum == {1.0: 2, 10.0: 3, 100.0: 3, "+Inf": 4}
+
+    def test_default_buckets_are_fixed_half_decades(self):
+        bk = obs.DEFAULT_BUCKETS
+        assert bk[0] == pytest.approx(1e-6)
+        assert bk[-1] == pytest.approx(1e3)
+        assert len(bk) == 19
+        ratios = [bk[i + 1] / bk[i] for i in range(len(bk) - 1)]
+        # edges are decimal-rounded for clean exposition, so half-decade
+        # ratios hold to the rounding precision, not exactly
+        assert all(r == pytest.approx(10 ** 0.5, rel=1e-3) for r in ratios)
+
+    def test_threaded_increments_do_not_race(self):
+        reg = obs.MetricsRegistry()
+        threads = [
+            threading.Thread(
+                target=lambda: [reg.inc("hits", worker="w") for _ in range(500)]
+            )
+            for _ in range(8)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert reg.get("hits", worker="w") == 8 * 500
+
+    def test_render_prometheus_format(self):
+        reg = obs.MetricsRegistry()
+        reg.inc("solves_total", help="solves", status="CONVERGED", context="solve")
+        reg.observe("lat_seconds", 0.5, buckets=(1.0, 10.0))
+        reg.set_gauge("rows", 2048)
+        text = reg.render_prometheus()
+        assert "# TYPE solves_total counter" in text
+        assert "# HELP solves_total solves" in text
+        # labels render sorted alphabetically
+        assert 'solves_total{context="solve",status="CONVERGED"} 1' in text
+        assert "# TYPE lat_seconds histogram" in text
+        assert 'lat_seconds_bucket{le="1"} 1' in text
+        assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+        assert "lat_seconds_sum 0.5" in text
+        assert "lat_seconds_count 1" in text
+        assert "rows 2048" in text
+
+    def test_parse_prometheus_roundtrip(self):
+        reg = obs.MetricsRegistry()
+        reg.inc("q_total", 3.0, result='o"k\n', ctx="a")  # escaping survives
+        reg.observe("lat", 0.02)
+        fams = obs.parse_prometheus(reg.render_prometheus())
+        assert fams["q_total"]["type"] == "counter"
+        ((labels, value),) = fams["q_total"]["samples"]
+        assert value == 3.0 and labels["result"] == 'o"k\n'
+        assert fams["lat"]["type"] == "histogram"
+        parts = {lab["__part"] for lab, _ in fams["lat"]["samples"]}
+        assert parts == {"bucket", "sum", "count"}
+
+    def test_install_uninstall_and_scoped(self):
+        outer = obs.install()
+        try:
+            obs.inc("seen")
+            with obs.installed() as inner:
+                obs.inc("seen")
+                assert obs.active() is inner
+            assert obs.active() is outer  # previous registry restored
+            assert outer.sum("seen") == 1.0 and inner.sum("seen") == 1.0
+        finally:
+            obs.uninstall()
+        assert obs.active() is None
+        obs.inc("seen")  # and now the seams are no-ops
+        assert outer.sum("seen") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# null-sink discipline on the solve path
+# ---------------------------------------------------------------------------
+
+
+class TestNullSink:
+    def test_solve_bitwise_identical_with_and_without_sinks(self, system):
+        A, b = system
+        s = BBMMSettings(num_probes=4, max_cg_iters=60, cg_tol=1e-4)
+        x_bare = solve(clean_op(A), b, s)
+        with obs.installed() as reg, obs.trace() as col:
+            x_obs = solve(clean_op(A), b, s)
+        assert np.array_equal(np.asarray(x_bare), np.asarray(x_obs))
+        assert reg.sum("cg_solves_total") >= 1
+        assert col.spans("solve") and col.spans("mbcg")
+
+    def test_no_sink_records_nothing(self, system):
+        A, b = system
+        probe = obs.MetricsRegistry()
+        solve(clean_op(A), b, BBMMSettings(num_probes=4, max_cg_iters=40))
+        # un-installed registries never hear about it, and the module
+        # seams stayed on the None fast path throughout
+        assert probe.snapshot() == {}
+        assert obs.active() is None and obs.active_trace() is None
+
+    def test_jaxpr_unchanged_under_jit_with_sinks_installed(self, system):
+        A, b = system
+
+        def f(rhs):
+            return mbcg(lambda V: A @ V, rhs[:, None], max_iters=8).solves
+
+        jaxpr_off = str(jax.make_jaxpr(f)(b))
+        with obs.installed() as reg, obs.trace():
+            jaxpr_on = str(jax.make_jaxpr(f)(b))
+            # tracer guard: no scalar telemetry leaked out of the trace
+            assert reg.sum("cg_solves_total") == 0.0
+        assert jaxpr_on == jaxpr_off
+
+    def test_grad_path_untouched(self, system):
+        A, b = system
+
+        def loss(scale):
+            return jnp.sum(
+                mbcg(lambda V: scale * (A @ V), b[:, None], max_iters=6).solves
+            )
+
+        g_bare = jax.grad(loss)(jnp.float32(1.0))
+        with obs.installed(), obs.trace():
+            # grad's forward pass evaluates the jitted solve eagerly, so
+            # telemetry MAY record the primal solve — the invariant is
+            # that the gradient itself is untouched
+            g_obs = jax.grad(loss)(jnp.float32(1.0))
+        assert np.array_equal(np.asarray(g_bare), np.asarray(g_obs))
+
+
+# ---------------------------------------------------------------------------
+# rung durations (satellite) + ladder-heal trace + registry
+# ---------------------------------------------------------------------------
+
+
+class TestLadderHealTelemetry:
+    def test_rung_records_are_duration_stamped(self, system):
+        A, b = system
+        rep, x = healed_solve(A, b)
+        assert [r.rung for r in rep.rungs] == ["initial", "precision_f32"]
+        assert all(r.duration_s is not None and r.duration_s > 0 for r in rep.rungs)
+        assert rep.duration_s == pytest.approx(
+            sum(r.duration_s for r in rep.rungs)
+        )
+        desc = rep.describe()
+        assert "initial:" in desc and "precision_f32:CONVERGED(" in desc
+        assert "ms)" in desc  # durations surface in the human summary
+        assert bool(jnp.all(jnp.isfinite(x)))
+
+    def test_trace_json_and_span_nesting(self, system, tmp_path):
+        A, b = system
+        path = tmp_path / "heal.trace.json"
+        with obs.installed() as reg, obs.trace(str(path)) as col:
+            rep, _ = healed_solve(A, b)
+
+        # --- well-formed Chrome trace-event JSON (Perfetto schema) ---
+        doc = json.loads(path.read_text())
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        assert doc["traceEvents"] == col.to_dict()["traceEvents"]
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] in ("X", "i")
+            assert isinstance(ev["name"], str) and isinstance(ev["ts"], float)
+            assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+            if ev["ph"] == "X":
+                assert ev["dur"] >= 0.0
+
+        # --- the ladder walk is a nested flame: solve ⊃ rung:* ⊃ mbcg ---
+        (solve_span,) = col.spans("solve")
+        lo, hi = solve_span["ts"], solve_span["ts"] + solve_span["dur"]
+        for name in ("rung:initial", "rung:precision_f32"):
+            (rung_span,) = col.spans(name)
+            assert rung_span["tid"] == solve_span["tid"]
+            assert lo <= rung_span["ts"]
+            assert rung_span["ts"] + rung_span["dur"] <= hi
+        assert len(col.spans("mbcg")) >= 2  # one per rung attempt
+
+        # --- and the registry saw the same story ---
+        assert reg.get("ladder_rungs_total", rung="precision_f32",
+                       status="CONVERGED") == 1.0
+        assert reg.get("ladder_rungs_total", rung="initial",
+                       status=rep.rungs[0].status) == 1.0
+        assert reg.sum("solves_degraded_total") >= 1.0
+        assert reg.get("solves_total", status="CONVERGED",
+                       context=rep.context) >= 1.0
+        hist = reg.get_histogram("ladder_rung_seconds", rung="precision_f32")
+        assert hist is not None and hist[3] == 1  # count
+
+    def test_trace_saved_even_when_solve_raises(self, system, tmp_path):
+        A, b = system
+        op = AddedDiagOperator(
+            FaultInjectingOperator(
+                DenseOperator(A), schedule=FaultSchedule(0, total_outage=True)
+            ),
+            jnp.float32(0.1),
+        )
+        s = BBMMSettings(num_probes=4, max_cg_iters=10, cg_tol=1e-6,
+                         precond_rank=0, on_failure="raise")
+        path = tmp_path / "failed.trace.json"
+        with pytest.raises(Exception):
+            with obs.trace(str(path)):
+                solve(op, b, s)
+        doc = json.loads(path.read_text())  # the failed solve IS the trace
+        assert any(e["name"] == "solve" for e in doc["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# partitioned solve: one panel_launch span per accounting record (n=2e4)
+# ---------------------------------------------------------------------------
+
+
+class TestPartitionedTrace:
+    def test_panel_launch_spans_match_accounting(self, tmp_path):
+        n, d = 20_000, 4
+        X = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+        kern = RBFKernel(lengthscale=jnp.float32(0.7),
+                         outputscale=jnp.float32(1.3))
+        op = AddedDiagOperator(
+            PartitionedKernelOperator(kernel=kern, X=X, panel_rows=4096),
+            jnp.float32(1.0),
+        )
+        b = jax.random.normal(jax.random.PRNGKey(4), (n,))
+        s = BBMMSettings(num_probes=2, max_cg_iters=3, cg_tol=0.5,
+                         precond_rank=0, on_failure="warn")
+        path = tmp_path / "partitioned.trace.json"
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", SolveHealthWarning)
+            with panel_accounting() as launches, \
+                    obs.installed() as reg, obs.trace(str(path)) as col:
+                x = solve(op, b, s)
+        assert bool(jnp.all(jnp.isfinite(x)))
+        assert launches, "partitioned solve must stream row-panels"
+
+        spans = col.spans("panel_launch")
+        assert len(spans) == len(launches)
+        for span, launch in zip(spans, launches):
+            assert span["args"]["num_panels"] == launch.num_panels
+            assert span["args"]["n"] == n
+        # registry rode the same hook: one launch per panel per matmul
+        assert reg.sum("panel_matmuls_traced_total") == len(launches)
+        assert reg.sum("panel_launches_traced_total") == sum(
+            l.num_panels for l in launches
+        )
+        json.loads(path.read_text())  # Perfetto-loadable
+
+
+# ---------------------------------------------------------------------------
+# circuit-breaker ring buffer (satellite)
+# ---------------------------------------------------------------------------
+
+
+class TestBreakerTransitions:
+    def test_ring_buffer_caps_history_counter_does_not(self):
+        t = [0.0]
+        br = CircuitBreaker(threshold=1, reset_after_s=1.0,
+                            clock=lambda: t[0], transition_history=4)
+        with obs.installed() as reg:
+            for _ in range(5):  # closed->open->half_open->closed, 5 times
+                br.record_failure()
+                t[0] += 1.5
+                assert br.allow()
+                br.record_success()
+        assert br.transitions_total == 15
+        assert len(br.transitions) == 4  # ring buffer keeps only the tail
+        assert [(a, c) for a, c, _ in br.transitions] == [
+            ("half_open", "closed"), ("closed", "open"),
+            ("open", "half_open"), ("half_open", "closed"),
+        ]
+        assert reg.sum("breaker_transitions_total") == 15.0
+        assert reg.get("breaker_transitions_total",
+                       **{"from": "closed", "to": "open"}) == 5.0
+
+
+# ---------------------------------------------------------------------------
+# exposition: MetricsServer routes + the chaos-drill /metrics round-trip
+# ---------------------------------------------------------------------------
+
+
+def _get(url, timeout=10.0):
+    with urllib.request.urlopen(url, timeout=timeout) as resp:
+        return resp.status, resp.headers.get("Content-Type", ""), resp.read()
+
+
+class TestMetricsServer:
+    def test_routes(self, system):
+        reg = obs.MetricsRegistry()
+        reg.inc("pings_total", route="metrics")
+        with obs.MetricsServer(port=0, registry=reg,
+                               health_fn=lambda: {"status": "ok", "n": 3}) as srv:
+            code, ctype, body = _get(srv.url + "/metrics")
+            assert code == 200 and "0.0.4" in ctype
+            assert 'pings_total{route="metrics"} 1' in body.decode()
+
+            code, ctype, body = _get(srv.url + "/health")
+            assert code == 200 and json.loads(body) == {"status": "ok", "n": 3}
+
+            with pytest.raises(urllib.error.HTTPError) as err:
+                _get(srv.url + "/trace")
+            assert err.value.code == 404  # no trace() active
+            with obs.trace() as col:
+                col.add_instant("mark")
+                code, _, body = _get(srv.url + "/trace")
+                assert code == 200
+                assert json.loads(body)["traceEvents"][0]["name"] == "mark"
+
+            with pytest.raises(urllib.error.HTTPError) as err:
+                _get(srv.url + "/nope")
+            assert err.value.code == 404
+
+    def test_late_bound_registry(self):
+        # gp_serve starts the server before any registry exists at request
+        # time; /metrics must follow whatever is installed per scrape
+        with obs.MetricsServer(port=0) as srv:
+            code, _, body = _get(srv.url + "/metrics")
+            assert code == 200 and body == b""
+            with obs.installed():
+                obs.inc("late_total")
+                _, _, body = _get(srv.url + "/metrics")
+                assert "late_total 1" in body.decode()
+
+
+class TestChaosMetricsRoundTrip:
+    def test_chaos_drill_scrapes_escalations_and_degraded(self):
+        holder = {}
+        with obs.installed() as reg:
+            with obs.MetricsServer(
+                port=0,
+                health_fn=lambda: _health_payload(holder.get("session")),
+            ) as srv:
+                drill = run_serve_chaos(
+                    n=48, batch=8, requests_per_phase=3, threads=2,
+                    max_cg_iters=25, breaker_reset_s=0.2, verbose=False,
+                    session_hook=lambda s: holder.__setitem__("session", s),
+                )
+                code, _, body = _get(srv.url + "/metrics", timeout=30.0)
+                _, _, health_body = _get(srv.url + "/health", timeout=30.0)
+        assert drill["chaos_ok"], drill
+        assert code == 200
+        fams = obs.parse_prometheus(body.decode())
+
+        # ≥1 precision escalation visible to the scraper
+        esc = [
+            v for lab, v in fams["ladder_rungs_total"]["samples"]
+            if lab.get("rung") == "precision_f32"
+        ]
+        assert esc and sum(esc) >= 1
+
+        # ≥1 degraded serve, and latency histograms with real mass
+        assert sum(v for _, v in fams["serving_degraded_total"]["samples"]) >= 1
+        q = fams["serving_query_seconds"]
+        counts = [v for lab, v in q["samples"] if lab["__part"] == "count"]
+        assert q["type"] == "histogram" and sum(counts) >= 1
+        assert sum(
+            v for lab, v in fams["serving_queries_total"]["samples"]
+        ) >= sum(counts)
+
+        # /health serves the session's health_stats() registry view
+        stats = json.loads(health_body)
+        assert stats["status"] == "serving"
+        assert stats["breaker_transitions_total"] >= 2  # opened and recovered
+        assert any(k.startswith("serving_") for k in stats["registry"])
+
+        # the registry agrees with the drill's own bookkeeping
+        assert reg.sum("serving_degraded_total") >= drill["degraded_queries"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# gp_top rendering
+# ---------------------------------------------------------------------------
+
+
+class TestGpTop:
+    def _families(self):
+        reg = obs.MetricsRegistry()
+        reg.inc("solves_total", 4, status="CONVERGED", context="solve")
+        reg.set_gauge("panel_rows", 2048, backend="xla")
+        for v in (0.001, 0.002, 0.004, 0.3):
+            reg.observe("serving_query_seconds", v, result="ok")
+        return obs.parse_prometheus(reg.render_prometheus())
+
+    def test_render_sections_and_quantiles(self):
+        out = gp_top.render(self._families())
+        assert "== counters ==" in out and "== gauges ==" in out
+        assert "histograms (count / mean / ~p50 / ~p99)" in out
+        assert "solves_total" in out and "context=solve,status=CONVERGED" in out
+        row = next(l for l in out.splitlines() if "serving_query_seconds" in l)
+        assert " 4 " in row  # count
+        # ~p50 is the half-decade edge holding the 2nd observation
+        assert gp_top._quantile_edge(
+            [(0.001, 1), (0.00316, 2), (0.01, 3), (0.316, 3), (1.0, 4)], 0.5
+        ) == 0.00316
+
+    def test_render_empty(self):
+        assert "no metrics" in gp_top.render({})
+
+    def test_main_renders_file(self, tmp_path, capsys):
+        reg = obs.MetricsRegistry()
+        reg.inc("solves_total", 2, status="CONVERGED", context="solve")
+        p = tmp_path / "m.txt"
+        p.write_text(reg.render_prometheus())
+        assert gp_top.main(["--file", str(p)]) == 0
+        out = capsys.readouterr().out
+        assert "solves_total" in out and "== counters ==" in out
